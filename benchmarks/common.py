@@ -1,0 +1,49 @@
+"""Shared helpers for the paper-table benchmarks.
+
+The container is CPU-only and offline, so benchmarks run on *scaled*
+synthetic datasets matched to Table 7's (objects, attributes, density) —
+scale factors are printed with every row and recorded in EXPERIMENTS.md.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+
+from repro.core import ClosureEngine, FormalContext
+from repro.data import fca_datasets
+
+# object-count scale per dataset (CPU budget); attrs & density untouched.
+# Calibrated so each dataset yields O(10²–10³) concepts — the full 5-algorithm
+# suite (incl. 1-concept-per-round MRGanter) stays within a CPU-minutes budget.
+DEFAULT_SCALES = {
+    "mushroom": 0.008,      # ~65 objects (dense → concept-rich)
+    "anon-web": 0.008,      # ~262 objects (sparse)
+    "census-income": 0.002,  # ~208 objects
+}
+
+
+def load_scaled(name: str, seed: int = 0):
+    ctx, spec = fca_datasets.load(name, scale=DEFAULT_SCALES[name], seed=seed)
+    return ctx, spec
+
+
+def timed(fn, *args, **kw):
+    t0 = time.perf_counter()
+    out = fn(*args, **kw)
+    return out, time.perf_counter() - t0
+
+
+def row(name: str, us_per_call: float, derived) -> str:
+    return f"{name},{us_per_call:.1f},{derived}"
+
+
+def make_engine(ctx: FormalContext, n_parts: int, reduce_impl: str = "rsag",
+                use_kernel: bool = False) -> ClosureEngine:
+    # use_kernel=False: Pallas interpret mode is a correctness tool (it
+    # executes the kernel body per grid cell on CPU) — wall-time benches
+    # use the fused-jnp path; kernel_bench.py covers the kernel itself.
+    return ClosureEngine(
+        ctx, n_parts=n_parts, reduce_impl=reduce_impl,
+        use_kernel=use_kernel, block_n=64,
+    )

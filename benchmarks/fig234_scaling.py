@@ -1,0 +1,43 @@
+"""Figs 2–4 — scalability: per-round time & modeled comm vs node count.
+
+Sweeps the partition count (the paper's x-axis) for MRGanter+ and MRCbo and
+reports wall time plus the modeled per-round collective traffic for the
+three reduce schedules (allgather — paper-faithful shuffle topology; rsag —
+bandwidth-optimal ring, beyond-paper; pmin — unpacked XLA all-reduce).
+"""
+
+from __future__ import annotations
+
+from benchmarks.common import load_scaled, make_engine, row, timed
+from repro.core import mrcbo, mrganter_plus
+from repro.dist.collectives import modeled_comm_bytes
+
+
+def run(parts=(1, 2, 4, 8), datasets=("mushroom", "census-income")) -> list[str]:
+    out = []
+    for name in datasets:
+        ctx, _ = load_scaled(name)
+        for k in parts:
+            eng = make_engine(ctx, k)
+            res, t = timed(mrganter_plus, ctx, eng, dedupe_candidates=True)
+            out.append(row(
+                f"fig234/{name}/mrganter+/parts={k}",
+                1e6 * t / max(1, res.n_iterations),
+                f"total_s={t:.3f}|iters={res.n_iterations}"
+                f"|comm={res.modeled_comm_bytes}",
+            ))
+            eng = make_engine(ctx, k)
+            res2, t2 = timed(mrcbo, ctx, eng)
+            out.append(row(
+                f"fig234/{name}/mrcbo/parts={k}",
+                1e6 * t2 / max(1, res2.n_iterations),
+                f"total_s={t2:.3f}|iters={res2.n_iterations}"
+                f"|comm={res2.modeled_comm_bytes}",
+            ))
+        # reduce-schedule comparison at fixed round shape (B=1024 closures)
+        for impl in ("allgather", "rsag", "pmin"):
+            out.append(row(
+                f"fig234/{name}/comm_model/{impl}/parts=8", 0.0,
+                f"bytes_per_round={modeled_comm_bytes(impl, 8, 1024, ctx.W)}",
+            ))
+    return out

@@ -1,0 +1,50 @@
+"""Pallas closure-kernel micro-bench (interpret mode on CPU) vs oracles.
+
+Wall times here are *not* TPU projections (interpret mode runs the kernel
+body in Python/XLA-CPU); the point is the work-per-call census used in the
+§Roofline discussion plus regression tracking of the jnp reference path.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from benchmarks.common import row, timed
+from repro.core import FormalContext
+from repro.core.closure import batched_closure_np
+from repro.kernels import ops
+
+
+def run(shapes=((2048, 128, 256), (8192, 512, 64))) -> list[str]:
+    out = []
+    for N, m, B in shapes:
+        ctx = FormalContext.synthetic(N, m, 0.15, seed=1)
+        cands = FormalContext.synthetic(B, m, 0.05, seed=2).rows
+        rows_p, _ = ctx.padded_rows(256)
+        rows_j, cands_j = jnp.asarray(rows_p), jnp.asarray(cands)
+
+        # warm + time the jnp reference path (jit, no pallas)
+        f_ref = lambda: ops.batched_closure(
+            rows_j, cands_j, m, n_valid_rows=N, use_kernel=False
+        )[0].block_until_ready()
+        f_ref()
+        _, t_ref = timed(f_ref)
+
+        # numpy oracle
+        _, t_np = timed(batched_closure_np, ctx.rows, cands, ctx.attr_mask())
+
+        # pallas interpret (correctness-path cost only)
+        f_k = lambda: ops.batched_closure(
+            rows_j, cands_j, m, n_valid_rows=N, use_kernel=True
+        )[0].block_until_ready()
+        f_k()
+        _, t_k = timed(f_k)
+
+        work = B * N * ops.bucket_size(1)  # word-ops order of magnitude
+        out.append(row(
+            f"kernel/closure/N={N},m={m},B={B}/jnp_ref", 1e6 * t_ref,
+            f"numpy_us={1e6 * t_np:.0f}|pallas_interpret_us={1e6 * t_k:.0f}"
+            f"|BNW={B * N * (m // 32 + 1)}",
+        ))
+    return out

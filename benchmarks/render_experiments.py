@@ -1,0 +1,114 @@
+"""Regenerate the generated tables in EXPERIMENTS.md from dry-run records.
+
+    PYTHONPATH=src python benchmarks/render_experiments.py
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import re
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from benchmarks.roofline import load_records, roofline_terms  # noqa: E402
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+
+def _fmt_bytes(b):
+    return f"{b / 1e9:.2f} GB"
+
+
+def dryrun_table() -> str:
+    rows = [
+        "| arch | shape | 16×16 | 2×16×16 | state GB/dev | cache GB/dev | temp GB/dev |",
+        "|---|---|---|---|---|---|---|",
+    ]
+    single = {(r["arch"], r["shape"]): r for r in load_records(f"{ROOT}/dryrun_single.jsonl")}
+    multi = {(r["arch"], r["shape"]): r for r in load_records(f"{ROOT}/dryrun_multi.jsonl")}
+    for key, r in single.items():
+        m = multi.get(key, {})
+        def status(x):
+            s = x.get("status", "—")
+            return {"ok": "✅", "skipped": "skip", "error": "❌"}.get(s, s)
+        state = r.get("state_bytes_per_device", 0) / 1e9
+        cache = r.get("cache_bytes_per_device", 0) / 1e9
+        temp = r.get("memory_analysis", {}).get("temp_bytes", 0) / 1e9
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {status(r)} | {status(m)} "
+            f"| {state:.2f} | {cache:.2f} | {temp:.2f} |"
+        )
+    n_ok = sum(r["status"] == "ok" for r in single.values())
+    n_skip = sum(r["status"] == "skipped" for r in single.values())
+    n_err = sum(r["status"] == "error" for r in single.values())
+    rows.append("")
+    rows.append(
+        f"Single-pod: **{n_ok} ok / {n_skip} skipped / {n_err} errors**; "
+        f"multi-pod: **{sum(r['status'] == 'ok' for r in multi.values())} ok / "
+        f"{sum(r['status'] == 'skipped' for r in multi.values())} skipped / "
+        f"{sum(r['status'] == 'error' for r in multi.values())} errors**."
+    )
+    return "\n".join(rows)
+
+
+def roofline_table() -> str:
+    out = []
+    base = {(r["arch"], r["shape"]): r for r in load_records(f"{ROOT}/dryrun_baseline.jsonl")}
+    for label, path in (
+        ("optimized, 16×16 (primary)", "dryrun_single.jsonl"),
+        ("optimized, 2×16×16", "dryrun_multi.jsonl"),
+    ):
+        recs = load_records(os.path.join(ROOT, path))
+        out.append(f"\n**{label}**\n")
+        out.append(
+            "| arch | shape | compute_s | memory_s | collective_s | dominant "
+            "| useful/HLO | roofline_frac | vs baseline bound |"
+        )
+        out.append("|---|---|---|---|---|---|---|---|---|")
+        for rec in recs:
+            r = roofline_terms(rec)
+            if r.get("status") == "skipped":
+                out.append(f"| {r['arch']} | {r['shape']} | — | — | — | skip | — | — | — |")
+                continue
+            if r.get("status") != "ok":
+                out.append(f"| {r['arch']} | {r['shape']} | — | — | — | ERROR | — | — | — |")
+                continue
+            b = base.get((r["arch"], r["shape"]))
+            speedup = "—"
+            if b is not None and b.get("status") == "ok" and "16×16 (primary)" in label:
+                bb = roofline_terms(b)
+                bound_b = max(bb["compute_s"], bb["memory_s"], bb["collective_s"])
+                bound_o = max(r["compute_s"], r["memory_s"], r["collective_s"])
+                speedup = f"{bound_b / bound_o:.1f}×" if bound_o else "—"
+            out.append(
+                f"| {r['arch']} | {r['shape']} | {r['compute_s']:.4f} "
+                f"| {r['memory_s']:.4f} | {r['collective_s']:.4f} "
+                f"| **{r['dominant']}** | {r['useful_flops_ratio']:.2f} "
+                f"| {r['roofline_fraction']:.4f} | {speedup} |"
+            )
+    return "\n".join(out)
+
+
+def inject(md: str, marker: str, content: str) -> str:
+    block = f"<!-- {marker} -->\n{content}\n<!-- /{marker} -->"
+    if f"<!-- /{marker} -->" in md:
+        return re.sub(
+            rf"<!-- {marker} -->.*?<!-- /{marker} -->", block, md, flags=re.S
+        )
+    return md.replace(f"<!-- {marker} -->", block)
+
+
+def main():
+    path = os.path.join(ROOT, "EXPERIMENTS.md")
+    md = open(path).read()
+    md = inject(md, "DRYRUN_TABLE", dryrun_table())
+    md = inject(md, "ROOFLINE_TABLE", roofline_table())
+    open(path, "w").write(md)
+    print("EXPERIMENTS.md tables regenerated")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,110 @@
+"""§Roofline — derive the three roofline terms from dry-run records.
+
+    compute term    = flops_per_device / PEAK_FLOPS
+    memory term     = hbm_bytes_per_device / HBM_BW
+    collective term = collective_bytes_per_device / ICI_BW
+
+Hardware model: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+FLOPs/bytes come from the while-aware HLO analyzer (repro.launch.hlo_analysis);
+``model_flops`` is the analytic 6·N·D (train) / 2·N·D (inference) with
+N = active params.  See EXPERIMENTS.md for conventions and caveats.
+"""
+
+from __future__ import annotations
+
+import json
+
+PEAK_FLOPS = 197e12  # bf16 / chip
+HBM_BW = 819e9  # bytes/s / chip
+ICI_BW = 50e9  # bytes/s / link
+
+TERMS = ("compute", "memory", "collective")
+
+
+def roofline_terms(rec: dict) -> dict:
+    if rec.get("status") != "ok":
+        return dict(rec)
+    compute_s = rec["flops_per_device"] / PEAK_FLOPS
+    memory_s = rec["hbm_bytes_per_device"] / HBM_BW
+    collective_s = rec["collective_bytes_per_device"] / ICI_BW
+    dominant = max(
+        zip(TERMS, (compute_s, memory_s, collective_s)), key=lambda kv: kv[1]
+    )[0]
+    model_flops_dev = rec["model_flops_global"] / max(1, rec["chips"])
+    useful_ratio = (
+        model_flops_dev / rec["flops_per_device"] if rec["flops_per_device"] else 0.0
+    )
+    bound_s = max(compute_s, memory_s, collective_s)
+    # fraction of roofline: useful work time over the binding resource time
+    roofline_fraction = (
+        (model_flops_dev / PEAK_FLOPS) / bound_s if bound_s > 0 else 0.0
+    )
+    return {
+        **rec,
+        "compute_s": compute_s,
+        "memory_s": memory_s,
+        "collective_s": collective_s,
+        "dominant": dominant,
+        "useful_flops_ratio": useful_ratio,
+        "roofline_fraction": roofline_fraction,
+    }
+
+
+def load_records(path: str) -> list[dict]:
+    out = []
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if line:
+                out.append(json.loads(line))
+    return out
+
+
+def render_table(records: list[dict]) -> str:
+    rows = [
+        "| arch | shape | mesh | compute_s | memory_s | collective_s | "
+        "dominant | useful/HLO | roofline_frac |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for rec in records:
+        r = roofline_terms(rec)
+        if r.get("status") == "skipped":
+            rows.append(
+                f"| {r['arch']} | {r['shape']} | {r['mesh']} | — | — | — | "
+                f"skipped | — | — |"
+            )
+            continue
+        if r.get("status") != "ok":
+            rows.append(
+                f"| {r['arch']} | {r['shape']} | {r['mesh']} | — | — | — | "
+                f"ERROR | — | — |"
+            )
+            continue
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {r['compute_s']:.4f} | {r['memory_s']:.4f} "
+            f"| {r['collective_s']:.4f} | **{r['dominant']}** "
+            f"| {r['useful_flops_ratio']:.2f} | {r['roofline_fraction']:.3f} |"
+        )
+    return "\n".join(rows)
+
+
+def run(path: str = "dryrun_single.jsonl") -> list[str]:
+    try:
+        records = load_records(path)
+    except FileNotFoundError:
+        return [f"roofline/{path},0.0,missing (run python -m repro.launch.dryrun --all)"]
+    out = []
+    for rec in records:
+        r = roofline_terms(rec)
+        if r.get("status") != "ok":
+            continue
+        out.append(
+            f"roofline/{r['arch']}/{r['shape']}/{r['mesh']},"
+            f"{1e6 * max(r['compute_s'], r['memory_s'], r['collective_s']):.1f},"
+            f"dominant={r['dominant']}|compute_s={r['compute_s']:.4f}"
+            f"|memory_s={r['memory_s']:.4f}|collective_s={r['collective_s']:.4f}"
+            f"|useful_ratio={r['useful_flops_ratio']:.2f}"
+            f"|roofline_frac={r['roofline_fraction']:.3f}"
+        )
+    return out

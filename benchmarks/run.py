@@ -1,0 +1,50 @@
+# One function per paper table/figure. Prints ``name,us_per_call,derived`` CSV.
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main(argv=None) -> None:
+    p = argparse.ArgumentParser()
+    p.add_argument(
+        "--only", default=None,
+        help="comma-separated subset: table7,table8,table9,fig234,kernel,roofline",
+    )
+    p.add_argument("--roofline-path", default="dryrun_single.jsonl")
+    args = p.parse_args(argv)
+    only = set(args.only.split(",")) if args.only else None
+
+    from benchmarks import (
+        fig234_scaling,
+        kernel_bench,
+        roofline,
+        table7_datasets,
+        table8_runtime,
+        table9_iterations,
+    )
+
+    suites = {
+        "table7": table7_datasets.run,
+        "table8": table8_runtime.run,
+        "table9": table9_iterations.run,
+        "fig234": fig234_scaling.run,
+        "kernel": kernel_bench.run,
+        "roofline": lambda: roofline.run(args.roofline_path),
+    }
+    print("name,us_per_call,derived")
+    t0 = time.perf_counter()
+    for name, fn in suites.items():
+        if only is not None and name not in only:
+            continue
+        t1 = time.perf_counter()
+        for line in fn():
+            print(line, flush=True)
+        print(f"# {name} done in {time.perf_counter() - t1:.1f}s", file=sys.stderr)
+    print(f"# all benchmarks done in {time.perf_counter() - t0:.1f}s", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

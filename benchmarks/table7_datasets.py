@@ -1,0 +1,19 @@
+"""Table 7 — dataset characteristics (objects, attributes, density)."""
+
+from __future__ import annotations
+
+from benchmarks.common import DEFAULT_SCALES, load_scaled, row
+from repro.data.fca_datasets import PAPER_DATASETS
+
+
+def run() -> list[str]:
+    out = []
+    for name, (n_obj, n_attr, dens) in PAPER_DATASETS.items():
+        ctx, spec = load_scaled(name)
+        out.append(row(
+            f"table7/{name}",
+            0.0,
+            f"paper=({n_obj}x{n_attr}@{dens:.4f})|scaled=({spec.n_objects}x"
+            f"{spec.n_attrs}@{spec.density:.4f})|scale={DEFAULT_SCALES[name]}",
+        ))
+    return out

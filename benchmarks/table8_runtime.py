@@ -1,0 +1,60 @@
+"""Table 8 — execution time per algorithm per dataset.
+
+Centralized NextClosure / CloseByOne (numpy bitset) vs distributed
+MRGanter / MRCbo / MRGanter+ (ClosureEngine, simulated partitions on one
+CPU device — the arithmetic, batching, and reduce schedule are identical
+to the mesh path, which is exercised separately by tests/dry-run).
+
+MRGanter enumerates one concept per MapReduce round (the paper's result —
+it's the slow one), so its rounds are capped and the total extrapolated.
+"""
+
+from __future__ import annotations
+
+from benchmarks.common import load_scaled, make_engine, row, timed
+from repro.core import (
+    all_closures_batched,
+    close_by_one,
+    mrcbo,
+    mrganter,
+    mrganter_plus,
+)
+
+MRGANTER_CAP = 500  # rounds; total time extrapolated to full concept count
+
+
+def run(n_parts: int = 4, datasets=("mushroom", "anon-web", "census-income")) -> list[str]:
+    out = []
+    for name in datasets:
+        ctx, spec = load_scaled(name)
+
+        intents, t_nc = timed(all_closures_batched, ctx)
+        n_concepts = len(intents)
+        out.append(row(f"table8/{name}/nextclosure", 1e6 * t_nc / max(1, n_concepts),
+                       f"total_s={t_nc:.3f}|concepts={n_concepts}"))
+
+        res_cbo, t_cbo = timed(close_by_one, ctx)
+        out.append(row(f"table8/{name}/closebyone", 1e6 * t_cbo / max(1, n_concepts),
+                       f"total_s={t_cbo:.3f}|concepts={len(res_cbo.intents)}"))
+
+        eng = make_engine(ctx, n_parts)
+        res_mg, t_mg = timed(mrganter, ctx, eng, max_iterations=MRGANTER_CAP)
+        scale = n_concepts / max(1, res_mg.n_iterations)
+        out.append(row(
+            f"table8/{name}/mrganter", 1e6 * t_mg / max(1, res_mg.n_iterations),
+            f"capped_s={t_mg:.3f}|rounds={res_mg.n_iterations}"
+            f"|extrapolated_s={t_mg * scale:.1f}",
+        ))
+
+        eng = make_engine(ctx, n_parts)
+        res_cb, t_cb = timed(mrcbo, ctx, eng)
+        out.append(row(f"table8/{name}/mrcbo", 1e6 * t_cb / max(1, n_concepts),
+                       f"total_s={t_cb:.3f}|iters={res_cb.n_iterations}"))
+
+        eng = make_engine(ctx, n_parts)
+        res_mgp, t_mgp = timed(mrganter_plus, ctx, eng, dedupe_candidates=True)
+        assert len(res_mgp.intents) == n_concepts, (len(res_mgp.intents), n_concepts)
+        out.append(row(f"table8/{name}/mrganter+", 1e6 * t_mgp / max(1, n_concepts),
+                       f"total_s={t_mgp:.3f}|iters={res_mgp.n_iterations}"
+                       f"|comm_bytes={res_mgp.modeled_comm_bytes}"))
+    return out

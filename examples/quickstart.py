@@ -1,0 +1,61 @@
+"""Quickstart: the paper's worked example end-to-end in ~40 lines.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+Mines the 21 formal concepts of Table 1 with the centralized baselines
+(NextClosure, CloseByOne) and the distributed MR* algorithms (MRGanter,
+MRGanter+, MRCbo), checks they agree, and prints the concept lattice.
+"""
+
+import numpy as np
+
+from repro.core import (
+    ClosureEngine,
+    all_closures,
+    bitset,
+    build_lattice,
+    close_by_one,
+    mrcbo,
+    mrganter,
+    mrganter_plus,
+    paper_context,
+)
+
+NAMES = "abcdefg"
+
+
+def fmt(row, n=7):
+    return "{" + ",".join(NAMES[a] for a in range(n) if bitset.unpack_bits(row, n)[a]) + "}"
+
+
+def main():
+    ctx = paper_context()
+    print(f"context: {ctx.n_objects} objects × {ctx.n_attrs} attributes, "
+          f"density {ctx.density:.2f}")
+
+    ref = all_closures(ctx)
+    print(f"\nNextClosure: {len(ref)} concepts (lectic order)")
+
+    cbo = close_by_one(ctx)
+    print(f"CloseByOne:  {len(cbo.intents)} concepts in {cbo.n_iterations} levels")
+
+    for name, algo in [("MRGanter", mrganter), ("MRGanter+", mrganter_plus),
+                       ("MRCbo", mrcbo)]:
+        eng = ClosureEngine(ctx, n_parts=2, block_n=64)  # paper's S_1/S_2 split
+        res = algo(ctx, eng)
+        same = {bitset.key_bytes(y) for y in res.intents} == {
+            bitset.key_bytes(y) for y in ref
+        }
+        print(f"{name:10s}: {res.n_concepts} concepts in {res.n_iterations:2d} "
+              f"MapReduce rounds — matches NextClosure: {same}")
+
+    lat = build_lattice(ctx, ref)
+    print("\nconcept lattice (intent ← covered intents):")
+    for i in range(lat.n_concepts):
+        kids = ", ".join(fmt(lat.intents[j]) for j in lat.children[i])
+        ext = "".join(str(o + 1) for o in np.nonzero(lat.extents[i])[0])
+        print(f"  ⟨{{{ext}}}, {fmt(lat.intents[i])}⟩  ←  [{kids}]")
+
+
+if __name__ == "__main__":
+    main()

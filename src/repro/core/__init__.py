@@ -1,0 +1,31 @@
+"""Core: the paper's contribution — centralized and distributed FCA."""
+
+from repro.core.context import FormalContext, paper_context
+from repro.core.engine import ClosureEngine
+from repro.core.mr import MRResult, mrcbo, mrganter, mrganter_plus
+from repro.core.nextclosure import all_closures, all_closures_batched, first_closure, next_closure
+from repro.core.closebyone import CbOResult, close_by_one
+from repro.core.hashindex import TwoLevelHash
+from repro.core.incremental import add_object, add_objects
+from repro.core.lattice import ConceptLattice, build_lattice
+
+__all__ = [
+    "FormalContext",
+    "paper_context",
+    "ClosureEngine",
+    "MRResult",
+    "mrganter",
+    "mrganter_plus",
+    "mrcbo",
+    "all_closures",
+    "all_closures_batched",
+    "first_closure",
+    "next_closure",
+    "CbOResult",
+    "close_by_one",
+    "TwoLevelHash",
+    "ConceptLattice",
+    "build_lattice",
+    "add_object",
+    "add_objects",
+]

@@ -1,0 +1,141 @@
+"""Derivation and closure operators over packed bitset contexts.
+
+Two interchangeable backends:
+  * numpy  — host-side, used by the centralized baselines (NextClosure,
+             CloseByOne) and as the ultimate oracle in tests;
+  * jnp    — device-side, jit-able, used by the distributed MR* engines and
+             mirrored by the Pallas kernel (``repro.kernels``).
+
+All functions share the padding discipline documented in
+``repro.core.context.FormalContext.padded_rows``: padded object rows are
+all-ones (AND-identity; they match every candidate, so supports are corrected
+by the pad count), and results are masked with ``attr_mask`` so padded
+attribute bits never leak.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import bitset
+
+# ---------------------------------------------------------------------------
+# numpy backend (host / oracle)
+# ---------------------------------------------------------------------------
+
+
+def extent_np(rows: np.ndarray, cand: np.ndarray) -> np.ndarray:
+    """``Y' `` — bool mask over objects whose row contains ``cand``. [N]"""
+    return np.all((rows & cand) == cand, axis=-1)
+
+
+def closure_np(
+    rows: np.ndarray, cand: np.ndarray, attr_mask: np.ndarray
+) -> tuple[np.ndarray, int]:
+    """``Y''`` and ``|Y'|`` for a single packed candidate ``[W]``."""
+    match = extent_np(rows, cand)
+    sel = rows[match]
+    if sel.shape[0] == 0:
+        return attr_mask.copy(), 0
+    return np.bitwise_and.reduce(sel, axis=0) & attr_mask, int(match.sum())
+
+
+def batched_closure_np(
+    rows: np.ndarray, cands: np.ndarray, attr_mask: np.ndarray
+) -> tuple[np.ndarray, np.ndarray]:
+    """Batched ``Y''`` / supports.  rows [N,W], cands [B,W] → ([B,W], [B]).
+
+    Memory O(B·N·W); chunk over B for very large batches.
+    """
+    out_c = np.empty_like(cands)
+    out_s = np.empty(cands.shape[0], dtype=np.int64)
+    # Chunk to bound the [b, N, W] intermediate at ~64 MB.
+    nw = max(1, rows.shape[0] * rows.shape[1])
+    chunk = max(1, int(16e6 // nw))
+    full = np.uint32(0xFFFFFFFF)
+    for lo in range(0, cands.shape[0], chunk):
+        c = cands[lo : lo + chunk]
+        match = np.all((rows[None, :, :] & c[:, None, :]) == c[:, None, :], axis=-1)
+        sel = np.where(match[:, :, None], rows[None, :, :], full)
+        out_c[lo : lo + chunk] = np.bitwise_and.reduce(sel, axis=1) & attr_mask
+        out_s[lo : lo + chunk] = match.sum(axis=1)
+    return out_c, out_s
+
+
+def intent_of_extent_np(
+    rows: np.ndarray, extent: np.ndarray, attr_mask: np.ndarray
+) -> np.ndarray:
+    """``X'`` — intent of a bool object mask ``[N]``."""
+    sel = rows[extent]
+    if sel.shape[0] == 0:
+        return attr_mask.copy()
+    return np.bitwise_and.reduce(sel, axis=0) & attr_mask
+
+
+# ---------------------------------------------------------------------------
+# jnp backend (device)
+# ---------------------------------------------------------------------------
+
+
+def extent_jnp(rows: jax.Array, cand: jax.Array) -> jax.Array:
+    return jnp.all((rows & cand) == cand, axis=-1)
+
+
+def batched_closure_jnp(
+    rows: jax.Array, cands: jax.Array, attr_mask: jax.Array,
+    fused_reduce: bool = True,
+) -> tuple[jax.Array, jax.Array]:
+    """Pure-jnp batched closure — the reference the Pallas kernel must match.
+
+    rows [N, W] uint32 (padded rows all-ones), cands [B, W] uint32.
+    Returns (closures [B, W] uint32, raw supports [B] int32 — *including*
+    all-ones padding rows; callers subtract the pad count).
+
+    ``fused_reduce=True`` (§Perf, beyond-paper): express the AND-reduction
+    as ``lax.reduce`` with a bitwise-AND monoid, so XLA input-fuses the
+    select and the [B, N, W] intermediate never reaches HBM.  ``False`` is
+    the naive materialize-then-tree-reduce baseline (EXPERIMENTS.md §Perf).
+    """
+    rows = rows.astype(jnp.uint32)
+    cands = cands.astype(jnp.uint32)
+    match = jnp.all(
+        (rows[None, :, :] & cands[:, None, :]) == cands[:, None, :], axis=-1
+    )  # [B, N]
+    full = jnp.uint32(0xFFFFFFFF)
+    sel = jnp.where(match[:, :, None], rows[None, :, :], full)  # [B, N, W]
+    if fused_reduce:
+        closures = jax.lax.reduce(
+            sel, full, lambda a, b: jax.lax.bitwise_and(a, b), dimensions=(1,)
+        ) & attr_mask
+    else:
+        # AND-reduce over objects via a log2 tree of full-width vector ANDs.
+        closures = _and_reduce(sel, axis=1) & attr_mask
+    supports = match.sum(axis=-1, dtype=jnp.int32)
+    return closures, supports
+
+
+def _and_reduce(x: jax.Array, axis: int) -> jax.Array:
+    """Bitwise-AND reduction along ``axis`` (log-tree; works for any length)."""
+    x = jnp.moveaxis(x, axis, 0)
+    n = x.shape[0]
+    while n > 1:
+        half = n // 2
+        head = x[: 2 * half]
+        x = jnp.concatenate(
+            [head[0::2] & head[1::2], x[2 * half : n]], axis=0
+        )
+        n = x.shape[0]
+    return x[0]
+
+
+def closure_properties_hold(
+    rows: np.ndarray, y: np.ndarray, attr_mask: np.ndarray
+) -> bool:
+    """Check extensive/idempotent for one candidate (test helper)."""
+    c1, _ = closure_np(rows, y & attr_mask, attr_mask)
+    c2, _ = closure_np(rows, c1, attr_mask)
+    extensive = bool(np.all((y & attr_mask) & ~c1 == 0))
+    idempotent = bool(np.array_equal(c1, c2))
+    return extensive and idempotent

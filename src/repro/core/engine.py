@@ -1,0 +1,184 @@
+"""Distributed closure engine — the MapReduce substrate for the MR* miners.
+
+The engine owns the *static data* (the object-partitioned context, resident
+on device across iterations — Twister's defining feature) and exposes one
+operation: batched **global** closure.
+
+    map    : per-shard batched closure (Pallas kernel or jnp fallback)
+    reduce : bitwise-AND all-reduce of local closures across the object
+             partition axes + psum of supports   (paper Theorem 2)
+
+Backends:
+  * ``mesh``      — real SPMD over a jax Mesh via shard_map; object rows are
+    sharded over the given axis names (e.g. ("pod", "data")).
+  * ``simulated`` — single-device: rows reshaped [k, N/k, W], local closures
+    vmapped over the partition axis, AND-folded.  Bit-identical arithmetic,
+    used for tests/benchmarks on one CPU device.
+
+Supports are corrected globally: all-ones padding rows match every
+candidate, so ``supports -= n_pad_total`` after the psum.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core import bitset
+from repro.core.context import FormalContext
+from repro.dist import collectives
+from repro.kernels import ops
+
+
+@dataclasses.dataclass
+class EngineStats:
+    closure_calls: int = 0
+    closures_computed: int = 0
+    modeled_comm_bytes: int = 0
+    rounds: int = 0
+
+
+class ClosureEngine:
+    def __init__(
+        self,
+        ctx: FormalContext,
+        *,
+        mesh: Mesh | None = None,
+        axis_names: tuple[str, ...] = ("data",),
+        n_parts: int | None = None,
+        use_kernel: bool = True,
+        reduce_impl: str = "rsag",
+        block_n: int = 256,
+        max_batch: int = 8192,
+        interpret: bool = True,
+    ):
+        self.ctx = ctx
+        self.mesh = mesh
+        self.axis_names = axis_names
+        self.use_kernel = use_kernel
+        self.reduce_impl = reduce_impl
+        self.block_n = block_n
+        self.max_batch = max_batch
+        self.interpret = interpret
+        self.stats = EngineStats()
+
+        if mesh is not None:
+            k = 1
+            for a in axis_names:
+                k *= mesh.shape[a]
+        else:
+            k = n_parts or 1
+        self.n_parts = k
+
+        # Pad rows so every shard is block-aligned: N % (k * block_n) == 0.
+        rows, n_pad = ctx.padded_rows(k * block_n)
+        self.n_pad_rows = n_pad
+        self.N_padded = rows.shape[0]
+        self._mask = jnp.asarray(ctx.attr_mask())
+
+        if mesh is not None:
+            sharding = NamedSharding(mesh, P(axis_names, None))
+            self.rows = jax.device_put(jnp.asarray(rows), sharding)
+        else:
+            self.rows = jnp.asarray(rows).reshape(k, self.N_padded // k, ctx.W)
+
+        self._step = self._build_step()
+
+    # -- step builders -----------------------------------------------------
+
+    def _build_step(self):
+        ctx, axis_names, impl = self.ctx, self.axis_names, self.reduce_impl
+        use_kernel, block_n, interp = self.use_kernel, self.block_n, self.interpret
+
+        def local_closure(rows_local, cands):
+            return ops.batched_closure(
+                rows_local,
+                cands,
+                ctx.n_attrs,
+                n_valid_rows=rows_local.shape[0],  # global pad corrected later
+                block_n=block_n,
+                use_kernel=use_kernel,
+                interpret=interp,
+            )
+
+        if self.mesh is not None:
+            flat_axes = axis_names if len(axis_names) > 1 else axis_names[0]
+
+            def shard_body(rows_local, cands):
+                lc, ls = local_closure(rows_local, cands)
+                gc = collectives.and_allreduce(
+                    lc, flat_axes, impl=impl, n_attrs=ctx.n_attrs
+                )
+                gs = lax.psum(ls, flat_axes)
+                return gc, gs
+
+            smapped = jax.shard_map(
+                shard_body,
+                mesh=self.mesh,
+                in_specs=(P(axis_names, None), P()),
+                out_specs=(P(), P()),
+                check_vma=False,  # pallas_call outputs carry no vma info
+            )
+
+            @jax.jit
+            def step(rows, cands):
+                gc, gs = smapped(rows, cands)
+                return gc & self._mask, gs - self.n_pad_rows
+
+            return step
+
+        # Simulated partitions on one device.
+        def sim_body(rows_k, cands):
+            lc, ls = jax.vmap(lambda r: local_closure(r, cands))(rows_k)
+            gc = collectives._and_fold(lc)
+            gs = ls.sum(axis=0)
+            return gc, gs
+
+        @jax.jit
+        def step(rows, cands):
+            gc, gs = sim_body(rows, cands)
+            return gc & self._mask, gs - self.n_pad_rows
+
+        return step
+
+    # -- public API ----------------------------------------------------------
+
+    def closure(self, cands: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+        """Global closures + supports for a host candidate batch [B, W]."""
+        B = cands.shape[0]
+        if B == 0:
+            return (
+                np.zeros((0, self.ctx.W), np.uint32),
+                np.zeros((0,), np.int32),
+            )
+        out_c = np.empty((B, self.ctx.W), np.uint32)
+        out_s = np.empty((B,), np.int32)
+        self.stats.rounds += 1
+        for lo in range(0, B, self.max_batch):
+            chunk = cands[lo : lo + self.max_batch]
+            b = chunk.shape[0]
+            cap = ops.bucket_size(b, minimum=max(8, self.n_parts))
+            if cap != b:  # pad with all-ones candidates; outputs dropped
+                pad = np.full((cap - b, self.ctx.W), 0xFFFFFFFF, np.uint32)
+                chunk = np.concatenate([chunk, pad], axis=0)
+            gc, gs = self._step(self.rows, jnp.asarray(chunk))
+            out_c[lo : lo + b] = np.asarray(gc)[:b]
+            out_s[lo : lo + b] = np.asarray(gs)[:b]
+            self.stats.closure_calls += 1
+            self.stats.closures_computed += b
+            self.stats.modeled_comm_bytes += collectives.modeled_comm_bytes(
+                self.reduce_impl, self.n_parts, cap, self.ctx.W
+            )
+        return out_c, out_s
+
+    def first_closure(self) -> tuple[np.ndarray, int]:
+        """``∅''`` and its support ``|O|`` via a full map/reduce round."""
+        empty = np.zeros((1, self.ctx.W), np.uint32)
+        c, s = self.closure(empty)
+        return c[0], int(s[0])

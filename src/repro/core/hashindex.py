@@ -1,0 +1,56 @@
+"""The paper's two-level hash table ``H`` (MRGanter+, Algorithm 6).
+
+Level 1 keys on the *head attribute* of the closure (its smallest member);
+level 2 keys on the closure's *length* (popcount).  Leaves are sets of the
+packed intent bytes.  This mirrors the paper's reduce-side index used to
+"fast index and search a specified closure".
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import bitset
+
+
+class TwoLevelHash:
+    def __init__(self):
+        self._levels: dict[int, dict[int, set[bytes]]] = {}
+        self._n = 0
+
+    def __len__(self) -> int:
+        return self._n
+
+    def __contains__(self, row: np.ndarray) -> bool:
+        head = bitset.head_attr(row)
+        length = int(bitset.popcount(row))
+        bucket = self._levels.get(head, {}).get(length)
+        return bucket is not None and bitset.key_bytes(row) in bucket
+
+    def add(self, row: np.ndarray) -> bool:
+        """Insert; returns True iff the intent was new (Alg. 6 line 7)."""
+        head = bitset.head_attr(row)
+        length = int(bitset.popcount(row))
+        bucket = self._levels.setdefault(head, {}).setdefault(length, set())
+        key = bitset.key_bytes(row)
+        if key in bucket:
+            return False
+        bucket.add(key)
+        self._n += 1
+        return True
+
+    def add_batch(self, rows: np.ndarray) -> list[int]:
+        """Insert a batch [B, W]; returns indices of the rows that were new."""
+        return [i for i in range(rows.shape[0]) if self.add(rows[i])]
+
+    def bucket_stats(self) -> dict[str, float]:
+        sizes = [
+            len(s) for lv2 in self._levels.values() for s in lv2.values()
+        ]
+        if not sizes:
+            return {"buckets": 0, "max": 0, "mean": 0.0}
+        return {
+            "buckets": len(sizes),
+            "max": max(sizes),
+            "mean": float(np.mean(sizes)),
+        }

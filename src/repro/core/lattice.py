@@ -1,0 +1,61 @@
+"""Concept lattice construction from a mined intent set.
+
+FCA's main theorem guarantees the complete set of intents forms a lattice
+under set inclusion; this module materializes the covering relation (Hasse
+diagram) used by the examples and the paper-example tests (Table 2).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core import bitset, closure
+from repro.core.context import FormalContext
+
+
+@dataclasses.dataclass
+class ConceptLattice:
+    intents: np.ndarray  # [C, W] uint32, sorted by popcount ascending
+    extents: np.ndarray  # [C, N] bool
+    children: list[list[int]]  # covering relation: i covers j (j's intent ⊂ i's)
+
+    @property
+    def n_concepts(self) -> int:
+        return self.intents.shape[0]
+
+    def top(self) -> int:
+        """Index of ⟨O, ∅''⟩ — the concept with the smallest intent."""
+        return 0
+
+    def bottom(self) -> int:
+        return self.n_concepts - 1
+
+
+def build_lattice(ctx: FormalContext, intents: list[np.ndarray]) -> ConceptLattice:
+    arr = np.stack(intents)
+    sizes = bitset.popcount(arr)
+    order = np.argsort(sizes, kind="stable")
+    arr = arr[order]
+    sizes = sizes[order]
+    extents = np.stack([closure.extent_np(ctx.rows, y) for y in arr])
+
+    C = arr.shape[0]
+    children: list[list[int]] = [[] for _ in range(C)]
+    # i covers j  ⟺  intent[j] ⊂ intent[i] and no k with j ⊂ k ⊂ i.
+    for i in range(C):
+        subs = [
+            j
+            for j in range(i)
+            if sizes[j] < sizes[i] and bool(bitset.is_subset(arr[j], arr[i]))
+        ]
+        sub_set = set(subs)
+        for j in subs:
+            if not any(
+                k in sub_set and bool(bitset.is_subset(arr[j], arr[k])) and k != j
+                for k in subs
+                if sizes[k] > sizes[j]
+            ):
+                children[i].append(j)
+    return ConceptLattice(intents=arr, extents=extents, children=children)

@@ -1,0 +1,180 @@
+"""The MR* miners: MRGanter, MRGanter+ and MRCbo (paper §3), as host-side
+iterative drivers over a :class:`repro.core.engine.ClosureEngine`.
+
+Each driver is the Twister control loop: the engine holds the static data
+(sharded context); the *dynamic data* — the previous intent(s) — crosses the
+host/device boundary once per iteration, exactly like Twister re-configuring
+its long-running map tasks with the previous iteration's closures.
+
+Iteration counts follow the paper's convention (Table 9): every map/reduce
+round over the full context counts as one iteration, including the round
+that computes ``∅''`` and, for MRGanter+/MRCbo, the final round that proves
+the frontier is exhausted.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import numpy as np
+
+from repro.core import bitset, lectic
+from repro.core.engine import ClosureEngine
+from repro.core.hashindex import TwoLevelHash
+
+
+@dataclasses.dataclass
+class MRResult:
+    intents: list[np.ndarray]
+    n_iterations: int
+    n_closures_computed: int
+    modeled_comm_bytes: int
+    wall_time_s: float
+    algorithm: str
+
+    @property
+    def n_concepts(self) -> int:
+        return len(self.intents)
+
+
+def _seeds_for(Y: np.ndarray, tables: lectic.LecticTables) -> np.ndarray:
+    seeds, valid = lectic.oplus_seeds_all(Y, tables)
+    return seeds[valid]
+
+
+# ---------------------------------------------------------------------------
+# MRGanter (Algorithms 4 + 5): strict lectic order, one concept/iteration.
+# ---------------------------------------------------------------------------
+
+
+def mrganter(
+    ctx, engine: ClosureEngine, max_iterations: int | None = None
+) -> MRResult:
+    t0 = time.perf_counter()
+    tables = lectic.LecticTables(ctx.n_attrs)
+    full = ctx.attr_mask()
+    Y, _ = engine.first_closure()
+    intents = [Y]
+    n_iter = 1
+    while not np.array_equal(Y, full):
+        if max_iterations is not None and n_iter >= max_iterations:
+            break
+        # Map: local closures for every attribute p_i ∉ d (Alg. 4).
+        seeds, valid = lectic.oplus_seeds_all(Y, tables)
+        closures, _ = engine.closure(seeds)  # Reduce: Theorem-2 intersection
+        # Feasibility ≤_{p_i} (Alg. 5): first success scanning p_m → p_1.
+        ok = lectic.feasible_batch(closures, Y, tables) & valid
+        idx = np.nonzero(ok)[0]
+        assert idx.size, "NextClosure invariant: a feasible successor exists"
+        Y = closures[int(idx.max())]
+        intents.append(Y)
+        n_iter += 1
+    return MRResult(
+        intents=intents,
+        n_iterations=n_iter,
+        n_closures_computed=engine.stats.closures_computed,
+        modeled_comm_bytes=engine.stats.modeled_comm_bytes,
+        wall_time_s=time.perf_counter() - t0,
+        algorithm="mrganter",
+    )
+
+
+# ---------------------------------------------------------------------------
+# MRGanter+ (Algorithms 4 + 6): keep all new closures, dedupe via the
+# two-level hash; iterations collapse to ~lattice depth.
+# ---------------------------------------------------------------------------
+
+
+def mrganter_plus(
+    ctx,
+    engine: ClosureEngine,
+    *,
+    dedupe_candidates: bool = False,
+    max_iterations: int | None = None,
+) -> MRResult:
+    """``dedupe_candidates=False`` is the paper-faithful map phase (every
+    frontier intent emits a candidate for every absent attribute).  ``True``
+    additionally drops duplicate *seeds* before the closure — a beyond-paper
+    optimization benchmarked in EXPERIMENTS.md (same output, fewer closures).
+    """
+    t0 = time.perf_counter()
+    tables = lectic.LecticTables(ctx.n_attrs)
+    H = TwoLevelHash()
+    Y0, _ = engine.first_closure()
+    H.add(Y0)
+    intents = [Y0]
+    frontier = [Y0]
+    n_iter = 1
+    while frontier:
+        if max_iterations is not None and n_iter >= max_iterations:
+            break
+        seed_list = [_seeds_for(Y, tables) for Y in frontier]
+        seeds = (
+            np.concatenate(seed_list, axis=0)
+            if seed_list
+            else np.zeros((0, ctx.W), np.uint32)
+        )
+        if seeds.shape[0] == 0:
+            break
+        if dedupe_candidates:
+            seeds = np.unique(seeds, axis=0)
+        n_iter += 1
+        closures, _ = engine.closure(seeds)
+        new_idx = H.add_batch(closures)
+        frontier = [closures[i] for i in new_idx]
+        intents.extend(frontier)
+    return MRResult(
+        intents=intents,
+        n_iterations=n_iter,
+        n_closures_computed=engine.stats.closures_computed,
+        modeled_comm_bytes=engine.stats.modeled_comm_bytes,
+        wall_time_s=time.perf_counter() - t0,
+        algorithm="mrganter+",
+    )
+
+
+# ---------------------------------------------------------------------------
+# MRCbo: distributed CloseByOne under the same engine (paper §5 baseline).
+# ---------------------------------------------------------------------------
+
+
+def mrcbo(
+    ctx, engine: ClosureEngine, max_iterations: int | None = None
+) -> MRResult:
+    t0 = time.perf_counter()
+    tables = lectic.LecticTables(ctx.n_attrs)
+    root, _ = engine.first_closure()
+    intents = [root]
+    frontier: list[tuple[np.ndarray, int]] = [(root, -1)]
+    n_iter = 1
+    while frontier:
+        if max_iterations is not None and n_iter >= max_iterations:
+            break
+        seeds, parents, gens = [], [], []
+        for Y, g in frontier:
+            member = bitset.unpack_bits(Y, ctx.n_attrs)
+            for a in range(g + 1, ctx.n_attrs):
+                if not member[a]:
+                    seeds.append(Y | tables.BIT[a])
+                    parents.append(Y)
+                    gens.append(a)
+        if not seeds:
+            break
+        n_iter += 1
+        closures, _ = engine.closure(np.stack(seeds))
+        next_frontier = []
+        for i in range(closures.shape[0]):
+            a, Y, Z = gens[i], parents[i], closures[i]
+            if np.all(((Z ^ Y) & tables.LOW[a]) == 0):  # CbO canonicity
+                intents.append(Z)
+                next_frontier.append((Z, a))
+        frontier = next_frontier
+    return MRResult(
+        intents=intents,
+        n_iterations=n_iter,
+        n_closures_computed=engine.stats.closures_computed,
+        modeled_comm_bytes=engine.stats.modeled_comm_bytes,
+        wall_time_s=time.perf_counter() - t0,
+        algorithm="mrcbo",
+    )

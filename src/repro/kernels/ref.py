@@ -1,0 +1,43 @@
+"""Pure-jnp oracle for the Pallas closure kernel.
+
+Same contract as ``closure.closure_pallas`` (block-aligned padded inputs,
+raw un-masked/un-corrected outputs) so tests can assert bit-equality, plus
+the fully-corrected convenience entry matching ``ops.batched_closure``.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+FULL_WORD = jnp.uint32(0xFFFFFFFF)
+
+
+def closure_ref(
+    rows: jax.Array, cands: jax.Array, fused_reduce: bool = True
+) -> tuple[jax.Array, jax.Array]:
+    """rows [N, W], cands [B, W] → (closures [B, W], supports [B] int32).
+
+    ``fused_reduce``: lax.reduce with an AND monoid (XLA input-fuses the
+    select; nothing [B,N,W]-sized touches HBM) vs the naive scan fold —
+    the §Perf baseline.  Outputs are bit-identical (AND is associative
+    and commutative).
+    """
+    rows = rows.astype(jnp.uint32)
+    cands = cands.astype(jnp.uint32)
+    match = jnp.all(
+        (rows[None, :, :] & cands[:, None, :]) == cands[:, None, :], axis=-1
+    )  # [B, N]
+    sel = jnp.where(match[:, :, None], rows[None, :, :], FULL_WORD)
+    if fused_reduce:
+        closures = jax.lax.reduce(
+            sel, FULL_WORD, lambda a, b: jax.lax.bitwise_and(a, b), dimensions=(1,)
+        )
+    else:
+        def _and_fold(acc, row):
+            return acc & row, None
+
+        init = jnp.full(sel.shape[::2], FULL_WORD, dtype=jnp.uint32)  # [B, W]
+        closures, _ = jax.lax.scan(_and_fold, init, jnp.moveaxis(sel, 1, 0))
+    supports = match.sum(axis=-1, dtype=jnp.int32)
+    return closures, supports

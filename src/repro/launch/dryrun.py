@@ -1,0 +1,80 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# ^ MUST precede every other import (jax locks the device count at first
+# init).  512 placeholder CPU devices back both the 16×16 single-pod and
+# the 2×16×16 multi-pod production meshes.
+
+"""Multi-pod dry-run driver (deliverable e).
+
+    python -m repro.launch.dryrun --arch <id> --shape <s> [--multi-pod]
+    python -m repro.launch.dryrun --all [--multi-pod] --out dryrun.jsonl
+    python -m repro.launch.dryrun --fca [--multi-pod]
+
+For every cell this lowers + compiles the real train/prefill/decode step
+against ShapeDtypeStruct inputs on the production mesh, prints
+``memory_analysis()`` / ``cost_analysis()``, and appends a JSON record with
+the §Roofline raw terms (while-aware FLOPs, HBM bytes, collective bytes).
+"""
+
+import argparse
+import json
+import sys
+
+
+def main(argv=None):
+    p = argparse.ArgumentParser()
+    p.add_argument("--arch", default=None)
+    p.add_argument("--shape", default=None)
+    p.add_argument("--all", action="store_true")
+    p.add_argument("--fca", action="store_true", help="paper's own technique cell")
+    p.add_argument("--multi-pod", action="store_true")
+    p.add_argument("--out", default=None, help="append JSONL records here")
+    p.add_argument("--fsdp", default=None, choices=["on", "off"])
+    p.add_argument("--baseline", action="store_true",
+                   help="disable §Perf optimizations (A/B baseline)")
+    args = p.parse_args(argv)
+
+    from repro.configs import ARCH_IDS, SHAPES
+    from repro.launch.dryrun_lib import run_cell, run_fca_cell
+    from repro.launch.mesh import make_production_mesh
+
+    mesh = make_production_mesh(multi_pod=args.multi_pod)
+    mesh_label = "2x16x16" if args.multi_pod else "16x16"
+    fsdp = None if args.fsdp is None else (args.fsdp == "on")
+
+    cells = []
+    if args.fca:
+        cells = ["__fca__"]
+    elif args.all:
+        cells = [(a, s) for a in ARCH_IDS for s in SHAPES]
+    else:
+        if not args.arch or not args.shape:
+            p.error("--arch and --shape required (or --all / --fca)")
+        cells = [(args.arch, args.shape)]
+
+    records = []
+    for cell in cells:
+        if cell == "__fca__":
+            rec = run_fca_cell(mesh, mesh_label, baseline=args.baseline)
+        else:
+            arch, shape = cell
+            rec = run_cell(arch, shape, mesh, mesh_label, fsdp=fsdp,
+                           baseline=args.baseline)
+        records.append(rec)
+        rec["variant"] = "baseline" if args.baseline else "optimized"
+        print(json.dumps(rec), flush=True)
+        if args.out:
+            with open(args.out, "a") as f:
+                f.write(json.dumps(rec) + "\n")
+
+    n_err = sum(r["status"] == "error" for r in records)
+    print(f"# {len(records)} cells: "
+          f"{sum(r['status'] == 'ok' for r in records)} ok, "
+          f"{sum(r['status'] == 'skipped' for r in records)} skipped, "
+          f"{n_err} errors", file=sys.stderr)
+    return 1 if n_err else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,72 @@
+"""Distributed FCA launcher — the paper's system as a production CLI.
+
+    python -m repro.launch.fca --dataset mushroom --scale 0.05 \
+        --algorithm mrganter+ --parts 8 --reduce rsag
+
+With a real multi-device runtime pass ``--mesh`` to shard the context over
+the device mesh (objects over pod×data); otherwise partitions are
+simulated on one device with bit-identical arithmetic.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+
+from repro.core import ClosureEngine, bitset, mrcbo, mrganter, mrganter_plus
+from repro.data import fca_datasets
+
+
+def main(argv=None):
+    p = argparse.ArgumentParser()
+    p.add_argument("--dataset", default="mushroom",
+                   choices=list(fca_datasets.PAPER_DATASETS))
+    p.add_argument("--scale", type=float, default=0.05)
+    p.add_argument("--algorithm", default="mrganter+",
+                   choices=["mrganter", "mrganter+", "mrcbo"])
+    p.add_argument("--parts", type=int, default=8)
+    p.add_argument("--reduce", default="rsag",
+                   choices=["allgather", "rsag", "pmin"])
+    p.add_argument("--mesh", action="store_true",
+                   help="shard over the jax device mesh (needs >1 device)")
+    p.add_argument("--no-kernel", action="store_true")
+    p.add_argument("--max-iterations", type=int, default=None)
+    p.add_argument("--data-dir", default=None,
+                   help="directory with real UCI .data files (else synthetic)")
+    args = p.parse_args(argv)
+
+    ctx, spec = fca_datasets.load(args.dataset, scale=args.scale,
+                                  data_dir=args.data_dir)
+    if args.mesh:
+        import jax
+        from repro.launch.mesh import make_local_mesh
+
+        mesh = make_local_mesh(model=1)
+        eng = ClosureEngine(ctx, mesh=mesh, axis_names=("data",),
+                            reduce_impl=args.reduce,
+                            use_kernel=not args.no_kernel)
+    else:
+        eng = ClosureEngine(ctx, n_parts=args.parts, reduce_impl=args.reduce,
+                            use_kernel=not args.no_kernel)
+
+    algo = {"mrganter": mrganter, "mrganter+": mrganter_plus, "mrcbo": mrcbo}[
+        args.algorithm
+    ]
+    res = algo(ctx, eng, max_iterations=args.max_iterations)
+    print(json.dumps({
+        "dataset": spec.name,
+        "objects": spec.n_objects,
+        "attributes": spec.n_attrs,
+        "density": round(spec.density, 4),
+        "synthetic": spec.synthetic,
+        "algorithm": res.algorithm,
+        "concepts": res.n_concepts,
+        "iterations": res.n_iterations,
+        "closures_computed": res.n_closures_computed,
+        "modeled_comm_bytes": res.modeled_comm_bytes,
+        "wall_time_s": round(res.wall_time_s, 3),
+    }, indent=2))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,431 @@
+"""While-aware static analysis of post-SPMD HLO: FLOPs, bytes, collectives.
+
+XLA's ``compiled.cost_analysis()`` counts while-loop bodies **once**, so any
+scanned-layer model (all of ours) is undercounted by ~n_layers×.  This
+module parses the HLO text into a computation graph, recovers scan trip
+counts, and walks the call graph with multipliers:
+
+  * **trip counts** — jax's ``lax.scan`` lowers to ``while`` whose condition
+    is ``lt(carry[i], carry[j])`` with ``carry[j]`` a loop-invariant s32
+    constant in the init tuple; we trace the compare operands through
+    get-tuple-element → init-tuple → constant.
+  * **FLOPs** — 2 · |output| · contraction-extent per ``dot`` (operand
+    shapes resolved from their defining instructions).  Elementwise FLOPs
+    are ignored (documented; dots dominate every assigned arch).
+  * **HBM bytes** — per instruction: output + operand bytes, *not*
+    descending into fused computations (a fusion is one kernel: its
+    intermediates never touch HBM).  This is a no-cache-reuse traffic model.
+  * **collective bytes** — payload per collective op (result bytes; operand
+    bytes for reduce-scatter), scaled by enclosing trip counts.
+
+The HLO is per-partition under SPMD ⇒ all results are per-device.
+Validated against hand-counted small programs in tests/test_hlo_analysis.py.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "f16": 2, "bf16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "token": 0,
+}
+
+_SHAPE_RE = re.compile(r"\b([a-z][a-z0-9]*)\[([0-9,]*)\]")
+_INSTR_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(.*)$")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+_COLLECTIVE_KINDS = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+
+def _shape_list(segment: str) -> list[tuple[str, tuple[int, ...]]]:
+    out = []
+    for dt, dims in _SHAPE_RE.findall(segment):
+        if dt in _DTYPE_BYTES:
+            shape = tuple(int(d) for d in dims.split(",")) if dims else ()
+            out.append((dt, shape))
+    return out
+
+
+def _nbytes(shapes) -> int:
+    total = 0
+    for dt, shape in shapes:
+        n = 1
+        for d in shape:
+            n *= d
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    opcode: str
+    result_shapes: list  # [(dtype, dims)]
+    operands: list[str]
+    raw: str
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    instrs: dict  # name -> Instr
+    order: list[str]
+
+
+_OPCODE_RE = re.compile(
+    r"^((?:\([^)]*\)|[a-z0-9_\[\],\{\}:\s\*\/]+))\s*([a-z][\w\-]*)\("
+)
+
+
+def parse_hlo(text: str) -> dict[str, Computation]:
+    comps: dict[str, Computation] = {}
+    cur: Computation | None = None
+    for line in text.splitlines():
+        if not line.strip():
+            continue
+        if not line.startswith(" ") and ("{" in line) and ("(" in line):
+            m = re.match(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(", line)
+            if m:
+                cur = Computation(m.group(1), {}, [])
+                comps[cur.name] = cur
+                if line.startswith("ENTRY"):
+                    comps["__entry__"] = cur
+            continue
+        if line.strip() == "}":
+            continue
+        if cur is None:
+            continue
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        name, rhs = m.group(1), m.group(2)
+        # result shapes: everything before the opcode token
+        om = re.search(r"(?:^|\s)([a-z][\w\-]*)\(", rhs)
+        if om:
+            opcode = om.group(1)
+            result_seg = rhs[: om.start(1)]
+            after = rhs[om.end():]  # just past the opening paren
+        else:
+            opcode = "unknown"
+            result_seg, after = rhs, ""
+        # operands: %refs inside the first (...) — slice to matching paren
+        depth, end = 1, len(after)
+        for i, ch in enumerate(after):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    end = i
+                    break
+        operand_seg = after[:end]
+        operands = _OPERAND_RE.findall(operand_seg)
+        cur.instrs[name] = Instr(
+            name=name,
+            opcode=opcode,
+            result_shapes=_shape_list(result_seg),
+            operands=operands,
+            raw=rhs,
+        )
+        cur.order.append(name)
+    return comps
+
+
+def _attr(raw: str, key: str) -> str | None:
+    m = re.search(rf"{key}=%([\w.\-]+)", raw)
+    return m.group(1) if m else None
+
+
+def _int_list(raw: str, key: str) -> list[int]:
+    m = re.search(rf"{key}=\{{([0-9,\s]*)\}}", raw)
+    if not m or not m.group(1).strip():
+        return []
+    return [int(x) for x in m.group(1).split(",")]
+
+
+def _gte_index(instr: Instr) -> int | None:
+    m = re.search(r"index=(\d+)", instr.raw)
+    return int(m.group(1)) if m else None
+
+
+def _trace_to_tuple_index(comp: Computation, name: str) -> int | None:
+    """Follow copies/converts to a get-tuple-element of the computation param."""
+    seen = 0
+    while seen < 20:
+        seen += 1
+        instr = comp.instrs.get(name)
+        if instr is None:
+            return None
+        if instr.opcode == "get-tuple-element":
+            return _gte_index(instr)
+        if instr.opcode in ("copy", "convert", "bitcast") and instr.operands:
+            name = instr.operands[0]
+            continue
+        # wrapped compare: operands are parameters of a tiny computation —
+        # handled by the caller.
+        return None
+    return None
+
+
+def _const_int(instr: Instr) -> int | None:
+    m = re.search(r"constant\((\d+)\)", instr.raw)
+    return int(m.group(1)) if m else None
+
+
+def _resolve_const(comp: Computation, name: str) -> int | None:
+    """Follow copy/convert chains to a constant int within ``comp``."""
+    for _ in range(10):
+        ins = comp.instrs.get(name)
+        if ins is None:
+            return None
+        if ins.opcode == "constant":
+            return _const_int(ins)
+        if ins.opcode in ("copy", "convert", "bitcast") and ins.operands:
+            name = ins.operands[0]
+            continue
+        return None
+    return None
+
+
+def _find_lt_compare(comps, cond: Computation) -> list[str] | None:
+    """Call-site operand names of the condition's LT compare (in ``cond``)."""
+    for nm in cond.order[::-1]:
+        ins = cond.instrs[nm]
+        if ins.opcode == "compare" and "direction=LT" in ins.raw:
+            return ins.operands
+        if ins.opcode in ("fusion", "call"):
+            callee = _attr(ins.raw, "calls") or _attr(ins.raw, "to_apply")
+            if callee and callee in comps:
+                sub = comps[callee]
+                for nm2 in sub.order[::-1]:
+                    ins2 = sub.instrs[nm2]
+                    if ins2.opcode == "compare" and "direction=LT" in ins2.raw:
+                        # map compare's parameter operands → call-site operands
+                        mapped = []
+                        for op in ins2.operands:
+                            p = sub.instrs.get(op)
+                            if p is not None and p.opcode == "parameter":
+                                pm = re.search(r"parameter\((\d+)\)", p.raw)
+                                i = int(pm.group(1)) if pm else None
+                                mapped.append(
+                                    ins.operands[i]
+                                    if i is not None and i < len(ins.operands)
+                                    else None
+                                )
+                            else:
+                                mapped.append(None)
+                        if all(m is not None for m in mapped):
+                            return mapped
+    return None
+
+
+def _while_trip(comps, parent: Computation, wh: Instr) -> int | None:
+    """Trip count of a jax-scan-style while: cond is lt(iter, CONST)."""
+    cond_name = _attr(wh.raw, "condition")
+    if cond_name is None or cond_name not in comps:
+        return None
+    cond = comps[cond_name]
+    ops = _find_lt_compare(comps, cond)
+    if not ops or len(ops) < 2:
+        return None
+    # The bound is usually a constant inside the condition computation …
+    bound = _resolve_const(cond, ops[1])
+    if bound is not None:
+        return bound
+    # … or a loop-invariant element of the init tuple.
+    idx = _trace_to_tuple_index(cond, ops[1])
+    if idx is not None and wh.operands:
+        init = parent.instrs.get(wh.operands[0])
+        if init is not None and init.opcode == "tuple" and idx < len(init.operands):
+            return _resolve_const(parent, init.operands[idx])
+    return None
+
+
+# ---------------------------------------------------------------------------
+# FLOPs / bytes / collectives with multipliers
+# ---------------------------------------------------------------------------
+
+
+def _dot_flops(comp: Computation, instr: Instr) -> int:
+    out_elems = 1
+    for dt, shape in instr.result_shapes:
+        for d in shape:
+            out_elems *= d
+    lhs = comp.instrs.get(instr.operands[0]) if instr.operands else None
+    contracting = _int_list(instr.raw, "lhs_contracting_dims")
+    k = 1
+    if lhs is not None and lhs.result_shapes:
+        _, lshape = lhs.result_shapes[0]
+        for c in contracting:
+            if c < len(lshape):
+                k *= lshape[c]
+    return 2 * out_elems * k
+
+
+@dataclasses.dataclass
+class Totals:
+    flops: float = 0.0
+    hbm_bytes: float = 0.0
+    collective_bytes: float = 0.0
+    coll_by_kind: dict = dataclasses.field(default_factory=lambda: defaultdict(float))
+    coll_counts: dict = dataclasses.field(default_factory=lambda: defaultdict(float))
+    unresolved_whiles: int = 0
+    bytes_by_op: dict = dataclasses.field(default_factory=lambda: defaultdict(float))
+
+
+def _fusion_param_windows(comps, ins: Instr) -> dict[int, int]:
+    """Param-index → windowed byte size, for fusion params consumed *only*
+    via dynamic-slice (XLA reads the slice window per execution)."""
+    callee = _attr(ins.raw, "calls")
+    if callee not in comps:
+        return {}
+    sub = comps[callee]
+    param_idx: dict[str, int] = {}
+    for nm in sub.order:
+        p = sub.instrs[nm]
+        if p.opcode == "parameter":
+            m = re.search(r"parameter\((\d+)\)", p.raw)
+            if m:
+                param_idx[nm] = int(m.group(1))
+    uses: dict[str, list[tuple[str, int]]] = {nm: [] for nm in param_idx}
+    for nm in sub.order:
+        p = sub.instrs[nm]
+        for pos, o in enumerate(p.operands):
+            if o in uses:
+                uses[o].append((nm, pos))
+    out: dict[int, int] = {}
+    for pname, use_list in uses.items():
+        if not use_list:
+            continue
+        ok = all(
+            sub.instrs[u].opcode in ("dynamic-slice", "dynamic-update-slice")
+            and pos == 0
+            for u, pos in use_list
+        )
+        if ok:
+            total = 0
+            for u, _ in use_list:
+                du = sub.instrs[u]
+                if du.opcode == "dynamic-slice":
+                    total += _nbytes(du.result_shapes)
+                else:  # DUS buffer param: charge the update window (in-place)
+                    upd = sub.instrs.get(du.operands[1]) if len(du.operands) > 1 else None
+                    total += _nbytes(upd.result_shapes) if upd is not None else 0
+            out[param_idx[pname]] = total
+    return out
+
+
+def _fusion_root(comps, comp: Computation, ins: Instr) -> str | None:
+    """Root opcode of a fusion's called computation (None for non-fusions)."""
+    if ins.opcode != "fusion":
+        return None
+    callee = _attr(ins.raw, "calls")
+    if callee not in comps:
+        return None
+    sub = comps[callee]
+    if not sub.order:
+        return None
+    return sub.instrs[sub.order[-1]].opcode
+
+
+def _collective_payload(comp: Computation, instr: Instr) -> int:
+    size = _nbytes(instr.result_shapes)
+    if instr.opcode.startswith("reduce-scatter"):
+        op_sizes = 0
+        for op in instr.operands:
+            d = comp.instrs.get(op)
+            if d is not None:
+                op_sizes += _nbytes(d.result_shapes)
+        size = max(size, op_sizes)
+    return size
+
+
+def analyze(text: str, default_trip: int = 1) -> Totals:
+    comps = parse_hlo(text)
+    entry = comps.get("__entry__")
+    totals = Totals()
+    if entry is None:
+        return totals
+
+    def walk(comp: Computation, mult: float, depth: int = 0):
+        if depth > 30:
+            return
+        for nm in comp.order:
+            ins = comp.instrs[nm]
+            op = ins.opcode
+            if op == "dot":
+                totals.flops += mult * _dot_flops(comp, ins)
+            base = op.replace("-start", "")
+            if base in _COLLECTIVE_KINDS and not op.endswith("-done"):
+                size = _collective_payload(comp, ins)
+                totals.collective_bytes += mult * size
+                totals.coll_by_kind[base] += mult * size
+                totals.coll_counts[base] += mult
+            # HBM traffic model: operands + outputs at kernel granularity.
+            if op not in ("tuple", "get-tuple-element", "parameter", "constant",
+                          "while", "call", "bitcast"):
+                result_b = _nbytes(ins.result_shapes)
+                operand_b = []
+                windows = _fusion_param_windows(comps, ins) if op == "fusion" else {}
+                for i, o in enumerate(ins.operands):
+                    d = comp.instrs.get(o)
+                    b = _nbytes(d.result_shapes) if d is not None else 0
+                    # Fusion params consumed only through dynamic-slice read a
+                    # window, not the whole buffer (XLA windowed fusion).
+                    if i in windows:
+                        b = min(b, windows[i])
+                    operand_b.append(b)
+                size = result_b + sum(operand_b)
+                # dynamic-(update-)slice is in-place / windowed on every
+                # backend: charge slice traffic, not whole-buffer traffic.
+                root = _fusion_root(comps, comp, ins)
+                if root == "dynamic-update-slice" or op == "dynamic-update-slice":
+                    non_buffer = [b for b in operand_b if b != result_b]
+                    size = 2 * sum(non_buffer) if non_buffer else 2 * result_b
+                elif root == "dynamic-slice" or op == "dynamic-slice":
+                    size = 2 * result_b
+                totals.hbm_bytes += mult * size
+                totals.bytes_by_op[op] += mult * size
+            # descend
+            if op == "while":
+                body = _attr(ins.raw, "body")
+                trip = _while_trip(comps, comp, ins)
+                if trip is None:
+                    trip = default_trip
+                    totals.unresolved_whiles += 1
+                if body in comps:
+                    walk(comps[body], mult * trip, depth + 1)
+            elif op == "fusion":
+                callee = _attr(ins.raw, "calls")
+                if callee in comps:
+                    # FLOPs only — fused intermediates don't touch HBM.
+                    sub = comps[callee]
+                    for nm2 in sub.order:
+                        ins2 = sub.instrs[nm2]
+                        if ins2.opcode == "dot":
+                            totals.flops += mult * _dot_flops(sub, ins2)
+            elif op in ("call", "custom-call", "conditional"):
+                callee = _attr(ins.raw, "calls") or _attr(ins.raw, "to_apply")
+                if callee in comps:
+                    walk(comps[callee], mult, depth + 1)
+
+    walk(entry, 1.0)
+    return totals
+
+
+# Back-compat simple interfaces ------------------------------------------------
+
+
+def collective_bytes(text: str) -> dict:
+    t = analyze(text)
+    return {
+        "total_bytes": int(t.collective_bytes),
+        "by_kind": {k: int(v) for k, v in t.coll_by_kind.items()},
+        "counts": {k: int(v) for k, v in t.coll_counts.items()},
+    }

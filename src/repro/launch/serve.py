@@ -1,0 +1,45 @@
+"""Serving launcher: batched greedy/temperature generation.
+
+    python -m repro.launch.serve --arch codeqwen1.5-7b --reduced \
+        --prompts "1,2,3;4,5" --max-new 16
+"""
+
+from __future__ import annotations
+
+import argparse
+
+from repro.configs import get_config
+from repro.models import transformer
+from repro.serve.engine import ServeConfig, ServeEngine
+
+
+def main(argv=None):
+    p = argparse.ArgumentParser()
+    p.add_argument("--arch", required=True)
+    p.add_argument("--reduced", action="store_true")
+    p.add_argument("--prompts", default="1,2,3;4,5,6,7")
+    p.add_argument("--max-new", type=int, default=16)
+    p.add_argument("--max-len", type=int, default=512)
+    p.add_argument("--temperature", type=float, default=0.0)
+    args = p.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    params, _ = transformer.init_params(cfg, seed=0)
+    prompts = [
+        [int(t) % cfg.vocab_size for t in chunk.split(",") if t.strip()]
+        for chunk in args.prompts.split(";")
+    ]
+    eng = ServeEngine(
+        cfg, params,
+        ServeConfig(max_len=args.max_len, batch_slots=max(4, len(prompts)),
+                    greedy=args.temperature == 0.0,
+                    temperature=max(args.temperature, 1e-6)),
+    )
+    for prompt, out in zip(prompts, eng.generate(prompts, args.max_new)):
+        print(f"{prompt} → {out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,68 @@
+"""Abstract input specs (ShapeDtypeStruct stand-ins) for every cell.
+
+Weak-type-correct, shardable, zero allocation — the dry-run lowers
+``train_step`` / ``prefill_step`` / ``decode_step`` against these.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer
+from repro.models.config import ModelConfig, ShapeConfig
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    """Training batch: tokens (or stub embeddings) + next-token labels."""
+    B, S = shape.global_batch, shape.seq_len
+    if cfg.input_mode == "embeds":
+        inputs = _sds((B, S, cfg.d_model), jnp.dtype(cfg.dtype))
+    else:
+        inputs = _sds((B, S), jnp.int32)
+    out = {"inputs": inputs, "labels": _sds((B, S), jnp.int32)}
+    if cfg.rope_kind == "mrope":
+        out["positions"] = _sds((3, B, S), jnp.int32)
+    return out
+
+
+def decode_input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    """One-step decode: single token per slot + KV/state caches at S_max."""
+    B, S = shape.global_batch, shape.seq_len
+    if cfg.input_mode == "embeds":
+        inputs = _sds((B, 1, cfg.d_model), jnp.dtype(cfg.dtype))
+    else:
+        inputs = _sds((B, 1), jnp.int32)
+    caches = jax.eval_shape(lambda: transformer.init_caches(cfg, B, S))
+    out = {"inputs": inputs, "t": _sds((), jnp.int32), "caches": caches}
+    if cfg.rope_kind == "mrope":
+        out["positions"] = _sds((3, B, 1), jnp.int32)
+    return out
+
+
+def prefill_input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    B, S = shape.global_batch, shape.seq_len
+    if cfg.input_mode == "embeds":
+        inputs = _sds((B, S, cfg.d_model), jnp.dtype(cfg.dtype))
+    else:
+        inputs = _sds((B, S), jnp.int32)
+    caches = jax.eval_shape(lambda: transformer.init_caches(cfg, B, S))
+    out = {"inputs": inputs, "caches": caches}
+    if cfg.rope_kind == "mrope":
+        out["positions"] = _sds((3, B, S), jnp.int32)
+    return out
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    """Dispatch on the shape's kind (train | prefill | decode)."""
+    if shape.kind == "train":
+        return batch_specs(cfg, shape)
+    if shape.kind == "prefill":
+        return prefill_input_specs(cfg, shape)
+    if shape.kind == "decode":
+        return decode_input_specs(cfg, shape)
+    raise ValueError(shape.kind)

@@ -1,0 +1,262 @@
+"""GQA attention: blockwise (flash-style) full-sequence path + cached decode.
+
+The full-sequence path scans over KV blocks with an online-softmax carry, so
+peak activation memory is O(S·kv_block) per head instead of O(S²) — the
+TPU-native equivalent of flash attention expressed in jnp (the scan body is
+a natural remat boundary).  Supports: causal masking, sliding windows
+(gemma2 local / griffin), logit softcapping (gemma2), RoPE and M-RoPE.
+
+Caches: full caches ``[B, S_max, KV, hd]`` (decode_32k) or ring-buffer
+window caches ``[B, window, KV, hd]`` with a per-slot position vector, so
+windowed archs decode in O(window) memory at any context length (long_500k).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+from repro.models.config import ModelConfig
+
+NEG_INF = -2.0**30
+
+
+class KVCache(NamedTuple):
+    k: jax.Array  # [B, L, KV, hd]
+    v: jax.Array  # [B, L, KV, hd]
+    pos: jax.Array  # [B, L] int32 — absolute position per slot (-1 = empty;
+    # per-batch so left-padded prompts mask their pads)
+
+
+def init_attention(pb: layers.ParamBuilder, cfg: ModelConfig):
+    d, H, KV, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    p = {
+        "wq": pb.dense((d, H, hd), ("embed", "heads", "head_dim")),
+        "wk": pb.dense((d, KV, hd), ("embed", "kv", "head_dim")),
+        "wv": pb.dense((d, KV, hd), ("embed", "kv", "head_dim")),
+        "wo": pb.dense((H, hd, d), ("heads", "head_dim", "embed"), fan_in=H * hd),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = pb.zeros((H, hd), ("heads", "head_dim"))
+        p["bk"] = pb.zeros((KV, hd), ("kv", "head_dim"))
+        p["bv"] = pb.zeros((KV, hd), ("kv", "head_dim"))
+    return p
+
+
+def _project_qkv(params, x, cfg: ModelConfig, rope_positions):
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"])
+    if cfg.qkv_bias:
+        q, k, v = q + params["bq"], k + params["bk"], v + params["bv"]
+    if cfg.rope_kind == "standard":
+        q = layers.apply_rope(q, rope_positions, cfg.rope_theta)
+        k = layers.apply_rope(k, rope_positions, cfg.rope_theta)
+    elif cfg.rope_kind == "mrope":
+        q = layers.apply_mrope(q, rope_positions, cfg.rope_theta, cfg.mrope_sections)
+        k = layers.apply_mrope(k, rope_positions, cfg.rope_theta, cfg.mrope_sections)
+    return q, k, v
+
+
+def _mask(q_pos, kv_pos, window):
+    """q_pos [..., S, 1], kv_pos [..., 1, T] → bool valid mask."""
+    valid = (kv_pos <= q_pos) & (kv_pos >= 0)
+    if window is not None:
+        valid &= q_pos - kv_pos < window
+    return valid
+
+
+def blockwise_attention(
+    q: jax.Array,  # [B, S, H, hd]
+    k: jax.Array,  # [B, T, KV, hd]
+    v: jax.Array,  # [B, T, KV, hd]
+    q_pos: jax.Array,  # [S] or [B, S] int32 absolute positions
+    kv_pos: jax.Array,  # [T] or [B, T] int32 (sentinel < 0 = invalid slot)
+    *,
+    window: int | None,
+    logit_cap: float | None,
+    kv_block: int = 1024,
+) -> jax.Array:
+    B, S, H, hd = q.shape
+    T, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    scale = 1.0 / math.sqrt(hd)
+    qg = q.reshape(B, S, KV, G, hd)
+    q_pos = jnp.broadcast_to(q_pos, (B, S)) if q_pos.ndim == 1 else q_pos
+    kv_pos = jnp.broadcast_to(kv_pos, (B, T)) if kv_pos.ndim == 1 else kv_pos
+
+    pad = -T % kv_block
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        kv_pos = jnp.pad(kv_pos, ((0, 0), (0, pad)), constant_values=-1)
+    n_blocks = (T + pad) // kv_block
+    kb = jnp.moveaxis(k.reshape(B, n_blocks, kv_block, KV, hd), 1, 0)
+    vb = jnp.moveaxis(v.reshape(B, n_blocks, kv_block, KV, hd), 1, 0)
+    pb = jnp.moveaxis(kv_pos.reshape(B, n_blocks, kv_block), 1, 0)
+
+    def step(carry, blk):
+        m, l, acc = carry
+        k_j, v_j, pos_j = blk
+        s = jnp.einsum(
+            "bskgh,btkh->bskgt", qg, k_j, preferred_element_type=jnp.float32
+        ) * scale
+        s = layers.softcap(s, logit_cap)
+        valid = _mask(q_pos[:, :, None, None, None], pos_j[:, None, None, None, :], window)
+        s = jnp.where(valid, s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        alpha = jnp.exp(m - m_new)
+        # §Perf: p in bf16 (stabilized by the fp32 running max) — halves the
+        # dominant softmax-chain HBM traffic; running stats stay fp32.
+        p = jnp.exp(s - m_new[..., None]).astype(v_j.dtype)
+        l_new = l * alpha + jnp.sum(p, axis=-1, dtype=jnp.float32)
+        pv = jnp.einsum("bskgt,btkh->bskgh", p, v_j,
+                        preferred_element_type=jnp.float32)
+        acc_new = acc * alpha[..., None] + pv
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, S, KV, G), NEG_INF, dtype=jnp.float32)
+    l0 = jnp.zeros((B, S, KV, G), dtype=jnp.float32)
+    a0 = jnp.zeros((B, S, KV, G, hd), dtype=jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(step, (m0, l0, a0), (kb, vb, pb))
+    out = acc / jnp.maximum(l[..., None], 1e-37)
+    return out.reshape(B, S, H, hd).astype(q.dtype)
+
+
+def _constrain_q(q: jax.Array, cfg: ModelConfig, shard) -> jax.Array:
+    """§Perf: pick the attention parallelism that actually shards.
+
+    Megatron-style heads-TP needs n_heads % tp == 0; several assigned archs
+    (56H, 40H, 36H on a 16-way model axis) fail that and GSPMD silently
+    *replicates* the whole attention computation per model shard (~16×
+    redundant FLOPs + HBM traffic — measured in EXPERIMENTS.md §Perf).
+    For those archs we context-parallelize instead: shard q (and thus
+    scores/out, by propagation) on the sequence dim over 'model'; k/v stay
+    per-data-shard so the blockwise scan needs no extra collectives —
+    only the y reshard at the residual boundary.
+    """
+    if shard is None or not getattr(shard, "constrain_attention", True):
+        return q
+    H, S = q.shape[2], q.shape[1]
+    if shard.dim_shards("heads", H) > 1:
+        return shard(q, "batch", None, "heads", None)
+    if shard.dim_shards("seq_model", S) > 1:
+        return shard(q, "batch", "seq_model", None, None)
+    return q
+
+
+def attn_full(
+    params,
+    x: jax.Array,
+    cfg: ModelConfig,
+    kind: str,
+    rope_positions,
+    *,
+    kv_block: int = 1024,
+    shard=None,
+) -> jax.Array:
+    """Train/prefill full-sequence attention (no cache)."""
+    B, S, _ = x.shape
+    q, k, v = _project_qkv(params, x, cfg, rope_positions)
+    q = _constrain_q(q, cfg, shard)
+    window = _window_for(cfg, kind)
+    pos = jnp.arange(S, dtype=jnp.int32)
+    out = blockwise_attention(
+        q, k, v, pos, pos,
+        window=window, logit_cap=cfg.attn_logit_softcap, kv_block=min(kv_block, S),
+    )
+    return jnp.einsum("bshk,hkd->bsd", out, params["wo"])
+
+
+def _window_for(cfg: ModelConfig, kind: str) -> int | None:
+    if kind == "attn_local":
+        return cfg.attn_window or (cfg.griffin.attn_window if cfg.griffin else None)
+    return None
+
+
+def init_cache(
+    cfg: ModelConfig, kind: str, batch: int, max_len: int, dtype
+) -> KVCache:
+    window = _window_for(cfg, kind)
+    L = min(window, max_len) if window else max_len
+    KV, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+    return KVCache(
+        k=jnp.zeros((batch, L, KV, hd), dtype),
+        v=jnp.zeros((batch, L, KV, hd), dtype),
+        pos=jnp.full((batch, L), -1, dtype=jnp.int32),
+    )
+
+
+def attn_prefill(
+    params, x, cfg: ModelConfig, kind: str, rope_positions, cache: KVCache,
+    shard=None, valid_from=None,
+) -> tuple[jax.Array, KVCache]:
+    """Full-sequence forward that also fills the cache (last L positions).
+
+    ``valid_from`` [B] marks the first real token per slot (left-padded
+    serving batches); earlier slots get pos = -1 and are never attended.
+    """
+    B, S, _ = x.shape
+    q, k, v = _project_qkv(params, x, cfg, rope_positions)
+    q = _constrain_q(q, cfg, shard)
+    window = _window_for(cfg, kind)
+    pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    if valid_from is not None:
+        pos = jnp.where(pos >= valid_from[:, None], pos, -1)
+    out = blockwise_attention(
+        q, k, v, pos, pos, window=window,
+        logit_cap=cfg.attn_logit_softcap, kv_block=min(1024, S),
+    )
+    L = cache.k.shape[1]
+    if L >= S:
+        new = KVCache(
+            k=jax.lax.dynamic_update_slice(cache.k, k, (0, 0, 0, 0)),
+            v=jax.lax.dynamic_update_slice(cache.v, v, (0, 0, 0, 0)),
+            pos=jax.lax.dynamic_update_slice(cache.pos, pos, (0, 0)),
+        )
+    else:  # keep the last L positions (ring layout: slot = pos % L)
+        tail_k, tail_v, tail_p = k[:, -L:], v[:, -L:], pos[:, -L:]
+        roll = -(S % L) if L else 0
+        new = KVCache(
+            k=jnp.roll(tail_k, roll, axis=1),
+            v=jnp.roll(tail_v, roll, axis=1),
+            pos=jnp.roll(tail_p, roll, axis=1),
+        )
+    return jnp.einsum("bshk,hkd->bsd", out, params["wo"]), new
+
+
+def attn_decode(
+    params, x, cfg: ModelConfig, kind: str, rope_positions, cache: KVCache, t
+) -> tuple[jax.Array, KVCache]:
+    """One-token decode.  x [B, 1, d]; t — absolute position scalar."""
+    q, k, v = _project_qkv(params, x, cfg, rope_positions)
+    L = cache.k.shape[1]
+    window = _window_for(cfg, kind)
+    slot = t % L
+    cache = KVCache(
+        k=jax.lax.dynamic_update_slice(cache.k, k, (0, slot, 0, 0)),
+        v=jax.lax.dynamic_update_slice(cache.v, v, (0, slot, 0, 0)),
+        pos=jax.lax.dynamic_update_slice(
+            cache.pos,
+            jnp.full((cache.pos.shape[0], 1), t, jnp.int32),
+            (0, slot),
+        ),
+    )
+    B, _, H, hd = q.shape
+    KV = cache.k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, KV, G, hd)
+    s = jnp.einsum(
+        "bkgh,btkh->bkgt", qg, cache.k, preferred_element_type=jnp.float32
+    ) / math.sqrt(hd)
+    s = layers.softcap(s, cfg.attn_logit_softcap)
+    valid = _mask(t, cache.pos[:, None, None, :], window)
+    s = jnp.where(valid, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgt,btkh->bkgh", p.astype(cache.v.dtype), cache.v)
+    out = out.reshape(B, 1, H, hd)
+    return jnp.einsum("bshk,hkd->bsd", out, params["wo"]), cache

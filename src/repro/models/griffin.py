@@ -1,0 +1,125 @@
+"""RecurrentGemma / Griffin recurrent blocks: RG-LRU + temporal conv.
+
+The recurrent block runs two branches from the block input:
+  * gate branch:       linear(d→w) → GeLU
+  * recurrence branch: linear(d→w) → causal conv1d(K=4) → RG-LRU
+merged multiplicatively and projected back (w→d).
+
+RG-LRU (Real-Gated Linear Recurrent Unit):
+    r_t = σ(x_t W_a + b_a)          recurrence gate
+    i_t = σ(x_t W_x + b_x)          input gate
+    a_t = exp(−c · softplus(Λ) · r_t)          (c = 8)
+    h_t = a_t ⊙ h_{t−1} + sqrt(1 − a_t²) ⊙ (i_t ⊙ x_t)
+
+Train/prefill evaluates the recurrence with ``lax.associative_scan``
+(log-depth — TPU-friendly); decode keeps an explicit [B, w] state, giving
+O(1) memory per token (why recurrentgemma is eligible for long_500k).
+
+Simplification vs the official model: gate projections are dense [w, w]
+rather than block-diagonal-by-head (noted in DESIGN.md; capacity superset).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+from repro.models.config import ModelConfig
+
+_C = 8.0
+
+
+class RecCache(NamedTuple):
+    conv: jax.Array  # [B, K-1, w]
+    h: jax.Array  # [B, w] fp32
+
+
+def _width(cfg: ModelConfig) -> int:
+    return cfg.griffin.lru_width or cfg.d_model
+
+
+def init_recurrent(pb: layers.ParamBuilder, cfg: ModelConfig):
+    d, w = cfg.d_model, _width(cfg)
+    K = cfg.griffin.conv_width
+    return {
+        "proj_rec": pb.dense((d, w), ("embed", "lru")),
+        "proj_gate": pb.dense((d, w), ("embed", "lru")),
+        "conv_w": pb.dense((K, w), ("conv", "lru"), fan_in=K),
+        "conv_b": pb.zeros((w,), ("lru",)),
+        "w_a": pb.dense((w, w), ("lru", "lru")),
+        "b_a": pb.zeros((w,), ("lru",)),
+        "w_x": pb.dense((w, w), ("lru", "lru")),
+        "b_x": pb.zeros((w,), ("lru",)),
+        # Λ init so that a ∈ (0.9, 0.999) at r=1 — standard griffin init.
+        "lam": pb.value(
+            jnp.log(jnp.expm1(-jnp.log(jnp.linspace(0.9, 0.999, w)) / _C)),
+            ("lru",),
+        ),
+        "proj_out": pb.dense((w, d), ("lru", "embed")),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    K = w.shape[0]
+    out = x * w[K - 1]
+    for i in range(1, K):
+        shifted = jnp.pad(x, ((0, 0), (i, 0), (0, 0)))[:, : x.shape[1]]
+        out = out + shifted * w[K - 1 - i]
+    return out + b
+
+
+def _gates(params, x: jax.Array):
+    """x [..., w] fp32 → (a, gated input) per RG-LRU equations."""
+    r = jax.nn.sigmoid(x @ params["w_a"].astype(jnp.float32) + params["b_a"].astype(jnp.float32))
+    i = jax.nn.sigmoid(x @ params["w_x"].astype(jnp.float32) + params["b_x"].astype(jnp.float32))
+    log_a = -_C * jax.nn.softplus(params["lam"].astype(jnp.float32)) * r
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * (i * x)
+    return a, b
+
+
+def rec_block_full(params, xin: jax.Array, cfg: ModelConfig):
+    """Train/prefill.  xin [B, L, d] → (y [B, L, d], final RecCache)."""
+    gate = jax.nn.gelu(xin @ params["proj_gate"], approximate=True)
+    xr_raw = xin @ params["proj_rec"]
+    xr = _causal_conv(xr_raw, params["conv_w"], params["conv_b"])
+    a, b = _gates(params, xr.astype(jnp.float32))
+
+    # h_t = a_t h_{t-1} + b_t  via associative scan over time.
+    def combine(left, right):
+        a1, b1 = left
+        a2, b2 = right
+        return a1 * a2, a2 * b1 + b2
+
+    _, h_all = jax.lax.associative_scan(combine, (a, b), axis=1)
+    y = (h_all.astype(xin.dtype) * gate) @ params["proj_out"]
+
+    K = cfg.griffin.conv_width
+    conv_state = xr_raw[:, -(K - 1):, :]
+    pad = K - 1 - conv_state.shape[1]
+    if pad > 0:
+        conv_state = jnp.pad(conv_state, ((0, 0), (pad, 0), (0, 0)))
+    return y, RecCache(conv=conv_state, h=h_all[:, -1].astype(jnp.float32))
+
+
+def init_rec_cache(cfg: ModelConfig, batch: int, dtype) -> RecCache:
+    w, K = _width(cfg), cfg.griffin.conv_width
+    return RecCache(
+        conv=jnp.zeros((batch, K - 1, w), dtype),
+        h=jnp.zeros((batch, w), jnp.float32),
+    )
+
+
+def rec_block_decode(params, xin: jax.Array, cfg: ModelConfig, cache: RecCache):
+    """One token.  xin [B, 1, d] → (y [B, 1, d], new cache)."""
+    gate = jax.nn.gelu(xin @ params["proj_gate"], approximate=True)  # [B,1,w]
+    xr_raw = xin @ params["proj_rec"]  # [B, 1, w]
+    window = jnp.concatenate([cache.conv, xr_raw], axis=1)  # [B, K, w]
+    xr = jnp.einsum("bkw,kw->bw", window, params["conv_w"]) + params["conv_b"]
+    a, b = _gates(params, xr.astype(jnp.float32))  # [B, w]
+    h = a * cache.h + b
+    y = (h[:, None, :].astype(xin.dtype) * gate) @ params["proj_out"]
+    return y, RecCache(conv=window[:, 1:, :], h=h)

@@ -1,0 +1,196 @@
+"""Shared building blocks: params-with-axes, norms, RoPE/M-RoPE, MLPs.
+
+Parameters are built through :class:`Param` leaves carrying *logical axis
+names* alongside the value; ``split_params`` separates the two trees so the
+partitioner (``repro.dist.partition``) can map logical axes → mesh axes
+without fragile path-regex matching.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Param(NamedTuple):
+    value: jax.Array
+    axes: tuple  # logical axis names, len == value.ndim
+
+
+def is_param(x) -> bool:
+    return isinstance(x, Param)
+
+
+def split_params(tree):
+    """Param-tree → (values-tree, axes-tree)."""
+    values = jax.tree_util.tree_map(lambda p: p.value, tree, is_leaf=is_param)
+    axes = jax.tree_util.tree_map(lambda p: p.axes, tree, is_leaf=is_param)
+    return values, axes
+
+
+def stack_params(trees: list):
+    """Stack per-period Param-trees along a new leading 'layers' axis."""
+    def _stack(*ps):
+        v0 = ps[0].value
+        if isinstance(v0, jax.ShapeDtypeStruct):  # abstract (dry-run) path
+            stacked = jax.ShapeDtypeStruct((len(ps),) + v0.shape, v0.dtype)
+        else:
+            stacked = jnp.stack([p.value for p in ps])
+        return Param(stacked, ("layers",) + ps[0].axes)
+
+    return jax.tree_util.tree_map(_stack, *trees, is_leaf=is_param)
+
+
+def normal_init(key, shape, scale, dtype):
+    return (scale * jax.random.normal(key, shape, dtype=jnp.float32)).astype(dtype)
+
+
+class ParamBuilder:
+    """Splits keys and materializes Param leaves with sane default scales.
+
+    ``abstract=True`` yields ShapeDtypeStruct values (zero allocation, no
+    RNG) — the dry-run path for full-size configs.
+    """
+
+    def __init__(self, key: jax.Array | None, dtype=jnp.bfloat16, abstract: bool = False):
+        self._key = key
+        self.dtype = dtype
+        self.abstract = abstract
+
+    def _next(self):
+        if self.abstract:
+            return None
+        self._key, sub = jax.random.split(self._key)
+        return sub
+
+    def dense(self, shape, axes, fan_in: int | None = None, scale=None):
+        if self.abstract:
+            return Param(jax.ShapeDtypeStruct(tuple(shape), self.dtype), axes)
+        fan_in = fan_in if fan_in is not None else shape[0]
+        scale = scale if scale is not None else 1.0 / math.sqrt(max(1, fan_in))
+        return Param(normal_init(self._next(), shape, scale, self.dtype), axes)
+
+    def embed(self, shape, axes, scale=0.02):
+        if self.abstract:
+            return Param(jax.ShapeDtypeStruct(tuple(shape), self.dtype), axes)
+        return Param(normal_init(self._next(), shape, scale, self.dtype), axes)
+
+    def zeros(self, shape, axes, dtype=None):
+        dt = jnp.dtype(dtype or self.dtype)
+        if self.abstract:
+            return Param(jax.ShapeDtypeStruct(tuple(shape), dt), axes)
+        return Param(jnp.zeros(shape, dt), axes)
+
+    def value(self, arr, axes):
+        if self.abstract:
+            return Param(jax.ShapeDtypeStruct(tuple(arr.shape), self.dtype), axes)
+        return Param(arr.astype(self.dtype), axes)
+
+    def fork(self) -> "ParamBuilder":
+        return ParamBuilder(self._next(), self.dtype, self.abstract)
+
+
+# ---------------------------------------------------------------------------
+# Norms & misc
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x: jax.Array, weight: jax.Array, eps: float = 1e-6) -> jax.Array:
+    """(1 + w) convention (init w = 0); accumulation in fp32."""
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * (1.0 + weight.astype(jnp.float32))).astype(dtype)
+
+
+def init_rms_norm(pb: ParamBuilder, dim: int, axis: str = "embed"):
+    return {"scale": pb.zeros((dim,), (axis,), dtype=jnp.float32)}
+
+
+def softcap(x: jax.Array, cap: float | None) -> jax.Array:
+    if cap is None:
+        return x
+    return cap * jnp.tanh(x / cap)
+
+
+# ---------------------------------------------------------------------------
+# RoPE / M-RoPE
+# ---------------------------------------------------------------------------
+
+
+def _rope_inv_freq(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim)
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Standard rotate-half RoPE.  x [..., S, H, hd], positions [..., S]."""
+    hd = x.shape[-1]
+    inv = _rope_inv_freq(hd, theta)  # [hd/2]
+    angles = positions[..., None].astype(jnp.float32) * inv  # [..., S, hd/2]
+    angles = angles[..., None, :]  # broadcast over heads
+    sin, cos = jnp.sin(angles), jnp.cos(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(
+    x: jax.Array,
+    positions: jax.Array,
+    theta: float,
+    sections: tuple[int, int, int],
+) -> jax.Array:
+    """Multimodal RoPE (qwen2-vl): positions [3, ..., S] — (t, h, w) streams.
+
+    The hd/2 frequency dims are split into ``sections`` (t/h/w); each slice
+    rotates with its own position stream.  For text, all three streams are
+    identical and M-RoPE degenerates to standard RoPE.
+    """
+    hd = x.shape[-1]
+    if sum(sections) != hd // 2:
+        raise ValueError(f"mrope sections {sections} must sum to head_dim/2={hd // 2}")
+    inv = _rope_inv_freq(hd, theta)  # [hd/2]
+    # Select which position stream drives each frequency dim.
+    sel = jnp.concatenate(
+        [jnp.full((s,), i, dtype=jnp.int32) for i, s in enumerate(sections)]
+    )  # [hd/2]
+    pos = positions.astype(jnp.float32)  # [3, ..., S]
+    pos_per_freq = jnp.take(pos, sel, axis=0)  # [hd/2, ..., S] — stream per freq
+    pos_per_freq = jnp.moveaxis(pos_per_freq, 0, -1)  # [..., S, hd/2]
+    angles = (pos_per_freq * inv)[..., None, :]  # [..., S, 1, hd/2]
+    sin, cos = jnp.sin(angles), jnp.cos(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+
+def init_mlp(pb: ParamBuilder, d_model: int, d_ff: int, kind: str):
+    if kind in ("swiglu", "geglu"):
+        return {
+            "gate": pb.dense((d_model, d_ff), ("embed", "ffn")),
+            "up": pb.dense((d_model, d_ff), ("embed", "ffn")),
+            "down": pb.dense((d_ff, d_model), ("ffn", "embed")),
+        }
+    if kind == "gelu":
+        return {
+            "up": pb.dense((d_model, d_ff), ("embed", "ffn")),
+            "down": pb.dense((d_ff, d_model), ("ffn", "embed")),
+        }
+    raise ValueError(f"unknown mlp kind {kind!r}")
+
+
+def mlp_fwd(params, x: jax.Array, kind: str) -> jax.Array:
+    if kind in ("swiglu", "geglu"):
+        act = jax.nn.silu if kind == "swiglu" else lambda g: jax.nn.gelu(g, approximate=True)
+        g = act(x @ params["gate"])
+        return (g * (x @ params["up"])) @ params["down"]
+    return jax.nn.gelu(x @ params["up"], approximate=True) @ params["down"]

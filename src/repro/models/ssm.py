@@ -1,0 +1,219 @@
+"""Mamba-2 SSD (state-space duality) blocks — chunked train/prefill path and
+O(1)-state decode path.
+
+The chunked algorithm (arXiv:2405.21060 §6) splits the sequence into chunks
+of Q tokens: within a chunk the output is an attention-like quadratic term
+(`Y_diag`), across chunks a linear recurrence over per-chunk states carries
+the long-range contribution (`Y_off`).  Decode keeps the recurrent view:
+``h ← exp(dt·A)·h + dt·(B ⊗ x)``; ``y = C·h + D·x`` — O(state) per token,
+which is what makes mamba2 eligible for the long_500k shape.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+from repro.models.config import ModelConfig
+
+
+class SSMCache(NamedTuple):
+    conv: jax.Array  # [B, conv_w-1, conv_dim] — ring of past conv inputs
+    h: jax.Array  # [B, H, P, N] — SSD state
+
+
+def _dims(cfg: ModelConfig):
+    s = cfg.ssm
+    d_in = s.expand * cfg.d_model
+    H = d_in // s.head_dim
+    conv_dim = d_in + 2 * s.n_groups * s.state_size
+    return s, d_in, H, conv_dim
+
+
+def init_ssd(pb: layers.ParamBuilder, cfg: ModelConfig):
+    s, d_in, H, conv_dim = _dims(cfg)
+    d = cfg.d_model
+    proj_out = 2 * d_in + 2 * s.n_groups * s.state_size + H  # z, xBC, dt
+    return {
+        "in_proj": pb.dense((d, proj_out), ("embed", "inner")),
+        "conv_w": pb.dense((s.conv_width, conv_dim), ("conv", "inner"), fan_in=s.conv_width),
+        "conv_b": pb.zeros((conv_dim,), ("inner",)),
+        "A_log": pb.value(jnp.log(jnp.linspace(1.0, 16.0, H)), ("heads",)),
+        "D": pb.value(jnp.ones((H,)), ("heads",)),
+        "dt_bias": pb.value(jnp.log(jnp.expm1(jnp.full((H,), 0.01))), ("heads",)),
+        "norm": pb.zeros((d_in,), ("inner",), dtype=jnp.float32),
+        "out_proj": pb.dense((d_in, d), ("inner", "embed")),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv via shifted adds.  x [B, L, C], w [K, C]."""
+    K = w.shape[0]
+    out = x * w[K - 1]
+    for i in range(1, K):
+        shifted = jnp.pad(x, ((0, 0), (i, 0), (0, 0)))[:, : x.shape[1]]
+        out = out + shifted * w[K - 1 - i]
+    return jax.nn.silu(out + b)
+
+
+def _segsum(a: jax.Array) -> jax.Array:
+    """a [..., Q] → [..., Q, Q]: s[i,j] = Σ_{j<k<=i} a_k (−inf for i<j)."""
+    Q = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    s = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((Q, Q), bool))
+    return jnp.where(mask, s, -jnp.inf)
+
+
+def _split_proj(cfg: ModelConfig, proj: jax.Array):
+    s, d_in, H, _ = _dims(cfg)
+    gn = s.n_groups * s.state_size
+    z, xBC, dt = jnp.split(proj, [d_in, 2 * d_in + 2 * gn], axis=-1)
+    return z, xBC, dt
+
+
+def _split_xbc(cfg: ModelConfig, xBC: jax.Array):
+    s, d_in, H, _ = _dims(cfg)
+    gn = s.n_groups * s.state_size
+    x, Bm, Cm = jnp.split(xBC, [d_in, d_in + gn], axis=-1)
+    lead = x.shape[:-1]
+    x = x.reshape(*lead, H, s.head_dim)
+    Bm = Bm.reshape(*lead, s.n_groups, s.state_size)
+    Cm = Cm.reshape(*lead, s.n_groups, s.state_size)
+    return x, Bm, Cm
+
+
+def ssd_chunked(
+    x: jax.Array,  # [B, L, H, P]
+    dt: jax.Array,  # [B, L, H] (post-softplus)
+    A: jax.Array,  # [H] (negative)
+    Bm: jax.Array,  # [B, L, G, N]
+    Cm: jax.Array,  # [B, L, G, N]
+    chunk: int,
+    h0: jax.Array | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """Returns (y [B, L, H, P], final state [B, H, P, N])."""
+    B_, L, H, P = x.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    r = H // G
+    if L % chunk:
+        raise ValueError(f"L={L} must be divisible by chunk={chunk}")
+    nc = L // chunk
+
+    f32 = jnp.float32
+    u = (x * dt[..., None]).astype(f32)  # discretized input
+    dA = (dt * A).astype(f32)  # [B, L, H]
+
+    # chunked views
+    uc = u.reshape(B_, nc, chunk, H, P)
+    dAc = dA.reshape(B_, nc, chunk, H)
+    Bc = Bm.reshape(B_, nc, chunk, G, N).astype(f32)
+    Cc = Cm.reshape(B_, nc, chunk, G, N).astype(f32)
+    # expand groups → heads
+    Bh = jnp.repeat(Bc, r, axis=3)  # [B, nc, Q, H, N]
+    Ch = jnp.repeat(Cc, r, axis=3)
+
+    # 1. intra-chunk (attention-like with decay kernel)
+    Lk = jnp.exp(_segsum(jnp.moveaxis(dAc, 3, 2)))  # [B, nc, H, Q, Q]
+    scores = jnp.einsum("bcihn,bcjhn->bchij", Ch, Bh)  # [B, nc, H, Q, Q]
+    y_diag = jnp.einsum("bchij,bcjhp->bcihp", scores * Lk, uc)
+
+    # 2. per-chunk states: S_c = Σ_j exp(Σ_{k>j} dA) B_j ⊗ u_j
+    cums = jnp.cumsum(dAc, axis=2)  # [B, nc, Q, H]
+    decay_to_end = jnp.exp(cums[:, :, -1:, :] - cums)  # [B, nc, Q, H]
+    S = jnp.einsum("bcjh,bcjhn,bcjhp->bchpn", decay_to_end, Bh, uc)
+
+    # 3. inter-chunk recurrence over states
+    chunk_decay = jnp.exp(cums[:, :, -1, :])  # [B, nc, H]
+
+    def scan_fn(h, inp):
+        S_c, g_c = inp
+        h_new = h * g_c[..., None, None] + S_c
+        return h_new, h  # emit state *before* this chunk
+
+    h_init = (
+        jnp.zeros((B_, H, P, N), f32) if h0 is None else h0.astype(f32)
+    )
+    h_last, h_prev = jax.lax.scan(
+        scan_fn,
+        h_init,
+        (jnp.moveaxis(S, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)),
+    )
+    h_prev = jnp.moveaxis(h_prev, 0, 1)  # [B, nc, H, P, N]
+
+    # 4. chunk-start state contribution
+    state_decay = jnp.exp(cums)  # [B, nc, Q, H]
+    y_off = jnp.einsum("bcihn,bchpn,bcih->bcihp", Ch, h_prev, state_decay)
+
+    y = (y_diag + y_off).reshape(B_, L, H, P)
+    return y, h_last
+
+
+def ssd_block_full(params, xin: jax.Array, cfg: ModelConfig):
+    """Train/prefill forward.  xin [B, L, d] → (y [B, L, d], final SSMCache)."""
+    s, d_in, H, conv_dim = _dims(cfg)
+    proj = xin @ params["in_proj"]
+    z, xBC_raw, dt_raw = _split_proj(cfg, proj)
+    xBC = _causal_conv(xBC_raw, params["conv_w"], params["conv_b"])
+    x, Bm, Cm = _split_xbc(cfg, xBC)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+    y, h = ssd_chunked(x, dt, A, Bm, Cm, min(cfg.ssm.chunk_size, xin.shape[1]))
+    y = y + params["D"].astype(jnp.float32)[:, None] * x.astype(jnp.float32)
+    y = y.reshape(*xin.shape[:2], d_in)
+    y = layers.rms_norm(
+        (y * jax.nn.silu(z.astype(jnp.float32))).astype(xin.dtype), params["norm"]
+    )
+    out = y @ params["out_proj"]
+    conv_state = xBC_raw[:, -(s.conv_width - 1):, :]
+    pad = s.conv_width - 1 - conv_state.shape[1]
+    if pad > 0:
+        conv_state = jnp.pad(conv_state, ((0, 0), (pad, 0), (0, 0)))
+    return out, SSMCache(conv=conv_state.astype(xin.dtype), h=h.astype(jnp.float32))
+
+
+def init_ssm_cache(cfg: ModelConfig, batch: int, dtype) -> SSMCache:
+    s, d_in, H, conv_dim = _dims(cfg)
+    return SSMCache(
+        conv=jnp.zeros((batch, s.conv_width - 1, conv_dim), dtype),
+        h=jnp.zeros((batch, H, s.head_dim, s.state_size), jnp.float32),
+    )
+
+
+def ssd_block_decode(params, xin: jax.Array, cfg: ModelConfig, cache: SSMCache):
+    """One-token decode.  xin [B, 1, d] → (y [B, 1, d], new cache)."""
+    s, d_in, H, conv_dim = _dims(cfg)
+    proj = xin @ params["in_proj"]
+    z, xBC_raw, dt_raw = _split_proj(cfg, proj)
+
+    # conv over ring state ++ current input
+    window = jnp.concatenate([cache.conv, xBC_raw], axis=1)  # [B, K, C]
+    w = params["conv_w"]
+    conv_out = jnp.einsum("bkc,kc->bc", window, w) + params["conv_b"]
+    xBC = jax.nn.silu(conv_out)[:, None, :]  # [B, 1, C]
+    new_conv = window[:, 1:, :]
+
+    x, Bm, Cm = _split_xbc(cfg, xBC)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])  # [B,1,H]
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+    r = H // s.n_groups
+
+    x1 = x[:, 0].astype(jnp.float32)  # [B, H, P]
+    B1 = jnp.repeat(Bm[:, 0].astype(jnp.float32), r, axis=1)  # [B, H, N]
+    C1 = jnp.repeat(Cm[:, 0].astype(jnp.float32), r, axis=1)
+    dt1 = dt[:, 0]  # [B, H]
+
+    g = jnp.exp(dt1 * A)  # [B, H]
+    h = cache.h * g[..., None, None] + jnp.einsum(
+        "bh,bhn,bhp->bhpn", dt1, B1, x1
+    )
+    y = jnp.einsum("bhpn,bhn->bhp", h, C1) + params["D"].astype(jnp.float32)[:, None] * x1
+    y = y.reshape(xin.shape[0], 1, d_in)
+    y = layers.rms_norm(
+        (y * jax.nn.silu(z.astype(jnp.float32))).astype(xin.dtype), params["norm"]
+    )
+    out = y @ params["out_proj"]
+    return out, SSMCache(conv=new_conv, h=h)

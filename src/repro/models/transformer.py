@@ -1,0 +1,425 @@
+"""The decoder stack: init + train/prefill/decode for every assigned arch.
+
+Layer heterogeneity (gemma2 local/global alternation, griffin rec-rec-attn)
+is handled by scanning over *super-blocks* — one period of
+``cfg.layer_pattern`` per scan step with stacked params — keeping the HLO
+compact for 512-device compiles; a non-divisible tail is unrolled.
+
+Modes:
+  * train   — full sequence, loss-ready hidden states (no caches)
+  * prefill — full sequence, returns per-layer caches + last hidden
+  * decode  — one token against caches at absolute position ``t``
+
+Modality stubs (assignment rules): ``input_mode == "embeds"`` archs
+(qwen2-vl, musicgen) consume precomputed frame/patch embeddings [B, S, d]
+from ``input_specs()`` instead of token ids.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention, griffin, layers, moe, ssm
+from repro.models.config import ModelConfig
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+
+def _init_block(pb: layers.ParamBuilder, cfg: ModelConfig, kind: str):
+    p: dict[str, Any] = {"pre_norm": layers.init_rms_norm(pb, cfg.d_model)}
+    if kind.startswith("attn"):
+        p["core"] = attention.init_attention(pb, cfg)
+    elif kind == "rec":
+        p["core"] = griffin.init_recurrent(pb, cfg)
+    elif kind == "ssd":
+        p["core"] = ssm.init_ssd(pb, cfg)
+    else:
+        raise ValueError(f"unknown layer kind {kind!r}")
+    if cfg.post_norm:
+        p["post_norm"] = layers.init_rms_norm(pb, cfg.d_model)
+
+    if kind != "ssd":  # mamba2 blocks have no FFN sub-layer
+        p["pre_mlp_norm"] = layers.init_rms_norm(pb, cfg.d_model)
+        if cfg.moe is not None:
+            p["moe"] = moe.init_moe(pb, cfg)
+            if cfg.moe.dense_residual:
+                p["mlp"] = layers.init_mlp(pb, cfg.d_model, cfg.d_ff, cfg.mlp_kind)
+        else:
+            p["mlp"] = layers.init_mlp(pb, cfg.d_model, cfg.d_ff, cfg.mlp_kind)
+        if cfg.post_norm:
+            p["post_mlp_norm"] = layers.init_rms_norm(pb, cfg.d_model)
+    return p
+
+
+def _init_superblock(pb: layers.ParamBuilder, cfg: ModelConfig):
+    return {
+        f"block{i}": _init_block(pb.fork(), cfg, kind)
+        for i, kind in enumerate(cfg.layer_pattern)
+    }
+
+
+def init_model(cfg: ModelConfig, key: jax.Array | None, abstract: bool = False):
+    """Returns a Param-tree (use ``layers.split_params`` for values/axes)."""
+    dtype = jnp.dtype(cfg.dtype)
+    pb = layers.ParamBuilder(key, dtype, abstract=abstract)
+    params: dict[str, Any] = {
+        "embed": pb.embed((cfg.vocab_size, cfg.d_model), ("vocab", "embed")),
+        "final_norm": layers.init_rms_norm(pb, cfg.d_model),
+    }
+    if not cfg.tie_embeddings:
+        params["unembed"] = pb.dense(
+            (cfg.d_model, cfg.vocab_size), ("embed", "vocab")
+        )
+    if cfg.n_periods > 0:
+        params["layers"] = layers.stack_params(
+            [_init_superblock(pb.fork(), cfg) for _ in range(cfg.n_periods)]
+        )
+    if cfg.tail_pattern:
+        params["tail"] = [
+            _init_block(pb.fork(), cfg, kind) for kind in cfg.tail_pattern
+        ]
+    return params
+
+
+def abstract_params(cfg: ModelConfig, seed: int = 0):
+    """(ShapeDtypeStruct values, axes) without allocating — for the dry-run."""
+    tree = init_model(cfg, key=None, abstract=True)
+    return layers.split_params(tree)
+
+
+def init_params(cfg: ModelConfig, seed: int = 0):
+    tree = init_model(cfg, jax.random.key(seed))
+    return layers.split_params(tree)
+
+
+# ---------------------------------------------------------------------------
+# Caches
+# ---------------------------------------------------------------------------
+
+
+def _init_layer_cache(cfg: ModelConfig, kind: str, batch: int, max_len: int, dtype):
+    if kind.startswith("attn"):
+        return attention.init_cache(cfg, kind, batch, max_len, dtype)
+    if kind == "rec":
+        return griffin.init_rec_cache(cfg, batch, dtype)
+    if kind == "ssd":
+        return ssm.init_ssm_cache(cfg, batch, dtype)
+    raise ValueError(kind)
+
+
+def _layer_cache_axes(cfg: ModelConfig, kind: str):
+    """Logical axes mirroring ``_init_layer_cache`` leaf-for-leaf."""
+    if kind.startswith("attn"):
+        # Cache sequence dim shards over 'model' (sequence-parallel KV):
+        # at 32k+ contexts the cache dwarfs per-step attention math, and
+        # seq always divides the model axis where GQA kv-heads often don't.
+        return attention.KVCache(
+            k=("batch", "seq_kv", "kv", "head_dim"),
+            v=("batch", "seq_kv", "kv", "head_dim"),
+            pos=("batch", None),
+        )
+    if kind == "rec":
+        return griffin.RecCache(conv=("batch", "conv", "lru"), h=("batch", "lru"))
+    if kind == "ssd":
+        return ssm.SSMCache(conv=("batch", "conv", "inner"), h=("batch", "heads", None, None))
+    raise ValueError(kind)
+
+
+def cache_axes(cfg: ModelConfig):
+    """Logical-axes tree matching ``init_caches`` (stacked dims → 'layers')."""
+    def one_superblock(stacked: bool):
+        pre = ("layers",) if stacked else ()
+        return {
+            f"block{i}": jax.tree_util.tree_map(
+                lambda ax: pre + ax,
+                _layer_cache_axes(cfg, kind),
+                is_leaf=lambda x: isinstance(x, tuple) and all(
+                    isinstance(e, (str, type(None))) for e in x
+                ),
+            )
+            for i, kind in enumerate(cfg.layer_pattern)
+        }
+
+    axes: dict[str, Any] = {}
+    if cfg.n_periods > 0:
+        axes["layers"] = one_superblock(stacked=True)
+    if cfg.tail_pattern:
+        axes["tail"] = [
+            jax.tree_util.tree_map(
+                lambda ax: ax,
+                _layer_cache_axes(cfg, kind),
+                is_leaf=lambda x: isinstance(x, tuple),
+            )
+            for kind in cfg.tail_pattern
+        ]
+    return axes
+
+
+def init_caches(cfg: ModelConfig, batch: int, max_len: int):
+    """Cache pytree matching the scan structure: stacked + tail."""
+    dtype = jnp.dtype(cfg.dtype)
+
+    def one_superblock():
+        return {
+            f"block{i}": _init_layer_cache(cfg, kind, batch, max_len, dtype)
+            for i, kind in enumerate(cfg.layer_pattern)
+        }
+
+    caches: dict[str, Any] = {}
+    if cfg.n_periods > 0:
+        caches["layers"] = jax.tree_util.tree_map(
+            lambda *xs: jnp.stack(xs), *[one_superblock() for _ in range(cfg.n_periods)]
+        )
+    if cfg.tail_pattern:
+        caches["tail"] = [
+            _init_layer_cache(cfg, kind, batch, max_len, dtype)
+            for kind in cfg.tail_pattern
+        ]
+    return caches
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+
+def _block_apply(p, x, cfg: ModelConfig, kind: str, rope_pos, mode, cache, t, shard,
+                 valid_from=None):
+    """One layer.  Returns (x, new_cache, aux)."""
+    exact_moe = mode == "decode"  # no capacity drops for single-token decode
+    aux = jnp.zeros((), jnp.float32)
+    h = layers.rms_norm(x, p["pre_norm"]["scale"])
+    if kind.startswith("attn"):
+        if mode == "train":
+            y, new_cache = attention.attn_full(
+                p["core"], h, cfg, kind, rope_pos, shard=shard
+            ), None
+        elif mode == "prefill":
+            y, new_cache = attention.attn_prefill(
+                p["core"], h, cfg, kind, rope_pos, cache, shard=shard,
+                valid_from=valid_from,
+            )
+        else:
+            y, new_cache = attention.attn_decode(p["core"], h, cfg, kind, rope_pos, cache, t)
+    elif kind == "rec":
+        if mode == "decode":
+            y, new_cache = griffin.rec_block_decode(p["core"], h, cfg, cache)
+        else:
+            y, full_cache = griffin.rec_block_full(p["core"], h, cfg)
+            new_cache = full_cache if mode == "prefill" else None
+    elif kind == "ssd":
+        if mode == "decode":
+            y, new_cache = ssm.ssd_block_decode(p["core"], h, cfg, cache)
+        else:
+            y, full_cache = ssm.ssd_block_full(p["core"], h, cfg)
+            new_cache = full_cache if mode == "prefill" else None
+    else:
+        raise ValueError(kind)
+    if cfg.post_norm:
+        y = layers.rms_norm(y, p["post_norm"]["scale"])
+    x = x + y
+
+    if kind != "ssd":
+        h = layers.rms_norm(x, p["pre_mlp_norm"]["scale"])
+        if cfg.moe is not None:
+            y, moe_aux = moe.moe_fwd(p["moe"], h, cfg, shard, exact=exact_moe)
+            aux = aux + moe_aux
+            if cfg.moe.dense_residual:
+                y = y + layers.mlp_fwd(p["mlp"], h, cfg.mlp_kind)
+        else:
+            y = layers.mlp_fwd(p["mlp"], h, cfg.mlp_kind)
+        if cfg.post_norm:
+            y = layers.rms_norm(y, p["post_mlp_norm"]["scale"])
+        x = x + y
+    if mode == "train":
+        new_cache = cache  # pass through (None)
+    return x, new_cache, aux
+
+
+def _superblock_apply(p, x, cfg, rope_pos, mode, caches, t, shard, valid_from=None):
+    new_caches = {} if caches is not None else None
+    aux = jnp.zeros((), jnp.float32)
+    for i, kind in enumerate(cfg.layer_pattern):
+        c = caches[f"block{i}"] if caches is not None else None
+        x, nc, a = _block_apply(p[f"block{i}"], x, cfg, kind, rope_pos, mode, c, t,
+                                shard, valid_from)
+        aux = aux + a
+        if new_caches is not None:
+            new_caches[f"block{i}"] = nc
+    if shard is not None:
+        x = shard(x, "batch", None, None)
+    return x, new_caches, aux
+
+
+def forward_hidden(
+    params,
+    cfg: ModelConfig,
+    inputs: jax.Array,
+    *,
+    mode: str,
+    rope_positions=None,
+    caches=None,
+    t=None,
+    shard=None,
+    remat: bool = True,
+    valid_from=None,
+):
+    """inputs: token ids [B, S] or embeds [B, S, d].  Returns
+    (hidden [B, S, d], new_caches, aux)."""
+    dtype = jnp.dtype(cfg.dtype)
+    if cfg.input_mode == "embeds" and inputs.ndim == 3:
+        x = inputs.astype(dtype)
+    else:
+        x = params["embed"][inputs].astype(dtype)
+        if cfg.emb_scale:
+            x = x * jnp.asarray(cfg.d_model**0.5, dtype)
+    if shard is not None:
+        x = shard(x, "batch", None, None)
+
+    B, S = x.shape[0], x.shape[1]
+    if rope_positions is None:
+        base = jnp.arange(S, dtype=jnp.int32)[None, :] if mode != "decode" else (
+            jnp.full((B, 1), t, dtype=jnp.int32)
+        )
+        rope_positions = (
+            jnp.broadcast_to(base, (3, B, S)) if cfg.rope_kind == "mrope" else
+            jnp.broadcast_to(base, (B, S))
+        )
+
+    aux_total = jnp.zeros((), jnp.float32)
+    if cfg.n_periods > 0:
+        stacked = params["layers"]
+        stacked_caches = caches["layers"] if caches is not None else None
+
+        def body(carry, xs):
+            xc, auxc = carry
+            if stacked_caches is not None:
+                p, c = xs
+            else:
+                p, c = xs, None
+            xc, nc, a = _superblock_apply(p, xc, cfg, rope_positions, mode, c, t, shard,
+                                          valid_from)
+            return (xc, auxc + a), nc
+
+        if remat and mode == "train":
+            body = jax.checkpoint(
+                body, policy=jax.checkpoint_policies.nothing_saveable
+            )
+        xs = (stacked, stacked_caches) if stacked_caches is not None else stacked
+        (x, aux_total), new_stacked = jax.lax.scan(body, (x, aux_total), xs)
+    else:
+        new_stacked = None
+
+    new_tail = []
+    if cfg.tail_pattern:
+        tail_caches = caches["tail"] if caches is not None else [None] * len(cfg.tail_pattern)
+        for p, kind, c in zip(params["tail"], cfg.tail_pattern, tail_caches):
+            x, nc, a = _block_apply(p, x, cfg, kind, rope_positions, mode, c, t,
+                                    shard, valid_from)
+            aux_total = aux_total + a
+            new_tail.append(nc)
+
+    x = layers.rms_norm(x, params["final_norm"]["scale"])
+
+    new_caches = None
+    if caches is not None:
+        new_caches = {}
+        if new_stacked is not None:
+            new_caches["layers"] = new_stacked
+        if cfg.tail_pattern:
+            new_caches["tail"] = new_tail
+    return x, new_caches, aux_total
+
+
+# ---------------------------------------------------------------------------
+# Heads / losses
+# ---------------------------------------------------------------------------
+
+
+def _unembed_matrix(params, cfg: ModelConfig):
+    return params["embed"].T if cfg.tie_embeddings else params["unembed"]
+
+
+def logits_for(params, cfg: ModelConfig, hidden: jax.Array, shard=None) -> jax.Array:
+    w = _unembed_matrix(params, cfg)
+    logits = jnp.einsum("bsd,dv->bsv", hidden, w, preferred_element_type=jnp.float32)
+    logits = layers.softcap(logits, cfg.final_logit_softcap)
+    if shard is not None:
+        logits = shard(logits, "batch", None, "vocab")
+    return logits
+
+
+def lm_loss(
+    params,
+    cfg: ModelConfig,
+    hidden: jax.Array,
+    labels: jax.Array,
+    *,
+    shard=None,
+    seq_chunk: int = 512,
+) -> jax.Array:
+    """Chunked-over-sequence xent so [B, S, V] never materializes whole."""
+    B, S, d = hidden.shape
+    chunk = min(seq_chunk, S)
+    n = S // chunk
+    h = hidden[:, : n * chunk].reshape(B, n, chunk, d).swapaxes(0, 1)
+    y = labels[:, : n * chunk].reshape(B, n, chunk).swapaxes(0, 1)
+
+    def step(carry, xs):
+        h_c, y_c = xs
+        logits = logits_for(params, cfg, h_c, shard)  # [B, chunk, V] fp32
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, y_c[..., None], axis=-1)[..., 0]
+        nll = lse - gold
+        return carry + nll.sum(), None
+
+    total, _ = jax.lax.scan(step, jnp.zeros((), jnp.float32), (h, y))
+    # remainder (if S % chunk) — rare; handled unchunked
+    if S % chunk:
+        logits = logits_for(params, cfg, hidden[:, n * chunk :], shard)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(
+            logits, labels[:, n * chunk :][..., None], axis=-1
+        )[..., 0]
+        total = total + (lse - gold).sum()
+    return total / (B * S)
+
+
+def train_loss_fn(
+    params, cfg: ModelConfig, batch: dict, shard=None, aux_weight: float = 0.01
+):
+    hidden, _, aux = forward_hidden(
+        params, cfg, batch["inputs"], mode="train",
+        rope_positions=batch.get("positions"), shard=shard,
+    )
+    loss = lm_loss(params, cfg, hidden, batch["labels"], shard=shard)
+    return loss + aux_weight * aux, {"xent": loss, "moe_aux": aux}
+
+
+def prefill(params, cfg: ModelConfig, inputs, caches, rope_positions=None, shard=None,
+            valid_from=None):
+    hidden, caches, _ = forward_hidden(
+        params, cfg, inputs, mode="prefill",
+        rope_positions=rope_positions, caches=caches, shard=shard,
+        valid_from=valid_from,
+    )
+    logits = logits_for(params, cfg, hidden[:, -1:, :], shard)
+    return logits, caches
+
+
+def decode_step(params, cfg: ModelConfig, inputs, t, caches, rope_positions=None, shard=None):
+    """inputs: [B, 1] token ids or [B, 1, d] embeds; t: absolute position."""
+    hidden, caches, _ = forward_hidden(
+        params, cfg, inputs, mode="decode",
+        rope_positions=rope_positions, caches=caches, t=t, shard=shard,
+    )
+    logits = logits_for(params, cfg, hidden, shard)
+    return logits, caches

@@ -1,0 +1,88 @@
+"""Batched serving engine: prefill once, decode in lock-step slots.
+
+A deliberately compact continuous-batching core: requests are padded into a
+fixed slot batch (SPMD-friendly static shapes), prefilled together, then
+decoded token-synchronously with per-slot stop tracking.  greedy or
+temperature sampling.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import transformer
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass
+class ServeConfig:
+    max_len: int = 1024
+    batch_slots: int = 8
+    greedy: bool = True
+    temperature: float = 1.0
+    eos_id: int | None = None
+
+
+class ServeEngine:
+    def __init__(self, cfg: ModelConfig, params, scfg: ServeConfig, partitioner=None):
+        self.cfg = cfg
+        self.params = params
+        self.scfg = scfg
+        shard = partitioner if (partitioner and partitioner.mesh) else None
+
+        def _prefill(params, tokens, caches, valid_from):
+            return transformer.prefill(params, cfg, tokens, caches, shard=shard,
+                                       valid_from=valid_from)
+
+        def _decode(params, tok, t, caches):
+            return transformer.decode_step(params, cfg, tok, t, caches, shard=shard)
+
+        self._prefill = jax.jit(_prefill)
+        self._decode = jax.jit(_decode)
+
+    def _sample(self, logits: jax.Array, key) -> jax.Array:
+        if self.scfg.greedy:
+            return jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
+        return jax.random.categorical(
+            key, logits[:, -1, :] / self.scfg.temperature
+        ).astype(jnp.int32)
+
+    def generate(self, prompts: list[list[int]], max_new: int, seed: int = 0):
+        """Greedy/temperature generation for a list of prompts."""
+        scfg = self.scfg
+        B = scfg.batch_slots
+        if len(prompts) > B:
+            raise ValueError(f"{len(prompts)} prompts > {B} slots")
+        plen = max(len(p) for p in prompts)
+        toks = np.zeros((B, plen), np.int32)
+        valid_from = np.full((B,), plen, np.int32)
+        for i, p in enumerate(prompts):
+            toks[i, plen - len(p):] = p  # left-pad so last token aligns
+            valid_from[i] = plen - len(p)
+
+        caches = transformer.init_caches(self.cfg, B, scfg.max_len)
+        logits, caches = self._prefill(
+            self.params, jnp.asarray(toks), caches, jnp.asarray(valid_from)
+        )
+        key = jax.random.key(seed)
+        out = [[] for _ in range(B)]
+        done = np.zeros(B, bool)
+        tok = self._sample(logits, key)
+        for step in range(max_new):
+            t = plen + step
+            for i in range(len(prompts)):
+                if not done[i]:
+                    v = int(tok[i])
+                    out[i].append(v)
+                    if scfg.eos_id is not None and v == scfg.eos_id:
+                        done[i] = True
+            if done[: len(prompts)].all() or t >= scfg.max_len - 1:
+                break
+            key, sub = jax.random.split(key)
+            logits, caches = self._decode(self.params, tok[:, None], t, caches)
+            tok = self._sample(logits, sub)
+        return out[: len(prompts)]

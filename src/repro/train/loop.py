@@ -1,0 +1,107 @@
+"""Fault-tolerant training driver.
+
+Responsibilities beyond calling the step:
+  * periodic (optionally async) checkpoints via CheckpointManager;
+  * **restart-on-failure**: any exception in a step (device loss, NaN-guard,
+    injected faults in tests) triggers restore-from-latest + replay — the
+    data pipeline is step-indexed so replayed batches are bit-identical;
+  * **elastic restart**: `resume(mesh=new_mesh)` re-partitions the restored
+    state onto a different mesh shape;
+  * NaN guard: a non-finite loss is treated as a failure (restore + skip).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import logging
+import time
+from typing import Callable
+
+import jax
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+
+log = logging.getLogger("repro.train")
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    total_steps: int
+    ckpt_every: int = 50
+    ckpt_dir: str = "/tmp/repro_ckpt"
+    keep: int = 3
+    async_ckpt: bool = False
+    max_retries: int = 3
+    nan_guard: bool = True
+
+
+class Trainer:
+    def __init__(
+        self,
+        step_fn: Callable,  # (state, batch) -> (state, metrics); jitted by caller
+        init_state_fn: Callable,  # () -> state
+        batch_iter_fn: Callable,  # (start_step) -> iterator of (step, batch)
+        cfg: TrainerConfig,
+        state_shardings=None,
+        fault_hook: Callable | None = None,  # test hook: (step) -> None, may raise
+    ):
+        self.step_fn = step_fn
+        self.init_state_fn = init_state_fn
+        self.batch_iter_fn = batch_iter_fn
+        self.cfg = cfg
+        self.state_shardings = state_shardings
+        self.fault_hook = fault_hook
+        self.ckpt = CheckpointManager(cfg.ckpt_dir, keep=cfg.keep, async_save=cfg.async_ckpt)
+        self.history: list[dict] = []
+        self.n_restarts = 0
+
+    def _fresh_or_restored(self):
+        state = self.init_state_fn()
+        latest = self.ckpt.latest()
+        if latest is not None:
+            state = self.ckpt.restore(state, self.state_shardings, step=latest)
+            start = int(np.asarray(jax.device_get(state["step"])))
+            log.info("restored checkpoint at step %d", start)
+            return state, start
+        return state, 0
+
+    def run(self) -> dict:
+        cfg = self.cfg
+        retries = 0
+        state, start = self._fresh_or_restored()
+        it = self.batch_iter_fn(start)
+        step = start
+        t0 = time.perf_counter()
+        while step < cfg.total_steps:
+            try:
+                data_step, batch = next(it)
+                assert data_step == step, (data_step, step)
+                if self.fault_hook is not None:
+                    self.fault_hook(step)
+                state, metrics = self.step_fn(state, batch)
+                loss = float(np.asarray(jax.device_get(metrics["loss"])))
+                if cfg.nan_guard and not np.isfinite(loss):
+                    raise FloatingPointError(f"non-finite loss at step {step}: {loss}")
+                self.history.append({"step": step, **{k: float(np.asarray(jax.device_get(v))) for k, v in metrics.items()}})
+                step += 1
+                retries = 0
+                if step % cfg.ckpt_every == 0 or step == cfg.total_steps:
+                    self.ckpt.save(step, state)
+            except (Exception,) as e:  # noqa: BLE001 — restart-from-checkpoint path
+                retries += 1
+                self.n_restarts += 1
+                log.warning("step %d failed (%s); restart %d/%d", step, e, retries, cfg.max_retries)
+                if retries > cfg.max_retries:
+                    raise
+                self.ckpt.wait()
+                state, step = self._fresh_or_restored()
+                it = self.batch_iter_fn(step)
+        self.ckpt.wait()
+        return {
+            "final_state": state,
+            "steps": step,
+            "wall_time_s": time.perf_counter() - t0,
+            "n_restarts": self.n_restarts,
+            "history": self.history,
+        }

@@ -1,0 +1,183 @@
+"""Optimizers (AdamW, Adafactor) and LR schedules — no external deps.
+
+AdamW keeps fp32 master params + fp32 (m, v): 14 bytes/param with bf16
+compute params.  Adafactor factors the second moment over the last two dims
+(row/col statistics): ~4.5 bytes/param — what lets arctic-480b-class models
+fit the optimizer state on a 256-chip v5e pod (see EXPERIMENTS.md §Dry-run).
+Optimizer state reuses the params' logical axes, so FSDP/TP sharding of the
+state falls out of the same partitioning rules.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+
+def warmup_cosine(peak_lr: float, warmup: int, total: int) -> Callable:
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = peak_lr * step / max(1, warmup)
+        frac = jnp.clip((step - warmup) / max(1, total - warmup), 0.0, 1.0)
+        cos = peak_lr * 0.5 * (1.0 + jnp.cos(jnp.pi * frac))
+        return jnp.where(step < warmup, warm, cos)
+
+    return lr
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable  # params -> opt_state
+    apply: Callable  # (grads, opt_state, params) -> (new_params, new_opt_state)
+    state_axes: Callable  # params_axes -> opt_state axes tree
+
+
+def adamw(
+    lr_fn: Callable,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.1,
+) -> Optimizer:
+    def init(params):
+        f32 = lambda p: jnp.zeros_like(p, dtype=jnp.float32)
+        return {
+            "step": jnp.zeros((), jnp.int32),
+            "m": jax.tree_util.tree_map(f32, params),
+            "v": jax.tree_util.tree_map(f32, params),
+            # copy=True: fp32 params would otherwise *alias* the master
+            # buffer and break donation (same buffer donated twice).
+            "master": jax.tree_util.tree_map(
+                lambda p: jnp.array(p, dtype=jnp.float32, copy=True), params
+            ),
+        }
+
+    def apply(grads, state, params):
+        step = state["step"] + 1
+        lr = lr_fn(step)
+        b1t = 1.0 - b1 ** step.astype(jnp.float32)
+        b2t = 1.0 - b2 ** step.astype(jnp.float32)
+
+        def upd(g, m, v, master, p):
+            g = g.astype(jnp.float32)
+            m = b1 * m + (1 - b1) * g
+            v = b2 * v + (1 - b2) * jnp.square(g)
+            update = (m / b1t) / (jnp.sqrt(v / b2t) + eps) + weight_decay * master
+            master = master - lr * update
+            return m, v, master, master.astype(p.dtype)
+
+        flat = jax.tree_util.tree_map(
+            upd, grads, state["m"], state["v"], state["master"], params
+        )
+        m = jax.tree_util.tree_map(lambda t: t[0], flat, is_leaf=lambda x: isinstance(x, tuple))
+        v = jax.tree_util.tree_map(lambda t: t[1], flat, is_leaf=lambda x: isinstance(x, tuple))
+        master = jax.tree_util.tree_map(lambda t: t[2], flat, is_leaf=lambda x: isinstance(x, tuple))
+        new_params = jax.tree_util.tree_map(lambda t: t[3], flat, is_leaf=lambda x: isinstance(x, tuple))
+        return new_params, {"step": step, "m": m, "v": v, "master": master}
+
+    def state_axes(params_axes):
+        return {
+            "step": (),
+            "m": params_axes,
+            "v": params_axes,
+            "master": params_axes,
+        }
+
+    return Optimizer(init, apply, state_axes)
+
+
+def _factored_dims(shape) -> tuple[int, int] | None:
+    if len(shape) < 2:
+        return None
+    return len(shape) - 2, len(shape) - 1
+
+
+def adafactor(
+    lr_fn: Callable,
+    decay: float = 0.99,
+    eps: float = 1e-30,
+    clip_rms: float = 1.0,
+    weight_decay: float = 0.0,
+) -> Optimizer:
+    def init(params):
+        def leaf(p):
+            dims = _factored_dims(p.shape)
+            if dims is None:
+                return {"v": jnp.zeros(p.shape, jnp.float32)}
+            r, c = dims
+            row_shape = tuple(s for i, s in enumerate(p.shape) if i != c)
+            col_shape = tuple(s for i, s in enumerate(p.shape) if i != r)
+            return {
+                "vr": jnp.zeros(row_shape, jnp.float32),
+                "vc": jnp.zeros(col_shape, jnp.float32),
+            }
+
+        return {
+            "step": jnp.zeros((), jnp.int32),
+            "v": jax.tree_util.tree_map(leaf, params),
+        }
+
+    def apply(grads, state, params):
+        step = state["step"] + 1
+        lr = lr_fn(step)
+
+        def upd(g, v, p):
+            g = g.astype(jnp.float32)
+            g2 = jnp.square(g) + eps
+            dims = _factored_dims(g.shape)
+            if dims is None:
+                v_new = {"v": decay * v["v"] + (1 - decay) * g2}
+                precond = g * jax.lax.rsqrt(v_new["v"] + eps)
+            else:
+                r, c = dims
+                vr = decay * v["vr"] + (1 - decay) * g2.mean(axis=c)
+                vc = decay * v["vc"] + (1 - decay) * g2.mean(axis=r)
+                v_new = {"vr": vr, "vc": vc}
+                # rank-1 second-moment estimate: V ≈ (vr ⊗ vc) / mean(vr)
+                mean_r = jnp.maximum(vr.mean(axis=-1, keepdims=True), eps)
+                v_est = (vr / mean_r)[..., :, None] * vc[..., None, :]
+                precond = g * jax.lax.rsqrt(v_est + eps)
+            rms = jnp.sqrt(jnp.mean(jnp.square(precond)) + eps)
+            precond = precond / jnp.maximum(1.0, rms / clip_rms)
+            newp = p.astype(jnp.float32) - lr * (precond + weight_decay * p.astype(jnp.float32))
+            return v_new, newp.astype(p.dtype)
+
+        out = jax.tree_util.tree_map(
+            upd, grads, state["v"], params,
+            is_leaf=lambda x: isinstance(x, dict) and set(x) <= {"v", "vr", "vc"},
+        )
+        split_leaf = lambda x: isinstance(x, tuple) and len(x) == 2
+        v = jax.tree_util.tree_map(lambda t: t[0], out, is_leaf=split_leaf)
+        new_params = jax.tree_util.tree_map(lambda t: t[1], out, is_leaf=split_leaf)
+        return new_params, {"step": step, "v": v}
+
+    def state_axes(params_axes):
+        def leaf(ax):
+            if len(ax) < 2:
+                return {"v": ax}
+            r, c = len(ax) - 2, len(ax) - 1
+            return {
+                "vr": tuple(a for i, a in enumerate(ax) if i != c),
+                "vc": tuple(a for i, a in enumerate(ax) if i != r),
+            }
+
+        is_axes = lambda x: isinstance(x, tuple) and all(
+            isinstance(e, (str, type(None))) for e in x
+        )
+        return {
+            "step": (),
+            "v": jax.tree_util.tree_map(leaf, params_axes, is_leaf=is_axes),
+        }
+
+    return Optimizer(init, apply, state_axes)
+
+
+def get_optimizer(name: str, lr_fn: Callable) -> Optimizer:
+    if name == "adamw":
+        return adamw(lr_fn)
+    if name == "adafactor":
+        return adafactor(lr_fn)
+    raise ValueError(f"unknown optimizer {name!r}")

@@ -1,0 +1,107 @@
+"""The jitted train/serve steps with explicit shardings — shared by the
+real trainer and the multi-pod dry-run (the dry-run lowers exactly these).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.partition import Partitioner
+from repro.models import transformer
+from repro.models.config import ModelConfig, ShapeConfig
+
+
+def make_loss_fn(cfg: ModelConfig, partitioner: Partitioner | None):
+    shard = partitioner if (partitioner and partitioner.mesh) else None
+
+    def loss_fn(params, batch):
+        return transformer.train_loss_fn(params, cfg, batch, shard=shard)
+
+    return loss_fn
+
+
+def make_train_step(cfg: ModelConfig, optimizer, partitioner: Partitioner | None):
+    """Returns ``train_step(state, batch) -> (state, metrics)`` (un-jitted).
+
+    state = {"params": ..., "opt": ..., "step": int32}
+    batch = {"inputs": ..., "labels": ..., ["positions"]}
+    """
+    loss_fn = make_loss_fn(cfg, partitioner)
+
+    def train_step(state, batch):
+        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            state["params"], batch
+        )
+        new_params, new_opt = optimizer.apply(grads, state["opt"], state["params"])
+        gnorm = jnp.sqrt(
+            sum(
+                jnp.sum(jnp.square(g.astype(jnp.float32)))
+                for g in jax.tree_util.tree_leaves(grads)
+            )
+        )
+        metrics = dict(metrics, loss=loss, grad_norm=gnorm)
+        return {
+            "params": new_params,
+            "opt": new_opt,
+            "step": state["step"] + 1,
+        }, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, partitioner: Partitioner | None):
+    shard = partitioner if (partitioner and partitioner.mesh) else None
+
+    def prefill_step(params, inputs, caches, rope_positions=None):
+        return transformer.prefill(
+            params, cfg, inputs, caches, rope_positions=rope_positions, shard=shard
+        )
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig, partitioner: Partitioner | None):
+    shard = partitioner if (partitioner and partitioner.mesh) else None
+
+    def decode_step(params, inputs, t, caches, rope_positions=None):
+        return transformer.decode_step(
+            params, cfg, inputs, t, caches, rope_positions=rope_positions, shard=shard
+        )
+
+    return decode_step
+
+
+# ---------------------------------------------------------------------------
+# Sharding trees for jit in_shardings / dry-run
+# ---------------------------------------------------------------------------
+
+
+def state_shardings(partitioner: Partitioner, params_axes, abstract_params, optimizer):
+    p_sh = partitioner.tree_shardings(params_axes, abstract_params)
+    opt_axes = optimizer.state_axes(params_axes)
+    abstract_opt = jax.eval_shape(
+        optimizer.init, abstract_params
+    )
+    o_sh = partitioner.tree_shardings(opt_axes, abstract_opt)
+    return {"params": p_sh, "opt": o_sh, "step": partitioner.replicated()}
+
+
+def batch_shardings(partitioner: Partitioner, abstract_batch):
+    out = {}
+    for k, v in abstract_batch.items():
+        if k == "positions" and v.ndim == 3:  # mrope [3, B, S]
+            out[k] = partitioner.batch_spec(v.shape, batch_dim=1)
+        else:
+            out[k] = partitioner.batch_spec(v.shape, batch_dim=0)
+    return out
+
+
+def cache_shardings(partitioner: Partitioner, cfg: ModelConfig, abstract_caches):
+    """KV/state caches: batch over DP axes, kv-heads over model (when they
+    divide) — from the logical-axes tree mirroring the cache structure."""
+    axes = transformer.cache_axes(cfg)
+    return partitioner.tree_shardings(axes, abstract_caches)

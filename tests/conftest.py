@@ -1,0 +1,6 @@
+import os
+import sys
+
+# Tests see ONE CPU device (dry-run sets its own 512-device env in a
+# subprocess); make sure src/ imports resolve when running bare pytest.
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

@@ -1,0 +1,86 @@
+"""Pallas flash-attention kernel vs plain-softmax oracle (interpret mode)."""
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention import flash_attention
+
+
+def oracle(q, k, v, causal=True, window=None, logit_cap=None):
+    B, H, S, hd = q.shape
+    KV, T = k.shape[1], k.shape[2]
+    G = H // KV
+    kx = jnp.repeat(k, G, axis=1)
+    vx = jnp.repeat(v, G, axis=1)
+    s = jnp.einsum(
+        "bhsd,bhtd->bhst", q.astype(jnp.float32), kx.astype(jnp.float32)
+    ) / math.sqrt(hd)
+    if logit_cap:
+        s = logit_cap * jnp.tanh(s / logit_cap)
+    qp = jnp.arange(S)[:, None]
+    kp = jnp.arange(T)[None, :]
+    valid = jnp.ones((S, T), bool)
+    if causal:
+        valid &= kp <= qp
+    if window:
+        valid &= qp - kp < window
+    s = jnp.where(valid, s, -2.0**30)
+    p = jax.nn.softmax(s, axis=-1)
+    any_valid = valid.any(-1)[None, None, :, None]
+    out = jnp.einsum("bhst,bhtd->bhsd", p, vx.astype(jnp.float32))
+    return jnp.where(any_valid, out, 0.0).astype(q.dtype)
+
+
+def _case(B, H, KV, S, T, hd, seed=0):
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.standard_normal((B, H, S, hd)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((B, KV, T, hd)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((B, KV, T, hd)), jnp.float32)
+    return q, k, v
+
+
+@pytest.mark.parametrize("B,H,KV,S,T,hd,causal,window,cap", [
+    (2, 4, 2, 64, 64, 16, True, None, None),       # GQA causal
+    (1, 6, 2, 100, 100, 32, True, 32, None),       # sliding window, ragged S
+    (2, 2, 1, 48, 48, 16, True, None, 50.0),       # MQA + gemma2 softcap
+    (1, 4, 4, 33, 70, 8, False, None, None),       # MHA, cross S≠T, no mask
+    (1, 8, 2, 256, 256, 64, True, 64, 30.0),       # window + cap together
+    (1, 1, 1, 8, 8, 8, True, None, None),          # minimal
+])
+def test_flash_matches_oracle(B, H, KV, S, T, hd, causal, window, cap):
+    q, k, v = _case(B, H, KV, S, T, hd, seed=B + S + hd)
+    got = flash_attention(
+        q, k, v, causal=causal, window=window, logit_cap=cap,
+        q_blk=32, kv_blk=32,
+    )
+    want = oracle(q, k, v, causal, window, cap)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-5, rtol=1e-4)
+
+
+@pytest.mark.parametrize("q_blk,kv_blk", [(16, 64), (64, 16), (128, 128)])
+def test_flash_block_shape_invariance(q_blk, kv_blk):
+    q, k, v = _case(1, 4, 2, 128, 128, 32, seed=7)
+    a = flash_attention(q, k, v, q_blk=q_blk, kv_blk=kv_blk)
+    b = oracle(q, k, v)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-5, rtol=1e-4)
+
+
+def test_flash_bf16_inputs():
+    q, k, v = _case(1, 2, 2, 64, 64, 32, seed=3)
+    q, k, v = q.astype(jnp.bfloat16), k.astype(jnp.bfloat16), v.astype(jnp.bfloat16)
+    got = flash_attention(q, k, v, q_blk=32, kv_blk=32)
+    want = oracle(q.astype(jnp.float32), k.astype(jnp.float32), v.astype(jnp.float32))
+    np.testing.assert_allclose(
+        np.asarray(got).astype(np.float32), np.asarray(want), atol=3e-2, rtol=3e-2
+    )
+
+
+def test_flash_rejects_bad_gqa():
+    q, k, v = _case(1, 3, 2, 16, 16, 8)
+    with pytest.raises(ValueError, match="multiple"):
+        flash_attention(q, k, v)

@@ -1,0 +1,102 @@
+"""Pallas closure kernel vs oracles: shape/density/block sweeps (interpret)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import bitset
+from repro.core.closure import batched_closure_np
+from repro.core.context import FormalContext
+from repro.kernels import ops, ref
+from repro.kernels.closure import closure_pallas
+
+settings.register_profile("kern", deadline=None, max_examples=20)
+settings.load_profile("kern")
+
+
+def _case(N, m, B, density, cand_density, seed):
+    ctx = FormalContext.synthetic(N, m, density, seed=seed)
+    rng = np.random.default_rng(seed + 1)
+    cands = bitset.pack_bool(rng.random((B, m)) < cand_density)
+    return ctx, cands
+
+
+def _check(ctx, cands, block_b=8, block_n=256):
+    rows_p, _ = ctx.padded_rows(block_n)
+    kc, ks = ops.batched_closure(
+        jnp.asarray(rows_p), jnp.asarray(cands), ctx.n_attrs,
+        n_valid_rows=ctx.n_objects, block_b=block_b, block_n=block_n,
+    )
+    oc, os_ = batched_closure_np(ctx.rows, cands, ctx.attr_mask())
+    np.testing.assert_array_equal(np.asarray(kc), oc)
+    np.testing.assert_array_equal(np.asarray(ks), os_)
+
+
+@pytest.mark.parametrize("N,m,B", [
+    (1, 1, 1), (7, 3, 2), (255, 31, 5), (256, 32, 8), (257, 33, 9),
+    (512, 125, 16), (100, 294, 3), (64, 1000, 4),
+])
+def test_kernel_shape_sweep(N, m, B):
+    ctx, cands = _case(N, m, B, 0.3, 0.1, seed=N + m + B)
+    _check(ctx, cands)
+
+
+@pytest.mark.parametrize("density", [0.0, 0.02, 0.5, 0.98, 1.0])
+def test_kernel_density_sweep(density):
+    ctx, cands = _case(200, 64, 8, density, 0.2, seed=3)
+    _check(ctx, cands)
+
+
+@pytest.mark.parametrize("block_b,block_n", [(1, 64), (8, 64), (16, 512), (4, 128)])
+def test_kernel_block_sweep(block_b, block_n):
+    ctx, cands = _case(300, 50, 13, 0.25, 0.1, seed=9)
+    _check(ctx, cands, block_b=block_b, block_n=block_n)
+
+
+def test_kernel_empty_candidate_full_candidate():
+    ctx, _ = _case(100, 40, 1, 0.3, 0.0, seed=5)
+    empty = np.zeros((1, ctx.W), np.uint32)
+    full = ctx.attr_mask()[None, :]
+    for cands in (empty, full):
+        _check(ctx, cands)
+
+
+def test_kernel_matches_ref_raw():
+    """Raw (padded) kernel contract matches ref.closure_ref bit-for-bit."""
+    ctx, cands = _case(256, 64, 8, 0.3, 0.1, seed=11)
+    rows_p, _ = ctx.padded_rows(256)
+    kc, ks = closure_pallas(jnp.asarray(rows_p), jnp.asarray(cands))
+    rc, rs = ref.closure_ref(jnp.asarray(rows_p), jnp.asarray(cands))
+    np.testing.assert_array_equal(np.asarray(kc), np.asarray(rc))
+    np.testing.assert_array_equal(np.asarray(ks), np.asarray(rs))
+
+
+def test_kernel_rejects_overwide():
+    rows = jnp.zeros((256, 600), jnp.uint32)
+    cands = jnp.zeros((8, 600), jnp.uint32)
+    with pytest.raises(ValueError, match="MAX_W"):
+        closure_pallas(rows, cands)
+
+
+def test_wide_context_falls_back_to_ref():
+    """ops.batched_closure silently uses the jnp path beyond MAX_W words."""
+    m = 600 * 32  # > MAX_W words
+    ctx = FormalContext.synthetic(40, m, 0.02, seed=2)
+    cands = bitset.pack_bool(np.random.default_rng(0).random((2, m)) < 0.01)
+    rows_p, _ = ctx.padded_rows(8)
+    kc, ks = ops.batched_closure(
+        jnp.asarray(rows_p), jnp.asarray(cands), m, n_valid_rows=ctx.n_objects
+    )
+    oc, os_ = batched_closure_np(ctx.rows, cands, ctx.attr_mask())
+    np.testing.assert_array_equal(np.asarray(kc), oc)
+    np.testing.assert_array_equal(np.asarray(ks), os_)
+
+
+@given(
+    st.integers(1, 300), st.integers(1, 130), st.integers(1, 12),
+    st.floats(0.05, 0.9), st.integers(0, 10_000),
+)
+def test_kernel_hypothesis(N, m, B, density, seed):
+    ctx, cands = _case(N, m, B, density, 0.15, seed)
+    _check(ctx, cands, block_n=64)

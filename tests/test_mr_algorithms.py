@@ -1,0 +1,115 @@
+"""MR* drivers vs centralized baselines on random contexts (simulated
+partitions; the real mesh path is exercised in test_distributed_8dev.py)."""
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    ClosureEngine,
+    all_closures,
+    all_closures_batched,
+    bitset,
+    close_by_one,
+    mrcbo,
+    mrganter,
+    mrganter_plus,
+)
+from repro.core.context import FormalContext
+
+
+def _keyset(intents):
+    return {bitset.key_bytes(y) for y in intents}
+
+
+@pytest.fixture(scope="module")
+def ctxs():
+    return [
+        FormalContext.synthetic(50, 12, 0.3, seed=1),
+        FormalContext.synthetic(120, 24, 0.15, seed=2),
+        FormalContext.synthetic(33, 17, 0.5, seed=3),
+    ]
+
+
+def test_nextclosure_matches_brute_force():
+    ctx = FormalContext.synthetic(20, 8, 0.4, seed=5)
+    mask = ctx.attr_mask()
+    from repro.core.closure import closure_np
+
+    brute = set()
+    for s in range(1 << ctx.n_attrs):
+        y = bitset.from_indices({a for a in range(8) if (s >> a) & 1}, 8)
+        c, _ = closure_np(ctx.rows, y, mask)
+        brute.add(bitset.key_bytes(c))
+    assert _keyset(all_closures(ctx)) == brute
+
+
+def test_batched_equals_scalar_nextclosure(ctxs):
+    for ctx in ctxs:
+        a = all_closures(ctx)
+        b = all_closures_batched(ctx)
+        assert len(a) == len(b)
+        assert all(np.array_equal(x, y) for x, y in zip(a, b))
+
+
+def test_closebyone_matches_nextclosure(ctxs):
+    for ctx in ctxs:
+        assert _keyset(close_by_one(ctx).intents) == _keyset(all_closures(ctx))
+
+
+@pytest.mark.parametrize("n_parts", [1, 3, 4])
+@pytest.mark.parametrize("impl", ["allgather", "rsag", "pmin"])
+def test_mrganter_plus_matches(ctxs, n_parts, impl):
+    ctx = ctxs[1]
+    ref = _keyset(all_closures_batched(ctx))
+    eng = ClosureEngine(ctx, n_parts=n_parts, reduce_impl=impl, block_n=64)
+    res = mrganter_plus(ctx, eng)
+    assert _keyset(res.intents) == ref
+    assert res.n_concepts == len(ref)
+
+
+def test_mrganter_lectic_order_preserved(ctxs):
+    """MRGanter must emit concepts in exactly NextClosure's lectic order."""
+    ctx = ctxs[0]
+    ref = all_closures_batched(ctx)
+    res = mrganter(ctx, ClosureEngine(ctx, n_parts=3, block_n=64))
+    assert len(res.intents) == len(ref)
+    assert all(np.array_equal(a, b) for a, b in zip(res.intents, ref))
+
+
+def test_mrcbo_levels_match_closebyone(ctxs):
+    for ctx in ctxs:
+        cbo = close_by_one(ctx)
+        res = mrcbo(ctx, ClosureEngine(ctx, n_parts=2, block_n=64))
+        assert _keyset(res.intents) == _keyset(cbo.intents)
+        # +1 for the ∅'' round; ±1 depending on where the empty frontier
+        # is detected (before vs after the final expansion round).
+        assert res.n_iterations in (cbo.n_iterations, cbo.n_iterations + 1)
+
+
+def test_dedupe_candidates_same_output_fewer_closures(ctxs):
+    ctx = ctxs[1]
+    e1 = ClosureEngine(ctx, n_parts=2, block_n=64)
+    r1 = mrganter_plus(ctx, e1, dedupe_candidates=False)
+    e2 = ClosureEngine(ctx, n_parts=2, block_n=64)
+    r2 = mrganter_plus(ctx, e2, dedupe_candidates=True)
+    assert _keyset(r1.intents) == _keyset(r2.intents)
+    assert r2.n_closures_computed <= r1.n_closures_computed
+
+
+def test_object_shuffle_balances_density():
+    """Paper §5.2's suggested improvement: shuffled partitions have more
+    even density than contiguous ones on a sorted-by-density context."""
+    rng = np.random.default_rng(0)
+    dense = rng.random((400, 30)) < np.linspace(0.05, 0.6, 400)[:, None]
+    ctx = FormalContext.from_dense(dense)
+    spread = lambda parts: np.ptp([p.density for p in parts])
+    assert spread(ctx.partition(4, shuffle=True, seed=1)) < spread(ctx.partition(4))
+
+
+def test_engine_stats_accounting(ctxs):
+    ctx = ctxs[0]
+    eng = ClosureEngine(ctx, n_parts=4, reduce_impl="allgather", block_n=64)
+    res = mrganter_plus(ctx, eng, dedupe_candidates=True)
+    assert eng.stats.closure_calls > 0
+    assert eng.stats.closures_computed >= res.n_concepts - 1
+    assert res.modeled_comm_bytes > 0

@@ -1,0 +1,118 @@
+"""Property-based tests (hypothesis): closure axioms, partition theorems,
+lectic order — the system's invariants from the paper's §2–3."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import bitset, closure, lectic
+from repro.core.context import FormalContext
+
+settings.register_profile("repro", deadline=None, max_examples=30)
+settings.load_profile("repro")
+
+
+@st.composite
+def contexts(draw, max_objects=60, max_attrs=40):
+    n = draw(st.integers(1, max_objects))
+    m = draw(st.integers(1, max_attrs))
+    density = draw(st.floats(0.05, 0.7))
+    seed = draw(st.integers(0, 2**31 - 1))
+    return FormalContext.synthetic(n, m, density, seed=seed)
+
+
+@st.composite
+def context_and_attrset(draw):
+    ctx = draw(contexts())
+    bits = draw(st.lists(st.integers(0, ctx.n_attrs - 1), max_size=8))
+    return ctx, bitset.from_indices(set(bits), ctx.n_attrs)
+
+
+@given(context_and_attrset())
+def test_closure_extensive_monotone_idempotent(args):
+    ctx, Y = args
+    mask = ctx.attr_mask()
+    c1, _ = closure.closure_np(ctx.rows, Y, mask)
+    # extensive: Y ⊆ Y''
+    assert not np.any(Y & ~c1)
+    # idempotent: (Y'')'' == Y''
+    c2, _ = closure.closure_np(ctx.rows, c1, mask)
+    assert np.array_equal(c1, c2)
+
+
+@given(context_and_attrset(), context_and_attrset())
+def test_closure_monotone(a, b):
+    ctx, Y1 = a
+    _, _ = b
+    # build Y2 ⊇ Y1 within the same context
+    extra = bitset.from_indices({0}, ctx.n_attrs)
+    Y2 = Y1 | extra
+    mask = ctx.attr_mask()
+    c1, _ = closure.closure_np(ctx.rows, Y1, mask)
+    c2, _ = closure.closure_np(ctx.rows, Y2, mask)
+    assert not np.any(c1 & ~c2)  # Y1 ⊆ Y2 ⇒ Y1'' ⊆ Y2''
+
+
+@given(context_and_attrset(), st.integers(2, 5), st.booleans())
+def test_property1_extent_union(args, n_parts, shuffle):
+    """Y'_S = ∪_k Y'_{S_k} (object partitioning preserves extents)."""
+    ctx, Y = args
+    parts = ctx.partition(min(n_parts, ctx.n_objects), shuffle=shuffle, seed=7)
+    whole = closure.extent_np(ctx.rows, Y)
+    got = sum(int(closure.extent_np(p.rows, Y).sum()) for p in parts)
+    assert got == int(whole.sum())
+
+
+@given(context_and_attrset(), st.integers(2, 5))
+def test_theorem2_closure_intersection(args, n_parts):
+    """Y''_S = ∩_k Y''_{S_k} (the paper's Theorem 2, n-way)."""
+    ctx, Y = args
+    k = min(n_parts, ctx.n_objects)
+    parts = ctx.partition(k)
+    mask = ctx.attr_mask()
+    whole, _ = closure.closure_np(ctx.rows, Y, mask)
+    acc = mask.copy()
+    for p in parts:
+        c, _ = closure.closure_np(p.rows, Y, mask)
+        acc &= c
+    assert np.array_equal(acc, whole)
+
+
+@given(contexts(max_objects=20, max_attrs=10))
+def test_lectic_order_is_total_on_subsets(ctx):
+    m = min(ctx.n_attrs, 6)
+    rows = [bitset.from_indices(
+        {a for a in range(m) if (i >> a) & 1}, ctx.n_attrs
+    ) for i in range(2 ** m)]
+    keys = [lectic.lectic_sort_key(r, ctx.n_attrs) for r in rows]
+    order = np.argsort(np.array([int("".join(map(str, k)).ljust(1, "0"), 2)
+                                 if k else 0 for k in keys]))
+    # pairwise consistency of lectic_leq with the sort keys
+    for i in range(0, len(rows) - 1, 7):
+        a, b = rows[i], rows[i + 1]
+        if np.array_equal(a, b):
+            continue
+        assert lectic.lectic_leq(a, b, ctx.n_attrs) == (keys[i] < keys[i + 1])
+
+
+@given(context_and_attrset())
+def test_oplus_seeds_match_scalar(args):
+    ctx, Y = args
+    tables = lectic.LecticTables(ctx.n_attrs)
+    seeds, valid = lectic.oplus_seeds_all(Y, tables)
+    member = bitset.unpack_bits(Y, ctx.n_attrs)
+    for a in range(ctx.n_attrs):
+        assert valid[a] == (not member[a])
+        if valid[a]:
+            assert np.array_equal(seeds[a], lectic.oplus_seed(Y, a, tables))
+
+
+@given(contexts(max_objects=40, max_attrs=16))
+def test_batched_closure_matches_scalar(ctx):
+    rng = np.random.default_rng(0)
+    B = 9
+    cands = bitset.pack_bool(rng.random((B, ctx.n_attrs)) < 0.2)
+    mask = ctx.attr_mask()
+    bc, bs = closure.batched_closure_np(ctx.rows, cands, mask)
+    for i in range(B):
+        c, s = closure.closure_np(ctx.rows, cands[i], mask)
+        assert np.array_equal(bc[i], c) and bs[i] == s
