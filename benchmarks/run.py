@@ -11,7 +11,7 @@ def main(argv=None) -> None:
     p = argparse.ArgumentParser()
     p.add_argument(
         "--only", default=None,
-        help="comma-separated subset: table7,table8,table9,fig234,kernel,roofline",
+        help="comma-separated subset: table7,table8,table9,fig234,kernel,frontier,roofline",
     )
     p.add_argument("--roofline-path", default="dryrun_single.jsonl")
     args = p.parse_args(argv)
@@ -32,6 +32,7 @@ def main(argv=None) -> None:
         "table9": table9_iterations.run,
         "fig234": fig234_scaling.run,
         "kernel": kernel_bench.run,
+        "frontier": kernel_bench.run_frontier,
         "roofline": lambda: roofline.run(args.roofline_path),
     }
     print("name,us_per_call,derived")

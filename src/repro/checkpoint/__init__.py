@@ -1,5 +1,6 @@
 from repro.checkpoint.ckpt import (
     CheckpointManager,
+    have_zstd,
     latest_step,
     restore_checkpoint,
     save_checkpoint,
@@ -7,6 +8,7 @@ from repro.checkpoint.ckpt import (
 
 __all__ = [
     "CheckpointManager",
+    "have_zstd",
     "latest_step",
     "restore_checkpoint",
     "save_checkpoint",

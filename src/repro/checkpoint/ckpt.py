@@ -3,9 +3,9 @@
 Layout (one directory per step):
 
     <dir>/step_000123/
-        manifest.json       # treedef, shapes, dtypes, per-leaf sha256
+        manifest.json       # treedef, codec, shapes, dtypes, per-leaf sha256
         leaf_00000.bin.zst  # zstd-compressed raw array bytes
-        ...
+        ...                 # (.bin, uncompressed, when zstandard is absent)
         COMMITTED           # written last — absence ⇒ incomplete/corrupt
 
 Guarantees:
@@ -32,10 +32,18 @@ import shutil
 
 import jax
 import numpy as np
-import zstandard
+
+try:  # optional: fall back to raw (uncompressed) leaves when absent
+    import zstandard
+except ModuleNotFoundError:
+    zstandard = None
 
 _MANIFEST = "manifest.json"
 _COMMITTED = "COMMITTED"
+
+
+def have_zstd() -> bool:
+    return zstandard is not None
 
 
 def _leaf_paths(tree):
@@ -54,18 +62,20 @@ def save_checkpoint(path: str, step: int, tree) -> str:
         shutil.rmtree(tmp)
     os.makedirs(tmp, exist_ok=True)
 
-    cctx = zstandard.ZstdCompressor(level=3)
+    codec = "zstd" if zstandard is not None else "raw"
+    cctx = zstandard.ZstdCompressor(level=3) if codec == "zstd" else None
     manifest = {
         "step": step,
         "treedef": str(treedef),
+        "codec": codec,
         "leaves": [],
     }
     for i, arr in enumerate(host):
         raw = np.ascontiguousarray(arr).tobytes()
         digest = hashlib.sha256(raw).hexdigest()
-        name = f"leaf_{i:05d}.bin.zst"
+        name = f"leaf_{i:05d}.bin.zst" if codec == "zstd" else f"leaf_{i:05d}.bin"
         with open(os.path.join(tmp, name), "wb") as f:
-            f.write(cctx.compress(raw))
+            f.write(cctx.compress(raw) if cctx is not None else raw)
         manifest["leaves"].append(
             {"file": name, "shape": list(arr.shape), "dtype": str(arr.dtype),
              "sha256": digest}
@@ -109,14 +119,20 @@ def restore_checkpoint(path: str, step: int, target_tree, shardings=None):
             f"checkpoint has {len(manifest['leaves'])} leaves, "
             f"target tree has {len(flat)}"
         )
-    dctx = zstandard.ZstdDecompressor()
+    codec = manifest.get("codec", "zstd")
+    if codec == "zstd" and zstandard is None:
+        raise ModuleNotFoundError(
+            "checkpoint was written with zstd compression but the "
+            "'zstandard' module is not installed"
+        )
+    dctx = zstandard.ZstdDecompressor() if codec == "zstd" else None
     shard_flat = (
         jax.tree_util.tree_flatten(shardings)[0] if shardings is not None else [None] * len(flat)
     )
     out = []
     for leaf, meta, shard in zip(flat, manifest["leaves"], shard_flat):
         with open(os.path.join(d, meta["file"]), "rb") as f:
-            raw = dctx.decompress(f.read())
+            raw = dctx.decompress(f.read()) if dctx is not None else f.read()
         if hashlib.sha256(raw).hexdigest() != meta["sha256"]:
             raise IOError(f"checksum mismatch in {meta['file']}")
         arr = np.frombuffer(raw, dtype=np.dtype(meta["dtype"])).reshape(meta["shape"])

@@ -1,0 +1,56 @@
+"""Version-bridging shims so the codebase runs on the pinned jax (0.4.x).
+
+The source tree is written against the modern public API surface
+(``jax.shard_map``, ``jax.sharding.AxisType``, Pallas ``CompilerParams``);
+this module resolves each name against whatever the installed jax provides
+so call sites stay version-agnostic.
+"""
+
+from __future__ import annotations
+
+import jax
+
+# -- shard_map ---------------------------------------------------------------
+if hasattr(jax, "shard_map"):
+
+    def shard_map(f, *, mesh, in_specs, out_specs, check_vma=False):
+        return jax.shard_map(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+            check_vma=check_vma,
+        )
+
+else:
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    def shard_map(f, *, mesh, in_specs, out_specs, check_vma=False):
+        # ``check_vma`` was called ``check_rep`` before jax 0.6.
+        return _shard_map(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+            check_rep=check_vma,
+        )
+
+
+# -- make_mesh ---------------------------------------------------------------
+def make_mesh(axis_shapes, axis_names):
+    """``jax.make_mesh`` minus the ``axis_types`` kwarg (absent pre-0.5)."""
+    return jax.make_mesh(tuple(axis_shapes), tuple(axis_names))
+
+
+# -- compiled.cost_analysis() -----------------------------------------------
+def cost_analysis(compiled) -> dict:
+    """Normalize across jax versions: pre-0.5 returns a list of per-program
+    dicts, newer returns one dict."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, list):
+        ca = ca[0] if ca else {}
+    return ca or {}
+
+
+# -- Pallas TPU compiler params ---------------------------------------------
+def tpu_compiler_params(**kwargs):
+    from jax.experimental.pallas import tpu as pltpu
+
+    cls = getattr(pltpu, "CompilerParams", None) or getattr(
+        pltpu, "TPUCompilerParams"
+    )
+    return cls(**kwargs)

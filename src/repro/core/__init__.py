@@ -2,6 +2,7 @@
 
 from repro.core.context import FormalContext, paper_context
 from repro.core.engine import ClosureEngine
+from repro.core.frontier import DeviceFrontier
 from repro.core.mr import MRResult, mrcbo, mrganter, mrganter_plus
 from repro.core.nextclosure import all_closures, all_closures_batched, first_closure, next_closure
 from repro.core.closebyone import CbOResult, close_by_one
@@ -13,6 +14,7 @@ __all__ = [
     "FormalContext",
     "paper_context",
     "ClosureEngine",
+    "DeviceFrontier",
     "MRResult",
     "mrganter",
     "mrganter_plus",

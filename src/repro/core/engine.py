@@ -30,10 +30,14 @@ import numpy as np
 from jax import lax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro import compat
 from repro.core import bitset
 from repro.core.context import FormalContext
 from repro.dist import collectives
 from repro.kernels import ops
+
+
+BACKENDS = ("kernel", "jnp", "matmul")
 
 
 @dataclasses.dataclass
@@ -42,6 +46,11 @@ class EngineStats:
     closures_computed: int = 0
     modeled_comm_bytes: int = 0
     rounds: int = 0
+    # host↔device traffic census (the frontier pipeline's whole point):
+    h2d_transfers: int = 0
+    h2d_bytes: int = 0
+    d2h_transfers: int = 0
+    d2h_bytes: int = 0
 
 
 class ClosureEngine:
@@ -52,16 +61,26 @@ class ClosureEngine:
         mesh: Mesh | None = None,
         axis_names: tuple[str, ...] = ("data",),
         n_parts: int | None = None,
+        backend: str | None = None,
         use_kernel: bool = True,
         reduce_impl: str = "rsag",
         block_n: int = 256,
         max_batch: int = 8192,
         interpret: bool = True,
     ):
+        # ``backend`` supersedes the old ``use_kernel`` flag:
+        #   kernel — Pallas closure kernel (interpret-mode on CPU)
+        #   jnp    — fused-jnp reference (fastest on CPU/XLA)
+        #   matmul — MXU complement-counting closure (§Perf C2)
+        if backend is None:
+            backend = "kernel" if use_kernel else "jnp"
+        if backend not in BACKENDS:
+            raise ValueError(f"unknown backend {backend!r}; choose {BACKENDS}")
         self.ctx = ctx
         self.mesh = mesh
         self.axis_names = axis_names
-        self.use_kernel = use_kernel
+        self.backend = backend
+        self.use_kernel = backend == "kernel"
         self.reduce_impl = reduce_impl
         self.block_n = block_n
         self.max_batch = max_batch
@@ -94,18 +113,30 @@ class ClosureEngine:
 
     def _build_step(self):
         ctx, axis_names, impl = self.ctx, self.axis_names, self.reduce_impl
-        use_kernel, block_n, interp = self.use_kernel, self.block_n, self.interpret
+        backend, block_n, interp = self.backend, self.block_n, self.interpret
 
-        def local_closure(rows_local, cands):
-            return ops.batched_closure(
-                rows_local,
-                cands,
-                ctx.n_attrs,
-                n_valid_rows=rows_local.shape[0],  # global pad corrected later
-                block_n=block_n,
-                use_kernel=use_kernel,
-                interpret=interp,
-            )
+        if backend == "matmul":
+
+            def local_closure(rows_local, cands):
+                return ops.closure_matmul(
+                    rows_local,
+                    cands,
+                    ctx.n_attrs,
+                    n_valid_rows=rows_local.shape[0],  # global pad corrected later
+                )
+
+        else:
+
+            def local_closure(rows_local, cands):
+                return ops.batched_closure(
+                    rows_local,
+                    cands,
+                    ctx.n_attrs,
+                    n_valid_rows=rows_local.shape[0],  # global pad corrected later
+                    block_n=block_n,
+                    use_kernel=backend == "kernel",
+                    interpret=interp,
+                )
 
         if self.mesh is not None:
             flat_axes = axis_names if len(axis_names) > 1 else axis_names[0]
@@ -118,7 +149,7 @@ class ClosureEngine:
                 gs = lax.psum(ls, flat_axes)
                 return gc, gs
 
-            smapped = jax.shard_map(
+            smapped = compat.shard_map(
                 shard_body,
                 mesh=self.mesh,
                 in_specs=(P(axis_names, None), P()),
@@ -149,6 +180,10 @@ class ClosureEngine:
 
     # -- public API ----------------------------------------------------------
 
+    @property
+    def min_bucket(self) -> int:
+        return max(8, self.n_parts)
+
     def closure(self, cands: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
         """Global closures + supports for a host candidate batch [B, W]."""
         B = cands.shape[0]
@@ -163,7 +198,7 @@ class ClosureEngine:
         for lo in range(0, B, self.max_batch):
             chunk = cands[lo : lo + self.max_batch]
             b = chunk.shape[0]
-            cap = ops.bucket_size(b, minimum=max(8, self.n_parts))
+            cap = ops.bucket_size(b, minimum=self.min_bucket)
             if cap != b:  # pad with all-ones candidates; outputs dropped
                 pad = np.full((cap - b, self.ctx.W), 0xFFFFFFFF, np.uint32)
                 chunk = np.concatenate([chunk, pad], axis=0)
@@ -172,10 +207,34 @@ class ClosureEngine:
             out_s[lo : lo + b] = np.asarray(gs)[:b]
             self.stats.closure_calls += 1
             self.stats.closures_computed += b
+            self.stats.h2d_transfers += 1
+            self.stats.h2d_bytes += cap * self.ctx.W * 4
+            self.stats.d2h_transfers += 2
+            self.stats.d2h_bytes += cap * (self.ctx.W + 1) * 4
             self.stats.modeled_comm_bytes += collectives.modeled_comm_bytes(
                 self.reduce_impl, self.n_parts, cap, self.ctx.W
             )
         return out_c, out_s
+
+    def closure_dev(
+        self, cands, n_valid: int, *, count_round: bool = True
+    ):
+        """Device-to-device closure for an already bucket-padded batch.
+
+        ``cands`` is a device array [cap, W]; rows past ``n_valid`` are
+        padding whose outputs the caller ignores.  Nothing crosses the
+        host boundary — this is the frontier pipeline's map+reduce step.
+        """
+        cap = cands.shape[0]
+        gc, gs = self._step(self.rows, cands)
+        self.stats.closure_calls += 1
+        if count_round:
+            self.stats.rounds += 1
+        self.stats.closures_computed += n_valid
+        self.stats.modeled_comm_bytes += collectives.modeled_comm_bytes(
+            self.reduce_impl, self.n_parts, cap, self.ctx.W
+        )
+        return gc, gs
 
     def first_closure(self) -> tuple[np.ndarray, int]:
         """``∅''`` and its support ``|O|`` via a full map/reduce round."""

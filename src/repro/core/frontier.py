@@ -1,0 +1,329 @@
+"""Device-resident frontier pipeline for the MR* drivers (§Perf F1).
+
+The seed drivers kept the *frontier* on the host: per-intent Python loops
+built ⊕/CbO seeds, `np.unique` deduped candidates, and the two-level hash
+filtered closures row by row — O(frontier · m) small host ops per
+iteration.  This module moves the whole frontier side onto the device:
+
+    frontier [F, W]  ──►  vectorized seed expansion (LOW/BIT broadcast)
+                     ──►  validity compaction (+ optional dedupe:
+                          lexsort + adjacent-unique over packed words)
+                     ──►  sharded closure (engine backend: kernel/jnp/matmul)
+                     ──►  batched feasibility / canonicity / uniqueness
+                     ──►  compacted survivors
+
+Every stage is a jitted device function over bucket-padded shapes
+(powers of two — recompiles are bounded by O(log max_frontier)); the host
+loop shrinks to convergence control plus one bulk download of surviving
+intents per iteration (and, for MRGanter+, one bulk upload of the novel
+frontier after the global-registry check).  This is the Twister framing of
+§3 taken to its limit: static data (context rows, LOW/BIT tables) never
+moves, and the dynamic delta crossing the boundary is exactly the new
+concepts.
+
+Benchmarked in EXPERIMENTS.md §Perf; equivalence to the host-loop drivers
+is asserted in tests/test_frontier_pipeline.py.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import lectic
+from repro.kernels.ops import bucket_size
+
+
+# ---------------------------------------------------------------------------
+# device primitives
+# ---------------------------------------------------------------------------
+
+
+def _compact(valid: jax.Array, *arrays) -> tuple:
+    """Stable-move rows with ``valid`` to the front of every array.
+
+    Returns ``(count, *reordered_arrays)`` — shapes unchanged (rows past
+    ``count`` are garbage the caller slices away after a scalar sync).
+    """
+    perm = jnp.argsort(~valid)  # jax argsort is stable
+    return (valid.sum(dtype=jnp.int32), *(a[perm] for a in arrays))
+
+
+def _sort_unique(seeds: jax.Array, valid: jax.Array, *arrays) -> tuple:
+    """Lexsort packed rows, mark adjacent duplicates, compact survivors.
+
+    Invalid rows sort to the end (primary key), so duplicate detection only
+    ever compares real rows.  Returns ``(count, seeds, *arrays)`` with the
+    unique valid rows moved to the front.
+    """
+    keys = tuple(seeds[:, w] for w in reversed(range(seeds.shape[1]))) + (~valid,)
+    perm = jnp.lexsort(keys)
+    seeds = seeds[perm]
+    valid = valid[perm]
+    same_prev = jnp.all(seeds == jnp.roll(seeds, 1, axis=0), axis=-1)
+    same_prev = same_prev.at[0].set(False)
+    keep = valid & ~(same_prev & jnp.roll(valid, 1))
+    return _compact(keep, seeds, *(a[perm] for a in arrays))
+
+
+def slice_pad(arr, lo: int, cap: int, fill=0):
+    """Static-shape device slice ``arr[lo:lo+cap]``, zero-padded past the
+    end — keeps chunk shapes bucketed without a host round-trip."""
+    chunk = arr[lo : lo + cap]
+    short = cap - chunk.shape[0]
+    if short > 0:
+        pad = jnp.full((short, *arr.shape[1:]), fill, arr.dtype)
+        chunk = jnp.concatenate([chunk, pad], axis=0)
+    return chunk
+
+
+# ---------------------------------------------------------------------------
+# jitted stages (shapes bucketed by the driver)
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("n_attrs", "dedupe"))
+def expand_oplus(frontier, n_valid, LOW, BIT, *, n_attrs: int, dedupe: bool):
+    """⊕-expansion of a frontier [F, W] → compacted seeds [F·m, W] + count.
+
+    ``dedupe=True`` additionally drops duplicate seeds on device (the
+    beyond-paper ``dedupe_candidates`` optimization, no host `np.unique`).
+    """
+    F, W = frontier.shape
+    row_ok = jnp.arange(F) < n_valid
+    seeds, valid = lectic.oplus_seeds_jnp(frontier, LOW, BIT, n_attrs)
+    valid = valid & row_ok[:, None]
+    seeds = seeds.reshape(F * n_attrs, W)
+    valid = valid.reshape(F * n_attrs)
+    if dedupe:
+        n, seeds = _sort_unique(seeds, valid)
+    else:
+        n, seeds = _compact(valid, seeds)
+    return seeds, n
+
+
+@functools.partial(jax.jit, static_argnames=("n_attrs",))
+def expand_cbo(frontier, gens, n_valid, BIT, *, n_attrs: int):
+    """CbO expansion: seeds ``Y ∪ {a}`` for ``a > gen(Y), a ∉ Y``.
+
+    Returns compacted ``(seeds [F·m, W], parent_idx, gen_attr, count)`` —
+    parent/generator lineage rides along for the canonicity stage.
+    """
+    F, W = frontier.shape
+    row_ok = jnp.arange(F) < n_valid
+    seeds, valid = lectic.cbo_seeds_jnp(frontier, gens, BIT, n_attrs)
+    valid = valid & row_ok[:, None]
+    seeds = seeds.reshape(F * n_attrs, W)
+    valid = valid.reshape(F * n_attrs)
+    parent = jnp.repeat(jnp.arange(F, dtype=jnp.int32), n_attrs)
+    gen = jnp.tile(jnp.arange(n_attrs, dtype=jnp.int32), F)
+    n, seeds, parent, gen = _compact(valid, seeds, parent, gen)
+    return seeds, parent, gen, n
+
+
+@jax.jit
+def unique_closures(closures, n_valid):
+    """Intra-batch dedupe of closure outputs: sorted-unique + compaction.
+
+    The cross-iteration novelty check stays with the host registry; this
+    stage just collapses the (heavily duplicated) reduce output so only
+    distinct intents cross the device→host boundary.
+    """
+    valid = jnp.arange(closures.shape[0]) < n_valid
+    n, closures = _sort_unique(closures, valid)
+    return closures, n
+
+
+@jax.jit
+def filter_canonical(closures, frontier, parent_idx, gen, n_valid, LOW):
+    """CbO canonicity ``(Z ^ Y) & LOW[a] == 0`` + survivor compaction.
+
+    Survivors are *exactly* the new concepts (CbO generates each concept
+    once under this test), so they double as the next device frontier.
+    """
+    parents = frontier[parent_idx]
+    ok = lectic.feasible_jnp(closures, parents, gen, LOW)
+    ok = ok & (jnp.arange(closures.shape[0]) < n_valid)
+    n, closures, gen = _compact(ok, closures, gen)
+    return closures, gen, n
+
+
+@functools.partial(jax.jit, static_argnames=("n_attrs",))
+def ganter_select(closures, Y, valid, LOW, mask, *, n_attrs: int):
+    """NextClosure's Alg.-5 scan as one device op: feasibility for every
+    generator attribute, then the *largest* feasible one wins."""
+    gens = jnp.arange(n_attrs, dtype=jnp.int32)
+    ok = lectic.feasible_jnp(closures[:n_attrs], Y[None, :], gens, LOW)
+    ok = ok & valid
+    score = jnp.where(ok, gens, -1)
+    idx = jnp.argmax(score)
+    Y_next = closures[idx]
+    return Y_next, jnp.all(Y_next == mask)
+
+
+# ---------------------------------------------------------------------------
+# driver-facing pipeline
+# ---------------------------------------------------------------------------
+
+
+class DeviceFrontier:
+    """Holds the device-resident frontier state for one mining run and
+    exposes the per-iteration fused steps the MR* drivers are written in.
+
+    The engine provides the sharded closure (`closure_dev`) and the stats
+    ledger; this class owns expansion/dedupe/filter orchestration and the
+    bucket/chunk bookkeeping.
+    """
+
+    def __init__(self, engine, *, dedupe_closures: bool = False):
+        self.engine = engine
+        self.n_attrs = engine.ctx.n_attrs
+        self.W = engine.ctx.W
+        self.LOW, self.BIT, self.mask = lectic.tables_jnp(self.n_attrs)
+        # Collapse duplicate *closure outputs* on device before download.
+        # Saves D2H bandwidth on real accelerators; on the CPU 'device' the
+        # XLA variadic sort costs more than the memcpy it saves, so the
+        # default leaves cross-closure dedupe to the (vectorized) host
+        # registry.  Equivalence holds either way (tests cover both).
+        self.dedupe_closures = dedupe_closures
+        self._frontier = None  # [Fb, W] device
+        self._gens = None  # [Fb] device (CbO lineage)
+        self._n = 0
+
+    # -- frontier state ----------------------------------------------------
+
+    def __len__(self) -> int:
+        return self._n
+
+    def set_frontier(self, intents: np.ndarray, gens: np.ndarray | None = None):
+        """Upload a new frontier (one bulk H2D — the Twister dynamic delta)."""
+        n = intents.shape[0]
+        cap = bucket_size(max(1, n))
+        buf = np.zeros((cap, self.W), np.uint32)
+        buf[:n] = intents
+        self._frontier = jnp.asarray(buf)
+        st = self.engine.stats
+        st.h2d_transfers += 1
+        st.h2d_bytes += buf.nbytes
+        if gens is not None:
+            gbuf = np.zeros((cap,), np.int32)
+            gbuf[:n] = gens
+            self._gens = jnp.asarray(gbuf)
+            st.h2d_transfers += 1
+            st.h2d_bytes += gbuf.nbytes
+        self._n = n
+
+    def _adopt(self, frontier_dev, gens_dev, n: int):
+        """Keep device survivors as the next frontier (no host round-trip)."""
+        cap = bucket_size(max(1, n))
+        self._frontier = slice_pad(frontier_dev, 0, cap)
+        self._gens = None if gens_dev is None else slice_pad(gens_dev, 0, cap)
+        self._n = n
+
+    def _download(self, arr_dev, n: int) -> np.ndarray:
+        out = np.asarray(arr_dev[:n])
+        st = self.engine.stats
+        st.d2h_transfers += 1
+        st.d2h_bytes += out.nbytes
+        return out
+
+    # -- fused per-iteration steps ----------------------------------------
+
+    def step_oplus(self, *, dedupe: bool) -> np.ndarray:
+        """One MRGanter+ iteration: expand → (dedupe) → close → collect.
+
+        Returns the round's closure intents (host array; de-duplicated on
+        device when ``dedupe_closures``); the caller runs the global-
+        registry novelty check and hands the novel rows back via
+        :meth:`set_frontier`.
+        """
+        eng = self.engine
+        seeds, n_dev = expand_oplus(
+            self._frontier, self._n, self.LOW, self.BIT,
+            n_attrs=self.n_attrs, dedupe=dedupe,
+        )
+        n_seeds = int(n_dev)  # scalar sync — the only blocking read
+        if n_seeds == 0:
+            return np.zeros((0, self.W), np.uint32)
+        uniq_parts = []
+        first = True
+        for lo in range(0, n_seeds, eng.max_batch):
+            b = min(eng.max_batch, n_seeds - lo)
+            cap = bucket_size(b, minimum=eng.min_bucket)
+            chunk = slice_pad(seeds, lo, cap)
+            closures, _ = eng.closure_dev(chunk, b, count_round=first)
+            first = False
+            if self.dedupe_closures:
+                cl_u, k_dev = unique_closures(closures, b)
+                uniq_parts.append(self._download(cl_u, int(k_dev)))
+            else:
+                uniq_parts.append(self._download(closures, b))
+        return np.concatenate(uniq_parts, axis=0)
+
+    def step_cbo(self) -> tuple[np.ndarray, int, int]:
+        """One MRCbo iteration: expand → close → canonicity → adopt.
+
+        Canonical survivors stay on device as the next frontier; the same
+        rows are downloaded once for the result set.  Returns
+        ``(new_intents, n_seeds, n_new)`` — ``n_seeds`` is 0 when the
+        frontier was already exhausted (no closure round ran).
+        """
+        eng = self.engine
+        seeds, parent, gen, n_dev = expand_cbo(
+            self._frontier, self._gens, self._n, self.BIT, n_attrs=self.n_attrs
+        )
+        n_seeds = int(n_dev)
+        if n_seeds == 0:
+            self._n = 0
+            return np.zeros((0, self.W), np.uint32), 0, 0
+        surv_z, surv_g, counts = [], [], []
+        first = True
+        for lo in range(0, n_seeds, eng.max_batch):
+            b = min(eng.max_batch, n_seeds - lo)
+            cap = bucket_size(b, minimum=eng.min_bucket)
+            chunk = slice_pad(seeds, lo, cap)
+            closures, _ = eng.closure_dev(chunk, b, count_round=first)
+            first = False
+            z, g, k_dev = filter_canonical(
+                closures, self._frontier,
+                slice_pad(parent, lo, cap), slice_pad(gen, lo, cap),
+                b, self.LOW,
+            )
+            k = int(k_dev)
+            if k:
+                surv_z.append(z[:k])
+                surv_g.append(g[:k])
+                counts.append(k)
+        n_new = sum(counts)
+        if n_new == 0:
+            self._n = 0
+            return np.zeros((0, self.W), np.uint32), n_seeds, 0
+        z_all = surv_z[0] if len(surv_z) == 1 else jnp.concatenate(surv_z)
+        g_all = surv_g[0] if len(surv_g) == 1 else jnp.concatenate(surv_g)
+        self._adopt(z_all, g_all, n_new)
+        return self._download(self._frontier, n_new), n_seeds, n_new
+
+    def step_ganter(self) -> tuple[np.ndarray, bool]:
+        """One MRGanter iteration: ⊕-seeds for the single current intent,
+        closure, Alg.-5 feasibility scan, argmax-select — fused on device.
+        Returns ``(next intent (host), reached ⊤)``."""
+        eng = self.engine
+        Y = self._frontier[0]
+        seeds, valid = lectic.oplus_seeds_jnp(
+            Y[None, :], self.LOW, self.BIT, self.n_attrs
+        )
+        seeds = seeds.reshape(self.n_attrs, self.W)
+        cap = bucket_size(self.n_attrs, minimum=eng.min_bucket)
+        closures, _ = eng.closure_dev(
+            slice_pad(seeds, 0, cap), int(valid[0].sum())
+        )
+        Y_next, done = ganter_select(
+            closures, Y, valid[0], self.LOW, self.mask, n_attrs=self.n_attrs
+        )
+        cap_f = self._frontier.shape[0]
+        self._frontier = jnp.broadcast_to(Y_next, (cap_f, self.W))
+        self._n = 1
+        return self._download(Y_next[None, :], 1)[0], bool(done)

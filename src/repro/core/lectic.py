@@ -11,6 +11,10 @@ becomes the word-parallel test ``((cand ^ Y) & low_mask(a)) == 0``.
 
 from __future__ import annotations
 
+import functools
+
+import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.core import bitset
@@ -66,6 +70,70 @@ def lectic_leq(y1: np.ndarray, y2: np.ndarray, n_attrs: int) -> bool:
         return False
     a = bitset.head_attr(diff)
     return bool(bitset.unpack_bits(y2, n_attrs)[a])
+
+
+# ---------------------------------------------------------------------------
+# jnp twins — the device half used by the frontier pipeline (core.frontier).
+# Same arithmetic as the numpy ops above, on [batch, ...] shapes, jit-able.
+# ---------------------------------------------------------------------------
+
+
+@functools.lru_cache(maxsize=None)
+def tables_jnp(n_attrs: int) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Device-resident ``(LOW [m, W], BIT [m, W], attr_mask [W])`` tables.
+
+    Cached per attribute count — uploaded once, then static data for every
+    iteration (the Twister discipline applied to the lectic masks).
+    """
+    t = LecticTables(n_attrs)
+    return jnp.asarray(t.LOW), jnp.asarray(t.BIT), jnp.asarray(t.attr_mask)
+
+
+def member_bits_jnp(Y: jax.Array, n_attrs: int) -> jax.Array:
+    """Unpack ``[..., W]`` packed sets to bool ``[..., n_attrs]`` on device."""
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    bits = (Y[..., :, None] >> shifts) & jnp.uint32(1)
+    flat = bits.reshape(*Y.shape[:-1], Y.shape[-1] * 32)
+    return flat[..., :n_attrs].astype(bool)
+
+
+def oplus_seeds_jnp(
+    Y: jax.Array, LOW: jax.Array, BIT: jax.Array, n_attrs: int
+) -> tuple[jax.Array, jax.Array]:
+    """Batched ⊕-seeds for a frontier ``Y [F, W]``.
+
+    Returns ``(seeds [F, m, W], valid [F, m])`` — the device twin of
+    ``oplus_seeds_all`` over the whole frontier at once.
+    """
+    seeds = (Y[:, None, :] & LOW[None, :, :]) | BIT[None, :, :]
+    valid = ~member_bits_jnp(Y, n_attrs)
+    return seeds, valid
+
+
+def cbo_seeds_jnp(
+    Y: jax.Array, gens: jax.Array, BIT: jax.Array, n_attrs: int
+) -> tuple[jax.Array, jax.Array]:
+    """Batched CbO expansion seeds ``Y ∪ {a}`` for ``a > gen, a ∉ Y``.
+
+    Y [F, W] packed frontier intents, gens [F] generator attrs.
+    Returns ``(seeds [F, m, W], valid [F, m])``.
+    """
+    seeds = Y[:, None, :] | BIT[None, :, :]
+    attrs = jnp.arange(n_attrs, dtype=gens.dtype)
+    valid = ~member_bits_jnp(Y, n_attrs) & (attrs[None, :] > gens[:, None])
+    return seeds, valid
+
+
+def feasible_jnp(
+    closures: jax.Array, parents: jax.Array, gens: jax.Array, LOW: jax.Array
+) -> jax.Array:
+    """Word-parallel ``((Z ^ Y) & LOW[a]) == 0`` for a batch ``[B, ...]``.
+
+    This single test is both NextClosure's ≤_{p_i} feasibility (Eqn. 4) and
+    CbO's canonicity check — the two drivers differ only in which parent/
+    generator pairs they feed it.
+    """
+    return jnp.all(((closures ^ parents) & LOW[gens]) == 0, axis=-1)
 
 
 def lectic_sort_key(row: np.ndarray, n_attrs: int) -> tuple:

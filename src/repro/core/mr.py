@@ -1,10 +1,26 @@
-"""The MR* miners: MRGanter, MRGanter+ and MRCbo (paper §3), as host-side
-iterative drivers over a :class:`repro.core.engine.ClosureEngine`.
+"""The MR* miners: MRGanter, MRGanter+ and MRCbo (paper §3), as iterative
+drivers over a :class:`repro.core.engine.ClosureEngine`.
 
 Each driver is the Twister control loop: the engine holds the static data
-(sharded context); the *dynamic data* — the previous intent(s) — crosses the
-host/device boundary once per iteration, exactly like Twister re-configuring
-its long-running map tasks with the previous iteration's closures.
+(sharded context); the *dynamic data* — the frontier of previous intents —
+crosses the host/device boundary once per iteration, exactly like Twister
+re-configuring its long-running map tasks with the previous iteration's
+closures.
+
+Two frontier substrates (``pipeline=``):
+
+  * ``"device"`` (default) — the device-resident pipeline of
+    :mod:`repro.core.frontier`: seed expansion, dedupe/canonicity and
+    feasibility all run as jitted bucket-shaped device ops; the host loop
+    is convergence control plus the global registry.  O(1) bulk transfers
+    per iteration.
+  * ``"host"`` — the paper-literal host loop (per-intent Python seed
+    building, per-row hash inserts).  Kept as the equivalence oracle and
+    the baseline for EXPERIMENTS.md §Perf.
+
+Both substrates produce bit-identical concept sets
+(tests/test_frontier_pipeline.py); MRGanter additionally preserves exact
+lectic emission order on both.
 
 Iteration counts follow the paper's convention (Table 9): every map/reduce
 round over the full context counts as one iteration, including the round
@@ -21,7 +37,10 @@ import numpy as np
 
 from repro.core import bitset, lectic
 from repro.core.engine import ClosureEngine
+from repro.core.frontier import DeviceFrontier
 from repro.core.hashindex import TwoLevelHash
+
+PIPELINES = ("device", "host")
 
 
 @dataclasses.dataclass
@@ -43,20 +62,54 @@ def _seeds_for(Y: np.ndarray, tables: lectic.LecticTables) -> np.ndarray:
     return seeds[valid]
 
 
+def _check_pipeline(pipeline: str):
+    if pipeline not in PIPELINES:
+        raise ValueError(f"unknown pipeline {pipeline!r}; choose {PIPELINES}")
+
+
+def _result(engine: ClosureEngine, intents, n_iter, t0, algorithm) -> MRResult:
+    return MRResult(
+        intents=intents,
+        n_iterations=n_iter,
+        n_closures_computed=engine.stats.closures_computed,
+        modeled_comm_bytes=engine.stats.modeled_comm_bytes,
+        wall_time_s=time.perf_counter() - t0,
+        algorithm=algorithm,
+    )
+
+
 # ---------------------------------------------------------------------------
 # MRGanter (Algorithms 4 + 5): strict lectic order, one concept/iteration.
 # ---------------------------------------------------------------------------
 
 
 def mrganter(
-    ctx, engine: ClosureEngine, max_iterations: int | None = None
+    ctx,
+    engine: ClosureEngine,
+    max_iterations: int | None = None,
+    *,
+    pipeline: str = "device",
 ) -> MRResult:
+    _check_pipeline(pipeline)
     t0 = time.perf_counter()
-    tables = lectic.LecticTables(ctx.n_attrs)
     full = ctx.attr_mask()
     Y, _ = engine.first_closure()
     intents = [Y]
     n_iter = 1
+
+    if pipeline == "device":
+        fr = DeviceFrontier(engine)
+        fr.set_frontier(Y[None, :])
+        done = np.array_equal(Y, full)
+        while not done:
+            if max_iterations is not None and n_iter >= max_iterations:
+                break
+            Y, done = fr.step_ganter()
+            intents.append(Y)
+            n_iter += 1
+        return _result(engine, intents, n_iter, t0, "mrganter")
+
+    tables = lectic.LecticTables(ctx.n_attrs)
     while not np.array_equal(Y, full):
         if max_iterations is not None and n_iter >= max_iterations:
             break
@@ -70,14 +123,7 @@ def mrganter(
         Y = closures[int(idx.max())]
         intents.append(Y)
         n_iter += 1
-    return MRResult(
-        intents=intents,
-        n_iterations=n_iter,
-        n_closures_computed=engine.stats.closures_computed,
-        modeled_comm_bytes=engine.stats.modeled_comm_bytes,
-        wall_time_s=time.perf_counter() - t0,
-        algorithm="mrganter",
-    )
+    return _result(engine, intents, n_iter, t0, "mrganter")
 
 
 # ---------------------------------------------------------------------------
@@ -91,21 +137,46 @@ def mrganter_plus(
     engine: ClosureEngine,
     *,
     dedupe_candidates: bool = False,
+    dedupe_closures: bool = False,
     max_iterations: int | None = None,
+    pipeline: str = "device",
 ) -> MRResult:
     """``dedupe_candidates=False`` is the paper-faithful map phase (every
     frontier intent emits a candidate for every absent attribute).  ``True``
     additionally drops duplicate *seeds* before the closure — a beyond-paper
     optimization benchmarked in EXPERIMENTS.md (same output, fewer closures).
+    On the device pipeline the dedupe is the on-device lexsort+adjacent-
+    unique stage; on the host loop it is ``np.unique``.
     """
+    _check_pipeline(pipeline)
     t0 = time.perf_counter()
-    tables = lectic.LecticTables(ctx.n_attrs)
     H = TwoLevelHash()
     Y0, _ = engine.first_closure()
     H.add(Y0)
     intents = [Y0]
-    frontier = [Y0]
     n_iter = 1
+
+    if pipeline == "device":
+        fr = DeviceFrontier(engine, dedupe_closures=dedupe_closures)
+        fr.set_frontier(Y0[None, :])
+        while len(fr):
+            if max_iterations is not None and n_iter >= max_iterations:
+                break
+            uniq = fr.step_oplus(dedupe=dedupe_candidates)
+            if uniq.shape[0] == 0:
+                break
+            n_iter += 1
+            new_idx = H.add_batch(uniq)  # global registry (vectorized)
+            new = uniq[new_idx]
+            intents.extend(new)
+            if new.shape[0]:
+                fr.set_frontier(new)  # the Twister dynamic delta, one upload
+            else:
+                fr.set_frontier(np.zeros((0, ctx.W), np.uint32))
+        return _result(engine, intents, n_iter, t0, "mrganter+")
+
+    tables = lectic.LecticTables(ctx.n_attrs)
+    frontier = [Y0]
     while frontier:
         if max_iterations is not None and n_iter >= max_iterations:
             break
@@ -124,14 +195,7 @@ def mrganter_plus(
         new_idx = H.add_batch(closures)
         frontier = [closures[i] for i in new_idx]
         intents.extend(frontier)
-    return MRResult(
-        intents=intents,
-        n_iterations=n_iter,
-        n_closures_computed=engine.stats.closures_computed,
-        modeled_comm_bytes=engine.stats.modeled_comm_bytes,
-        wall_time_s=time.perf_counter() - t0,
-        algorithm="mrganter+",
-    )
+    return _result(engine, intents, n_iter, t0, "mrganter+")
 
 
 # ---------------------------------------------------------------------------
@@ -140,14 +204,33 @@ def mrganter_plus(
 
 
 def mrcbo(
-    ctx, engine: ClosureEngine, max_iterations: int | None = None
+    ctx,
+    engine: ClosureEngine,
+    max_iterations: int | None = None,
+    *,
+    pipeline: str = "device",
 ) -> MRResult:
+    _check_pipeline(pipeline)
     t0 = time.perf_counter()
-    tables = lectic.LecticTables(ctx.n_attrs)
     root, _ = engine.first_closure()
     intents = [root]
-    frontier: list[tuple[np.ndarray, int]] = [(root, -1)]
     n_iter = 1
+
+    if pipeline == "device":
+        fr = DeviceFrontier(engine)
+        fr.set_frontier(root[None, :], gens=np.array([-1], np.int32))
+        while len(fr):
+            if max_iterations is not None and n_iter >= max_iterations:
+                break
+            new, n_seeds, _ = fr.step_cbo()  # canonicity filter IS the dedupe
+            if n_seeds == 0:  # frontier exhausted before any closure round
+                break
+            n_iter += 1
+            intents.extend(new)
+        return _result(engine, intents, n_iter, t0, "mrcbo")
+
+    tables = lectic.LecticTables(ctx.n_attrs)
+    frontier: list[tuple[np.ndarray, int]] = [(root, -1)]
     while frontier:
         if max_iterations is not None and n_iter >= max_iterations:
             break
@@ -170,11 +253,4 @@ def mrcbo(
                 intents.append(Z)
                 next_frontier.append((Z, a))
         frontier = next_frontier
-    return MRResult(
-        intents=intents,
-        n_iterations=n_iter,
-        n_closures_computed=engine.stats.closures_computed,
-        modeled_comm_bytes=engine.stats.modeled_comm_bytes,
-        wall_time_s=time.perf_counter() - t0,
-        algorithm="mrcbo",
-    )
+    return _result(engine, intents, n_iter, t0, "mrcbo")

@@ -1,0 +1,7 @@
+"""Distribution substrate: collectives, logical-axis partitioning,
+pipeline parallelism, and gradient compression.
+
+``collectives`` is the FCA reduce phase (paper Theorem 2: global closure =
+bitwise-AND of per-partition local closures); the rest serves the LM
+training/serving half of the system.
+"""

@@ -1,0 +1,132 @@
+"""Bitwise-AND all-reduce — the paper's reduce phase (Theorem 2) as a
+device collective, in three interchangeable implementations:
+
+  * ``allgather`` — every shard all-gathers the full [B, W] local-closure
+    block and AND-folds locally.  One hop, k·B·W words on the wire per
+    device; the baseline reduce.
+  * ``rsag``      — reduce-scatter + all-gather: shards exchange 1/k-sized
+    batch chunks (all_to_all), AND-fold their owned chunk, then all-gather
+    the folded chunks.  2·(k-1)/k·B·W words per device — the bandwidth-
+    optimal ring schedule, same arithmetic, bit-identical output.
+  * ``pmin``      — unpack words to attribute lanes and ``lax.pmin``:
+    AND of {0,1} bits == elementwise min.  Exercises the scalar-collective
+    path (useful on interconnects with native min/max reductions); costs
+    32× the wire bytes of the packed impls unless ``n_attrs`` is passed to
+    bound the unpacked width.
+
+All three are monoid reductions over the AND semigroup, so the results are
+bit-identical regardless of shard count or schedule.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core import bitset
+
+IMPLS = ("allgather", "rsag", "pmin")
+
+
+def _and_fold(x: jax.Array) -> jax.Array:
+    """AND-fold over the leading axis via a log2 tree (static shapes)."""
+    n = x.shape[0]
+    while n > 1:
+        half = n // 2
+        head = x[: 2 * half]
+        x = jnp.concatenate([head[0::2] & head[1::2], x[2 * half :]], axis=0)
+        n = x.shape[0]
+    return x[0]
+
+
+def _axis_size(axis_names) -> int:
+    from jax import core as jax_core
+
+    names = (axis_names,) if isinstance(axis_names, str) else tuple(axis_names)
+    k = 1
+    for a in names:
+        frame = jax_core.axis_frame(a)
+        k *= frame if isinstance(frame, int) else frame.size
+    return k
+
+
+def and_allreduce(
+    x: jax.Array,
+    axis_names,
+    *,
+    impl: str = "rsag",
+    n_attrs: int | None = None,
+) -> jax.Array:
+    """Global bitwise-AND of ``x [B, W]`` across ``axis_names`` shards.
+
+    Must be called inside ``shard_map``; returns the same value on every
+    shard.  ``n_attrs`` (optional) bounds the unpacked width of the
+    ``pmin`` impl to the real attribute count.
+    """
+    if impl not in IMPLS:
+        raise ValueError(f"unknown reduce impl {impl!r}; choose {IMPLS}")
+    k = _axis_size(axis_names)
+    if k == 1:
+        return x
+
+    if impl == "allgather":
+        g = lax.all_gather(x, axis_names)  # [k, B, W]
+        return _and_fold(g.reshape(k, *x.shape))
+
+    if impl == "rsag":
+        B, W = x.shape
+        pad = -B % k
+        if pad:
+            x = jnp.concatenate(
+                [x, jnp.full((pad, W), 0xFFFFFFFF, dtype=x.dtype)], axis=0
+            )
+        chunks = x.reshape(k, (B + pad) // k, W)
+        # reduce-scatter: shard i receives every shard's chunk i …
+        recv = lax.all_to_all(chunks, axis_names, split_axis=0, concat_axis=0)
+        recv = recv.reshape(k, (B + pad) // k, W)
+        owned = _and_fold(recv)  # [B/k, W] — globally-reduced chunk
+        # … all-gather the folded chunks back to the full batch.
+        full = lax.all_gather(owned, axis_names).reshape(B + pad, W)
+        return full[:B]
+
+    # pmin: AND of bits == min of bits, one lane per attribute.
+    W = x.shape[-1]
+    m = n_attrs if n_attrs is not None else W * 32
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    bits = ((x[..., None] >> shifts) & jnp.uint32(1)).reshape(*x.shape[:-1], W * 32)
+    bits = lax.pmin(bits[..., :m], axis_names)
+    pad = W * 32 - m
+    if pad:
+        bits = jnp.concatenate(
+            [bits, jnp.zeros((*bits.shape[:-1], pad), bits.dtype)], axis=-1
+        )
+    weights = (jnp.uint32(1) << shifts).astype(jnp.uint32)
+    return (
+        bits.reshape(*x.shape[:-1], W, 32).astype(jnp.uint32) * weights
+    ).sum(axis=-1, dtype=jnp.uint32)
+
+
+def modeled_comm_bytes(impl: str, n_parts: int, batch: int, W: int) -> int:
+    """Analytic wire bytes for one reduce round over all ``n_parts`` shards.
+
+    Used for the paper's communication-cost accounting (Table 8 discussion)
+    and by the dry-run/benchmarks; the simulated engine charges this model
+    since nothing actually crosses a network on one device.
+    """
+    if n_parts <= 1:
+        return 0
+    word_bytes = batch * W * 4
+    if impl == "allgather":
+        return n_parts * (n_parts - 1) * word_bytes
+    if impl == "rsag":
+        return int(2 * (n_parts - 1) * word_bytes)  # ring RS + AG, summed
+    if impl == "pmin":
+        # one byte per attribute lane (min-reduction on unpacked lanes)
+        return n_parts * (n_parts - 1) * batch * W * 32
+    raise ValueError(f"unknown reduce impl {impl!r}; choose {IMPLS}")
+
+
+def unpacked_width(n_attrs: int) -> int:
+    """Lane count of the pmin impl for ``n_attrs`` attributes."""
+    return bitset.n_words(n_attrs) * 32

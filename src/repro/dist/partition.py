@@ -1,0 +1,134 @@
+"""Logical-axis partitioner: maps the models' *logical* axis names (carried
+on :class:`repro.models.layers.Param` leaves) onto mesh axes.
+
+The rules are Megatron-style:
+
+  * ``batch``/activation leading dims   → the data axes (``pod``, ``data``)
+  * tensor-parallel dims (``vocab``, ``ffn``, ``heads``, ``kv``,
+    ``experts``, ``inner``, ``lru``, ``moe_d``, ``seq_model``) → ``model``
+  * ``embed`` → the data axes when ``fsdp=True`` (ZeRO-3-style parameter
+    sharding along the reduction dim), replicated otherwise
+  * anything else (``layers``, ``head_dim``, ``conv``, ``seq_kv``, None)
+    → replicated
+
+A dim is only sharded when the mesh-axis product divides its size, and each
+mesh axis is used at most once per array (first dim wins) — so reduced test
+configs with tiny head counts degrade gracefully to replication instead of
+erroring.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_DATA_AXES = ("pod", "data")
+_MODEL_AXES = ("model",)
+
+RULES: dict[str, tuple[str, ...]] = {
+    "batch": _DATA_AXES,
+    "vocab": _MODEL_AXES,
+    "ffn": _MODEL_AXES,
+    "heads": _MODEL_AXES,
+    "kv": _MODEL_AXES,
+    "experts": _MODEL_AXES,
+    "inner": _MODEL_AXES,
+    "lru": _MODEL_AXES,
+    "moe_d": _MODEL_AXES,
+    "seq_model": _MODEL_AXES,
+}
+
+
+class Partitioner:
+    def __init__(
+        self,
+        mesh: Mesh | None,
+        *,
+        fsdp: bool | None = False,
+        constrain_attention: bool = True,
+    ):
+        self.mesh = mesh
+        self.fsdp = bool(fsdp)
+        self.constrain_attention = constrain_attention
+
+    # -- rule resolution ---------------------------------------------------
+
+    def _axes_for(self, name) -> tuple[str, ...]:
+        if name is None:
+            return ()
+        if name == "embed":
+            return _DATA_AXES if self.fsdp else ()
+        return RULES.get(name, ())
+
+    def _present(self, mesh_axes: tuple[str, ...]) -> tuple[str, ...]:
+        if self.mesh is None:
+            return ()
+        return tuple(a for a in mesh_axes if a in self.mesh.shape)
+
+    def axis_size(self, mesh_axes: tuple[str, ...]) -> int:
+        axes = self._present(mesh_axes)
+        return int(np.prod([self.mesh.shape[a] for a in axes])) if axes else 1
+
+    def dim_shards(self, name: str, size: int) -> int:
+        """Shard count a dim of ``size`` named ``name`` would get (1 = none)."""
+        k = self.axis_size(self._axes_for(name))
+        return k if k > 1 and size % k == 0 else 1
+
+    def spec(self, names, shape) -> P:
+        """PartitionSpec for logical ``names`` (len == ndim), divisibility-
+        and reuse-checked against ``shape``."""
+        used: set[str] = set()
+        entries = []
+        for name, size in zip(names, shape):
+            axes = self._present(self._axes_for(name))
+            if axes and not (used & set(axes)):
+                k = int(np.prod([self.mesh.shape[a] for a in axes]))
+                if k > 1 and size % k == 0:
+                    used.update(axes)
+                    entries.append(axes if len(axes) > 1 else axes[0])
+                    continue
+            entries.append(None)
+        return P(*entries)
+
+    # -- public API --------------------------------------------------------
+
+    def __call__(self, x: jax.Array, *names) -> jax.Array:
+        """Activation sharding constraint by logical dim names (None = any)."""
+        if self.mesh is None:
+            return x
+        spec = self.spec(names, x.shape)
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, spec)
+        )
+
+    def sharding(self, names, shape) -> NamedSharding:
+        return NamedSharding(self.mesh, self.spec(names, shape))
+
+    def replicated(self) -> NamedSharding:
+        return NamedSharding(self.mesh, P())
+
+    def batch_spec(self, shape, batch_dim: int = 0) -> NamedSharding:
+        names = [None] * len(shape)
+        names[batch_dim] = "batch"
+        return NamedSharding(self.mesh, self.spec(names, shape))
+
+    def tree_shardings(self, axes_tree, abstract_tree):
+        """Tree of NamedShardings from a logical-axes tree + abstract tree.
+
+        ``axes_tree`` leaves are tuples of logical names (as produced by
+        ``layers.split_params``); ``abstract_tree`` leaves anything with
+        ``.shape``.
+        """
+        is_axes_leaf = lambda x: isinstance(x, tuple) and all(
+            isinstance(a, str) or a is None for a in x
+        )
+        flat_axes, treedef = jax.tree_util.tree_flatten(
+            axes_tree, is_leaf=is_axes_leaf
+        )
+        flat_abs = treedef.flatten_up_to(abstract_tree)
+        out = [
+            self.sharding(names, leaf.shape)
+            for names, leaf in zip(flat_axes, flat_abs)
+        ]
+        return jax.tree_util.tree_unflatten(treedef, out)

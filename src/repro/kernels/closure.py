@@ -45,6 +45,8 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+from repro import compat
 from jax.experimental.pallas import tpu as pltpu
 
 DEFAULT_B_BLK = 8
@@ -133,7 +135,7 @@ def closure_pallas(
             jax.ShapeDtypeStruct((B, W), jnp.uint32),
             jax.ShapeDtypeStruct((B, 1), jnp.int32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compat.tpu_compiler_params(
             dimension_semantics=("parallel", "arbitrary")
         ),
         interpret=interpret,

@@ -34,6 +34,8 @@ import math
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+from repro import compat
 from jax.experimental.pallas import tpu as pltpu
 
 NEG_INF = -2.0**30
@@ -164,7 +166,7 @@ def flash_attention(
             pltpu.VMEM((q_blk, 1), jnp.float32),
             pltpu.VMEM((q_blk, hd), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compat.tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary")
         ),
         interpret=interpret,

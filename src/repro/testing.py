@@ -1,0 +1,121 @@
+"""Deterministic fallback for the ``hypothesis`` property-testing API.
+
+The test-suite's property tests are written against ``hypothesis`` (``given``
+/ ``settings`` / ``strategies``).  On clean environments without it, this
+module provides a drop-in subset: strategies become seeded-numpy samplers
+and ``@given`` runs the test body ``max_examples`` times with a
+deterministic per-example rng — same invariants exercised, reproducible
+failures, zero dependencies.
+
+Usage (in tests)::
+
+    try:
+        from hypothesis import given, settings, strategies as st
+    except ModuleNotFoundError:
+        from repro.testing import given, settings, st
+"""
+
+from __future__ import annotations
+
+import zlib
+
+import numpy as np
+
+
+class Strategy:
+    """A sampler: ``fn(rng) -> value``."""
+
+    def __init__(self, fn):
+        self.fn = fn
+
+    def sample(self, rng: np.random.Generator):
+        return self.fn(rng)
+
+
+class _Strategies:
+    @staticmethod
+    def integers(min_value: int, max_value: int) -> Strategy:
+        return Strategy(lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+    @staticmethod
+    def floats(min_value: float, max_value: float) -> Strategy:
+        return Strategy(lambda rng: float(rng.uniform(min_value, max_value)))
+
+    @staticmethod
+    def booleans() -> Strategy:
+        return Strategy(lambda rng: bool(rng.integers(0, 2)))
+
+    @staticmethod
+    def lists(elem: Strategy, min_size: int = 0, max_size: int = 10) -> Strategy:
+        def draw(rng):
+            n = int(rng.integers(min_size, max_size + 1))
+            return [elem.sample(rng) for _ in range(n)]
+
+        return Strategy(draw)
+
+    @staticmethod
+    def composite(f):
+        """``@st.composite``: ``f(draw, **kw)`` → strategy factory."""
+
+        def factory(*args, **kwargs):
+            return Strategy(
+                lambda rng: f(lambda s: s.sample(rng), *args, **kwargs)
+            )
+
+        return factory
+
+
+st = _Strategies()
+
+
+class settings:  # noqa: N801 — mirrors the hypothesis API
+    _profiles: dict[str, dict] = {}
+    _active: dict = {"max_examples": 20}
+
+    def __init__(self, **kwargs):
+        self._kwargs = kwargs
+
+    def __call__(self, fn):  # @settings(...) decorator form
+        fn._repro_settings = self._kwargs
+        return fn
+
+    @classmethod
+    def register_profile(cls, name: str, **kwargs):
+        cls._profiles[name] = kwargs
+
+    @classmethod
+    def load_profile(cls, name: str):
+        cls._active = dict(cls._profiles.get(name, {}))
+        cls._active.setdefault("max_examples", 20)
+
+
+def given(*strategies: Strategy):
+    def decorate(fn):
+        # NOTE: no functools.wraps — pytest must see a zero-arg signature,
+        # not the property's drawn parameters (it would treat them as
+        # fixtures).
+        def wrapper():
+            n = int(
+                getattr(fn, "_repro_settings", {}).get("max_examples", 0)
+                or settings._active.get("max_examples", 20)
+            )
+            # crc32, not hash(): PYTHONHASHSEED randomizes str hashes per
+            # process, which would make the printed failure seed useless.
+            seed0 = zlib.crc32(fn.__qualname__.encode()) % (2**31)
+            for i in range(n):
+                rng = np.random.default_rng([seed0, i])
+                drawn = [s.sample(rng) for s in strategies]
+                try:
+                    fn(*drawn)
+                except Exception as e:  # annotate the failing example
+                    raise AssertionError(
+                        f"property falsified on example {i} "
+                        f"(seed [{seed0}, {i}]): {drawn!r}"
+                    ) from e
+
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        wrapper.__module__ = fn.__module__
+        return wrapper
+
+    return decorate

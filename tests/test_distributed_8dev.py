@@ -36,7 +36,7 @@ def _run(body: str, timeout=420) -> str:
 def test_fca_mesh_matches_centralized():
     out = _run("""
         from repro.core import FormalContext, ClosureEngine, mrganter_plus, all_closures, bitset
-        mesh = jax.make_mesh((2, 4), ("pod", "data"), axis_types=(jax.sharding.AxisType.Auto,)*2)
+        mesh = jax.make_mesh((2, 4), ("pod", "data"))
         fc = FormalContext.synthetic(300, 48, 0.2, seed=3)
         ref = {bitset.key_bytes(y) for y in all_closures(fc)}
         for impl in ("allgather", "rsag", "pmin"):
@@ -55,7 +55,7 @@ def test_moe_ep_shardmap_matches_pjit():
         from repro.configs import get_config
         from repro.models import moe, transformer
         from repro.dist.partition import Partitioner
-        mesh = jax.make_mesh((2, 4), ("data", "model"), axis_types=(jax.sharding.AxisType.Auto,)*2)
+        mesh = jax.make_mesh((2, 4), ("data", "model"))
         cfg = get_config("arctic-480b").reduced()
         # capacity_factor 8 ⇒ no token drops on either path (exact compare);
         # exact=False so the EP shard_map path is the one exercised.
@@ -81,8 +81,8 @@ def test_elastic_checkpoint_reshard():
     out = _run("""
         import tempfile
         from repro.checkpoint import save_checkpoint, restore_checkpoint
-        mesh_a = jax.make_mesh((4, 2), ("data", "model"), axis_types=(jax.sharding.AxisType.Auto,)*2)
-        mesh_b = jax.make_mesh((2, 4), ("data", "model"), axis_types=(jax.sharding.AxisType.Auto,)*2)
+        mesh_a = jax.make_mesh((4, 2), ("data", "model"))
+        mesh_b = jax.make_mesh((2, 4), ("data", "model"))
         x = jnp.arange(64, dtype=jnp.float32).reshape(8, 8)
         tree = {"w": jax.device_put(x, NamedSharding(mesh_a, P("data", "model")))}
         d = tempfile.mkdtemp()
@@ -100,7 +100,7 @@ def test_pipeline_and_compression():
     out = _run("""
         from repro.dist.pipeline import pipeline_apply
         from repro.dist.compression import make_ddp_step
-        mesh = jax.make_mesh((4, 2), ("data", "model"), axis_types=(jax.sharding.AxisType.Auto,)*2)
+        mesh = jax.make_mesh((4, 2), ("data", "model"))
         # pipeline equivalence
         Ws = jax.random.normal(jax.random.key(0), (2, 8, 8)) * 0.3
         stage_fn = lambda W, x: jnp.tanh(x @ W)
@@ -154,7 +154,7 @@ def test_train_step_sharded_end_to_end():
         from repro.train.optim import get_optimizer, warmup_cosine
         from repro.data.lm_data import make_batch_iterator
 
-        mesh = jax.make_mesh((4, 2), ("data", "model"), axis_types=(jax.sharding.AxisType.Auto,)*2)
+        mesh = jax.make_mesh((4, 2), ("data", "model"))
         cfg = get_config("mamba2-370m").reduced()
         shape = ShapeConfig("t", "train", 32, 8)
         part = Partitioner(mesh, fsdp=True)

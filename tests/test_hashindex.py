@@ -1,0 +1,74 @@
+"""Vectorized TwoLevelHash.add_batch vs the per-row oracle (Alg. 6)."""
+
+import numpy as np
+import pytest
+
+from repro.core import bitset
+from repro.core.hashindex import TwoLevelHash, batch_heads
+
+
+def _random_rows(rng, B, m, density=0.3, dup_frac=0.5):
+    """Batch with heavy intra-batch duplication (the MR+ reduce shape)."""
+    base = bitset.pack_bool(rng.random((max(1, B // 2), m)) < density)
+    idx = rng.integers(0, base.shape[0], size=B)
+    rows = base[idx].copy()
+    # sprinkle fresh uniques
+    fresh = rng.random(B) > dup_frac
+    rows[fresh] = bitset.pack_bool(rng.random((int(fresh.sum()), m)) < density)
+    return rows
+
+
+@pytest.mark.parametrize("m", [1, 7, 32, 33, 125, 294])
+def test_batch_heads_matches_scalar(m):
+    rng = np.random.default_rng(m)
+    rows = bitset.pack_bool(rng.random((64, m)) < 0.15)
+    rows[0] = 0  # empty set → head -1
+    heads = batch_heads(rows)
+    for i in range(rows.shape[0]):
+        assert heads[i] == bitset.head_attr(rows[i]), i
+
+
+@pytest.mark.parametrize("seed", range(6))
+@pytest.mark.parametrize("m", [5, 31, 64, 133])
+def test_add_batch_matches_per_row_oracle(seed, m):
+    rng = np.random.default_rng([seed, m])
+    batches = [_random_rows(rng, int(rng.integers(1, 80)), m) for _ in range(4)]
+
+    fast, oracle = TwoLevelHash(), TwoLevelHash()
+    for rows in batches:
+        got = fast.add_batch(rows)
+        want = [i for i in range(rows.shape[0]) if oracle.add(rows[i])]
+        assert got == want
+        assert len(fast) == len(oracle)
+        assert fast.bucket_stats() == oracle.bucket_stats()
+
+
+def test_add_batch_first_occurrence_wins():
+    H = TwoLevelHash()
+    a = bitset.from_indices({1, 3}, 8)
+    b = bitset.from_indices({2}, 8)
+    rows = np.stack([a, b, a, b, a])
+    assert H.add_batch(rows) == [0, 1]
+    assert H.add_batch(rows) == []
+    assert len(H) == 2
+    assert a in H and b in H
+
+
+def test_add_batch_empty_and_zero_rows():
+    H = TwoLevelHash()
+    assert H.add_batch(np.zeros((0, 2), np.uint32)) == []
+    zero = np.zeros((3, 2), np.uint32)  # empty intent: head -1 bucket
+    assert H.add_batch(zero) == [0]
+    assert len(H) == 1
+
+
+def test_add_and_add_batch_interoperate():
+    rng = np.random.default_rng(0)
+    rows = _random_rows(rng, 40, 20)
+    H = TwoLevelHash()
+    H.add(rows[7])
+    got = H.add_batch(rows)
+    assert 7 not in got
+    # every row now present either way
+    for i in range(rows.shape[0]):
+        assert rows[i] in H

@@ -1,7 +1,10 @@
 """Incremental object addition == batch remining (paper §1.1 motivation)."""
 
 import numpy as np
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:  # deterministic seeded fallback (repro.testing)
+    from repro.testing import given, settings, st
 
 from repro.core import all_closures_batched, bitset
 from repro.core.context import FormalContext

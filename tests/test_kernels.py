@@ -3,7 +3,10 @@
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:  # deterministic seeded fallback (repro.testing)
+    from repro.testing import given, settings, st
 
 from repro.core import bitset
 from repro.core.closure import batched_closure_np

@@ -2,7 +2,10 @@
 lectic order — the system's invariants from the paper's §2–3."""
 
 import numpy as np
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:  # deterministic seeded fallback (repro.testing)
+    from repro.testing import given, settings, st
 
 from repro.core import bitset, closure, lectic
 from repro.core.context import FormalContext
