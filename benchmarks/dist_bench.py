@@ -1,0 +1,126 @@
+"""ShardPlan scaling sweep: 1→8 object shards × reduce schedule (§Dist).
+
+Two grids over MRGanter+ on the device pipeline, both through
+:class:`repro.dist.ShardPlan` (simulated geometry — the arithmetic and the
+analytic wire model are shard-count-exact on one CPU; the same plans run
+unchanged over a real mesh, equivalence-tested in
+tests/test_distributed_8dev.py):
+
+  * **scaling** — shard count k ∈ {1, 2, 4, 8} × schedule ∈
+    {allgather, rsag, pmin}, local pruning on: wall time plus the
+    per-round reduce wire bytes each schedule puts on the interconnect.
+  * **pruning A/B** — at k = 8, every schedule with local pruning off vs
+    on: the paper's MRGanter+ claim that per-partition pruning shrinks
+    what the reduce moves.  The reduce is sized by the post-prune bucket,
+    so pruned candidates never enter the collective.
+
+Writes BENCH_dist.json; the headline is the pruning byte ratio under the
+production rsag schedule.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import time
+
+from benchmarks.common import row
+from repro.core import ClosureEngine, mrganter_plus
+from repro.core.engine import EngineStats
+from repro.data import fca_datasets
+from repro.dist.collectives import IMPLS
+from repro.dist.shardplan import ShardPlan
+
+
+def _timed_run(ctx, plan: ShardPlan, *, local_prune: bool) -> dict:
+    """Warm-run protocol: one run populates the plan's jit caches, stats
+    reset, then the steady-state run is timed."""
+    eng = ClosureEngine(ctx, plan=plan, backend="jnp")
+    mrganter_plus(ctx, eng, local_prune=local_prune)
+    eng.stats = EngineStats()
+    t0 = time.perf_counter()
+    res = mrganter_plus(ctx, eng, local_prune=local_prune)
+    wall = time.perf_counter() - t0
+    st = eng.stats
+    rounds = max(1, st.rounds)
+    return {
+        "plan": plan.describe(),
+        "local_prune": local_prune,
+        "wall_time_s": round(wall, 4),
+        "n_concepts": res.n_concepts,
+        "n_iterations": res.n_iterations,
+        "closures_computed": st.closures_computed,
+        "rounds": rounds,
+        "reduce_bytes_total": st.modeled_comm_bytes,
+        "reduce_bytes_per_round": st.modeled_comm_bytes // rounds,
+    }
+
+
+def run(
+    dataset: str = "census-income",
+    scale: float = 0.001,
+    shard_counts=(1, 2, 4, 8),
+    prune_ab_parts: int = 8,
+    out_path: str = "BENCH_dist.json",
+) -> list[str]:
+    ctx, spec = fca_datasets.load(dataset, scale=scale, seed=0)
+
+    scaling = []
+    for impl in IMPLS:
+        for k in shard_counts:
+            plan = ShardPlan.simulated(k, reduce_impl=impl)
+            scaling.append(_timed_run(ctx, plan, local_prune=True))
+
+    pruning = []
+    for impl in IMPLS:
+        plan = ShardPlan.simulated(prune_ab_parts, reduce_impl=impl)
+        for prune in (False, True):
+            pruning.append(_timed_run(ctx, plan, local_prune=prune))
+
+    def _ab(impl: str) -> tuple[dict, dict]:
+        off, on = (
+            r for r in pruning if r["plan"]["reduce_impl"] == impl
+        )
+        return off, on
+
+    off, on = _ab("rsag")
+    payload = {
+        "dataset": dataclasses.asdict(spec),
+        "scaling": scaling,
+        "pruning_ab": pruning,
+        "headline": {
+            "plan": f"simulated {prune_ab_parts}-shard, rsag schedule",
+            "reduce_bytes_per_round_no_prune": off["reduce_bytes_per_round"],
+            "reduce_bytes_per_round_local_prune": on["reduce_bytes_per_round"],
+            "reduce_bytes_ratio": round(
+                off["reduce_bytes_total"] / max(1, on["reduce_bytes_total"]), 2
+            ),
+        },
+    }
+    with open(out_path, "w") as f:
+        json.dump(payload, f, indent=2)
+
+    out = []
+    for r in scaling:
+        p = r["plan"]
+        out.append(row(
+            f"dist/scaling/{p['reduce_impl']}/k={p['n_parts']}",
+            1e6 * r["wall_time_s"],
+            f"reduce_B_per_round={r['reduce_bytes_per_round']}"
+            f"|concepts={r['n_concepts']}|closures={r['closures_computed']}",
+        ))
+    for r in pruning:
+        p = r["plan"]
+        tag = "prune" if r["local_prune"] else "noprune"
+        out.append(row(
+            f"dist/prune_ab/{p['reduce_impl']}/k={p['n_parts']}/{tag}",
+            1e6 * r["wall_time_s"],
+            f"reduce_B_per_round={r['reduce_bytes_per_round']}"
+            f"|closures={r['closures_computed']}",
+        ))
+    out.append(row(
+        "dist/headline_prune_bytes_ratio",
+        payload["headline"]["reduce_bytes_ratio"],
+        f"rsag_k{prune_ab_parts}_noprune_vs_prune|json={out_path}",
+    ))
+    return out

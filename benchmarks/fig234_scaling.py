@@ -38,6 +38,7 @@ def run(parts=(1, 2, 4, 8), datasets=("mushroom", "census-income")) -> list[str]
         for impl in ("allgather", "rsag", "pmin"):
             out.append(row(
                 f"fig234/{name}/comm_model/{impl}/parts=8", 0.0,
-                f"bytes_per_round={modeled_comm_bytes(impl, 8, 1024, ctx.W)}",
+                f"bytes_per_round="
+                f"{modeled_comm_bytes(impl, 8, 1024, ctx.W, ctx.n_attrs)}",
             ))
     return out

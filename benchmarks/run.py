@@ -11,13 +11,14 @@ def main(argv=None) -> None:
     p = argparse.ArgumentParser()
     p.add_argument(
         "--only", default=None,
-        help="comma-separated subset: table7,table8,table9,fig234,kernel,frontier,roofline",
+        help="comma-separated subset: table7,table8,table9,fig234,kernel,frontier,dist,roofline",
     )
     p.add_argument("--roofline-path", default="dryrun_single.jsonl")
     args = p.parse_args(argv)
     only = set(args.only.split(",")) if args.only else None
 
     from benchmarks import (
+        dist_bench,
         fig234_scaling,
         kernel_bench,
         roofline,
@@ -33,6 +34,7 @@ def main(argv=None) -> None:
         "fig234": fig234_scaling.run,
         "kernel": kernel_bench.run,
         "frontier": kernel_bench.run_frontier,
+        "dist": dist_bench.run,
         "roofline": lambda: roofline.run(args.roofline_path),
     }
     print("name,us_per_call,derived")

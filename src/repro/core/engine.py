@@ -1,19 +1,25 @@
 """Distributed closure engine — the MapReduce substrate for the MR* miners.
 
 The engine owns the *static data* (the object-partitioned context, resident
-on device across iterations — Twister's defining feature) and exposes one
-operation: batched **global** closure.
+on device across iterations — Twister's defining feature) and executes the
+paper's map/reduce round:
 
-    map    : per-shard batched closure (Pallas kernel or jnp fallback)
+    map    : per-shard batched closure (Pallas kernel, fused-jnp or MXU
+             matmul backend)
     reduce : bitwise-AND all-reduce of local closures across the object
-             partition axes + psum of supports   (paper Theorem 2)
+             partition + psum of supports   (paper Theorem 2)
 
-Backends:
-  * ``mesh``      — real SPMD over a jax Mesh via shard_map; object rows are
-    sharded over the given axis names (e.g. ("pod", "data")).
-  * ``simulated`` — single-device: rows reshaped [k, N/k, W], local closures
-    vmapped over the partition axis, AND-folded.  Bit-identical arithmetic,
-    used for tests/benchmarks on one CPU device.
+There is exactly one partitioned execution path: every round goes through
+the engine's :class:`repro.dist.ShardPlan`, whose ``spmd`` primitive runs
+the shard body under ``shard_map`` on a real mesh or under a named-axis
+``vmap`` for simulated partitions on one device — same body, same
+collectives, bit-identical arithmetic (see repro/dist/shardplan.py).
+
+``spmd_step`` additionally lets callers fuse a *post* stage (canonicity,
+feasibility, on-device dedupe) into the same SPMD region as the closure
+map + AND-allreduce — the frontier pipeline builds its per-round fused
+steps this way, so under a real mesh the whole iteration executes on the
+partitions.
 
 Supports are corrected globally: all-ones padding rows match every
 candidate, so ``supports -= n_pad_total`` after the psum.
@@ -22,18 +28,17 @@ candidate, so ``supports -= n_pad_total`` after the psum.
 from __future__ import annotations
 
 import dataclasses
-import functools
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 from jax import lax
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh
 
-from repro import compat
 from repro.core import bitset
 from repro.core.context import FormalContext
 from repro.dist import collectives
+from repro.dist.shardplan import ShardPlan
 from repro.kernels import ops
 
 
@@ -58,14 +63,15 @@ class ClosureEngine:
         self,
         ctx: FormalContext,
         *,
+        plan: ShardPlan | None = None,
         mesh: Mesh | None = None,
         axis_names: tuple[str, ...] = ("data",),
         n_parts: int | None = None,
         backend: str | None = None,
         use_kernel: bool = True,
-        reduce_impl: str = "rsag",
-        block_n: int = 256,
-        max_batch: int = 8192,
+        reduce_impl: str | None = None,
+        block_n: int | None = None,
+        max_batch: int | None = None,
         interpret: bool = True,
     ):
         # ``backend`` supersedes the old ``use_kernel`` flag:
@@ -76,43 +82,65 @@ class ClosureEngine:
             backend = "kernel" if use_kernel else "jnp"
         if backend not in BACKENDS:
             raise ValueError(f"unknown backend {backend!r}; choose {BACKENDS}")
+        # ``plan`` supersedes the legacy (mesh, axis_names) / n_parts pair;
+        # both legacy spellings build the same ShardPlan.  Kwarg precedence
+        # is uniform: geometry (mesh/n_parts) conflicts with an explicit
+        # plan and raises; the scalar knobs (reduce_impl/block_n/max_batch)
+        # override the plan's values when passed.
+        if plan is None:
+            if mesh is not None:
+                plan = ShardPlan.over_mesh(
+                    mesh,
+                    axis_names=tuple(axis_names),
+                    reduce_impl=reduce_impl or "rsag",
+                )
+            else:
+                plan = ShardPlan.simulated(
+                    n_parts or 1, reduce_impl=reduce_impl or "rsag"
+                )
+        elif mesh is not None or n_parts is not None or tuple(axis_names) != ("data",):
+            raise ValueError(
+                "pass either plan= or the legacy mesh=/axis_names=/n_parts= "
+                "geometry, not both"
+            )
+        overrides = {
+            k: v
+            for k, v in (
+                ("reduce_impl", reduce_impl),
+                ("block_n", block_n),
+                ("max_batch", max_batch),
+            )
+            if v is not None
+        }
+        if overrides:
+            plan = dataclasses.replace(plan, **overrides)
+        self.plan = plan
         self.ctx = ctx
-        self.mesh = mesh
-        self.axis_names = axis_names
+        self.mesh = plan.mesh
+        self.axis_names = plan.axis_names
         self.backend = backend
         self.use_kernel = backend == "kernel"
-        self.reduce_impl = reduce_impl
-        self.block_n = block_n
-        self.max_batch = max_batch
+        self.reduce_impl = plan.reduce_impl
+        self.block_n = plan.block_n
+        self.max_batch = plan.max_batch
         self.interpret = interpret
         self.stats = EngineStats()
-
-        if mesh is not None:
-            k = 1
-            for a in axis_names:
-                k *= mesh.shape[a]
-        else:
-            k = n_parts or 1
-        self.n_parts = k
+        self.n_parts = plan.n_parts
 
         # Pad rows so every shard is block-aligned: N % (k * block_n) == 0.
-        rows, n_pad = ctx.padded_rows(k * block_n)
+        rows, n_pad = ctx.padded_rows(plan.row_alignment)
         self.n_pad_rows = n_pad
         self.N_padded = rows.shape[0]
-        self._mask = jnp.asarray(ctx.attr_mask())
+        self._mask_np = ctx.attr_mask()
+        self.rows = plan.place_rows(rows)
 
-        if mesh is not None:
-            sharding = NamedSharding(mesh, P(axis_names, None))
-            self.rows = jax.device_put(jnp.asarray(rows), sharding)
-        else:
-            self.rows = jnp.asarray(rows).reshape(k, self.N_padded // k, ctx.W)
+        self._step = self.spmd_step(with_supports=True)
 
-        self._step = self._build_step()
+    # -- the one partitioned execution path --------------------------------
 
-    # -- step builders -----------------------------------------------------
-
-    def _build_step(self):
-        ctx, axis_names, impl = self.ctx, self.axis_names, self.reduce_impl
+    def _local_closure(self):
+        """Per-shard map phase for the configured backend."""
+        ctx = self.ctx
         backend, block_n, interp = self.backend, self.block_n, self.interpret
 
         if backend == "matmul":
@@ -138,45 +166,51 @@ class ClosureEngine:
                     interpret=interp,
                 )
 
-        if self.mesh is not None:
-            flat_axes = axis_names if len(axis_names) > 1 else axis_names[0]
+        return local_closure
 
-            def shard_body(rows_local, cands):
-                lc, ls = local_closure(rows_local, cands)
-                gc = collectives.and_allreduce(
-                    lc, flat_axes, impl=impl, n_attrs=ctx.n_attrs
-                )
-                gs = lax.psum(ls, flat_axes)
-                return gc, gs
+    def spmd_step(self, post=None, *, with_supports: bool = False, n_extra: int = 0):
+        """Build one jitted plan-SPMD round: map → AND-allreduce [→ post].
 
-            smapped = compat.shard_map(
-                shard_body,
-                mesh=self.mesh,
-                in_specs=(P(axis_names, None), P()),
-                out_specs=(P(), P()),
-                check_vma=False,  # pallas_call outputs carry no vma info
+        The returned callable is ``step(rows, cands, *extras)``.  Each
+        shard computes local closures, the reduce runs the plan's
+        collective schedule, and — when given — ``post`` consumes the
+        *global* closures (masked to real attributes) plus the ``n_extra``
+        replicated extras.  The plan places ``post``: fused into the same
+        SPMD region on a mesh, applied once past the vmap on a simulated
+        plan (its input is shard-invariant, so both are bit-identical).
+        Without ``post`` the step returns the masked global closures, plus
+        pad-corrected supports when ``with_supports``.
+        """
+        plan, ctx = self.plan, self.ctx
+        local_closure = self._local_closure()
+        axes, impl = plan.reduce_axes, plan.reduce_impl
+        mask_np, n_pad = self._mask_np, self.n_pad_rows
+
+        def body(rows_local, cands):
+            lc, ls = local_closure(rows_local, cands)
+            gc = collectives.and_allreduce(
+                lc, axes, impl=impl, n_attrs=ctx.n_attrs
             )
+            gc = gc & jnp.asarray(mask_np)
+            if with_supports:
+                return gc, lax.psum(ls, axes) - n_pad
+            return gc
 
-            @jax.jit
-            def step(rows, cands):
-                gc, gs = smapped(rows, cands)
-                return gc & self._mask, gs - self.n_pad_rows
+        return jax.jit(
+            plan.spmd(body, n_rep=1, post=post, n_post_rep=n_extra)
+        )
 
-            return step
+    # -- stats accounting ---------------------------------------------------
 
-        # Simulated partitions on one device.
-        def sim_body(rows_k, cands):
-            lc, ls = jax.vmap(lambda r: local_closure(r, cands))(rows_k)
-            gc = collectives._and_fold(lc)
-            gs = ls.sum(axis=0)
-            return gc, gs
-
-        @jax.jit
-        def step(rows, cands):
-            gc, gs = sim_body(rows, cands)
-            return gc & self._mask, gs - self.n_pad_rows
-
-        return step
+    def charge_round(self, cap: int, n_valid: int, *, count_round: bool = True):
+        """Ledger one SPMD closure dispatch of a ``cap``-padded batch."""
+        self.stats.closure_calls += 1
+        if count_round:
+            self.stats.rounds += 1
+        self.stats.closures_computed += n_valid
+        self.stats.modeled_comm_bytes += self.plan.modeled_reduce_bytes(
+            cap, self.ctx.W, self.ctx.n_attrs
+        )
 
     # -- public API ----------------------------------------------------------
 
@@ -205,15 +239,11 @@ class ClosureEngine:
             gc, gs = self._step(self.rows, jnp.asarray(chunk))
             out_c[lo : lo + b] = np.asarray(gc)[:b]
             out_s[lo : lo + b] = np.asarray(gs)[:b]
-            self.stats.closure_calls += 1
-            self.stats.closures_computed += b
+            self.charge_round(cap, b, count_round=False)
             self.stats.h2d_transfers += 1
             self.stats.h2d_bytes += cap * self.ctx.W * 4
             self.stats.d2h_transfers += 2
             self.stats.d2h_bytes += cap * (self.ctx.W + 1) * 4
-            self.stats.modeled_comm_bytes += collectives.modeled_comm_bytes(
-                self.reduce_impl, self.n_parts, cap, self.ctx.W
-            )
         return out_c, out_s
 
     def closure_dev(
@@ -227,13 +257,7 @@ class ClosureEngine:
         """
         cap = cands.shape[0]
         gc, gs = self._step(self.rows, cands)
-        self.stats.closure_calls += 1
-        if count_round:
-            self.stats.rounds += 1
-        self.stats.closures_computed += n_valid
-        self.stats.modeled_comm_bytes += collectives.modeled_comm_bytes(
-            self.reduce_impl, self.n_parts, cap, self.ctx.W
-        )
+        self.charge_round(cap, n_valid, count_round=count_round)
         return gc, gs
 
     def first_closure(self) -> tuple[np.ndarray, int]:

@@ -1,16 +1,28 @@
-"""Device-resident frontier pipeline for the MR* drivers (§Perf F1).
+"""Device-resident frontier pipeline for the MR* drivers (§Perf F1, §Dist).
 
 The seed drivers kept the *frontier* on the host: per-intent Python loops
 built ⊕/CbO seeds, `np.unique` deduped candidates, and the two-level hash
 filtered closures row by row — O(frontier · m) small host ops per
-iteration.  This module moves the whole frontier side onto the device:
+iteration.  This module runs the whole frontier side through the engine's
+:class:`repro.dist.ShardPlan`:
 
     frontier [F, W]  ──►  vectorized seed expansion (LOW/BIT broadcast)
-                     ──►  validity compaction (+ optional dedupe:
-                          lexsort + adjacent-unique over packed words)
-                     ──►  sharded closure (engine backend: kernel/jnp/matmul)
-                     ──►  batched feasibility / canonicity / uniqueness
+                     ──►  validity compaction (+ local pruning: lexsort +
+                          adjacent-unique over packed words, *before* the
+                          reduce — MRGanter+'s per-partition combiner)
+                     ──►  plan-SPMD round, one region per chunk:
+                          local closure map → AND-allreduce →
+                          fused canonicity / feasibility / closure-dedupe
                      ──►  compacted survivors
+
+Frontier state and the LOW/BIT tables are plan-replicated, so under a real
+mesh the expansion and pruning stages compute partition-locally on every
+device (no central expand + broadcast), and the only wire traffic per round
+is the AND-allreduce itself — sized by the *pruned* candidate count, since
+the chunk buckets are chosen after the dedupe.  Pruned candidates never
+cross the wire.  XLA shapes are static, so the one scalar sync per round
+(the surviving-seed count) is what lets the reduce shrink to the pruned
+bucket; everything else stays on device.
 
 Every stage is a jitted device function over bucket-padded shapes
 (powers of two — recompiles are bounded by O(log max_frontier)); the host
@@ -21,8 +33,9 @@ frontier after the global-registry check).  This is the Twister framing of
 moves, and the dynamic delta crossing the boundary is exactly the new
 concepts.
 
-Benchmarked in EXPERIMENTS.md §Perf; equivalence to the host-loop drivers
-is asserted in tests/test_frontier_pipeline.py.
+Benchmarked in EXPERIMENTS.md §Perf/§Dist; equivalence to the host-loop
+drivers is asserted in tests/test_frontier_pipeline.py and, on a real
+8-device mesh, tests/test_distributed_8dev.py.
 """
 
 from __future__ import annotations
@@ -89,8 +102,8 @@ def slice_pad(arr, lo: int, cap: int, fill=0):
 def expand_oplus(frontier, n_valid, LOW, BIT, *, n_attrs: int, dedupe: bool):
     """⊕-expansion of a frontier [F, W] → compacted seeds [F·m, W] + count.
 
-    ``dedupe=True`` additionally drops duplicate seeds on device (the
-    beyond-paper ``dedupe_candidates`` optimization, no host `np.unique`).
+    ``dedupe=True`` is MRGanter+'s local pruning: duplicate seeds die here,
+    on the partition, before any reduce is sized (``dedupe_candidates``).
     """
     F, W = frontier.shape
     row_ok = jnp.arange(F) < n_valid
@@ -109,8 +122,8 @@ def expand_oplus(frontier, n_valid, LOW, BIT, *, n_attrs: int, dedupe: bool):
 def expand_cbo(frontier, gens, n_valid, BIT, *, n_attrs: int):
     """CbO expansion: seeds ``Y ∪ {a}`` for ``a > gen(Y), a ∉ Y``.
 
-    Returns compacted ``(seeds [F·m, W], parent_idx, gen_attr, count)`` —
-    parent/generator lineage rides along for the canonicity stage.
+    Returns compacted ``(seeds [F·m, W], parent_rows, gen_attr, count)`` —
+    parent/generator lineage rides along for the fused canonicity stage.
     """
     F, W = frontier.shape
     row_ok = jnp.arange(F) < n_valid
@@ -121,37 +134,36 @@ def expand_cbo(frontier, gens, n_valid, BIT, *, n_attrs: int):
     parent = jnp.repeat(jnp.arange(F, dtype=jnp.int32), n_attrs)
     gen = jnp.tile(jnp.arange(n_attrs, dtype=jnp.int32), F)
     n, seeds, parent, gen = _compact(valid, seeds, parent, gen)
-    return seeds, parent, gen, n
+    return seeds, frontier[parent], gen, n
 
 
-@jax.jit
 def unique_closures(closures, n_valid):
     """Intra-batch dedupe of closure outputs: sorted-unique + compaction.
 
     The cross-iteration novelty check stays with the host registry; this
     stage just collapses the (heavily duplicated) reduce output so only
-    distinct intents cross the device→host boundary.
+    distinct intents cross the device→host boundary.  Fused into the
+    plan's SPMD round after the AND-allreduce (the plan places it:
+    in-region on a mesh, once past the vmap on a simulated plan).
     """
     valid = jnp.arange(closures.shape[0]) < n_valid
     n, closures = _sort_unique(closures, valid)
     return closures, n
 
 
-@jax.jit
-def filter_canonical(closures, frontier, parent_idx, gen, n_valid, LOW):
+def filter_canonical(closures, parents, gens, n_valid, LOW):
     """CbO canonicity ``(Z ^ Y) & LOW[a] == 0`` + survivor compaction.
 
     Survivors are *exactly* the new concepts (CbO generates each concept
     once under this test), so they double as the next device frontier.
+    Fused into the plan's SPMD round, on the globally-reduced closures.
     """
-    parents = frontier[parent_idx]
-    ok = lectic.feasible_jnp(closures, parents, gen, LOW)
+    ok = lectic.feasible_jnp(closures, parents, gens, LOW)
     ok = ok & (jnp.arange(closures.shape[0]) < n_valid)
-    n, closures, gen = _compact(ok, closures, gen)
-    return closures, gen, n
+    n, closures, gens = _compact(ok, closures, gens)
+    return closures, gens, n
 
 
-@functools.partial(jax.jit, static_argnames=("n_attrs",))
 def ganter_select(closures, Y, valid, LOW, mask, *, n_attrs: int):
     """NextClosure's Alg.-5 scan as one device op: feasibility for every
     generator attribute, then the *largest* feasible one wins."""
@@ -170,28 +182,72 @@ def ganter_select(closures, Y, valid, LOW, mask, *, n_attrs: int):
 
 
 class DeviceFrontier:
-    """Holds the device-resident frontier state for one mining run and
+    """Holds the plan-replicated frontier state for one mining run and
     exposes the per-iteration fused steps the MR* drivers are written in.
 
-    The engine provides the sharded closure (`closure_dev`) and the stats
-    ledger; this class owns expansion/dedupe/filter orchestration and the
-    bucket/chunk bookkeeping.
+    The engine's ShardPlan provides placement and the SPMD round builder
+    (`spmd_step`); this class owns expansion/pruning orchestration, the
+    fused post-reduce filters, and the bucket/chunk bookkeeping.
     """
 
     def __init__(self, engine, *, dedupe_closures: bool = False):
         self.engine = engine
+        self.plan = engine.plan
         self.n_attrs = engine.ctx.n_attrs
         self.W = engine.ctx.W
-        self.LOW, self.BIT, self.mask = lectic.tables_jnp(self.n_attrs)
         # Collapse duplicate *closure outputs* on device before download.
         # Saves D2H bandwidth on real accelerators; on the CPU 'device' the
         # XLA variadic sort costs more than the memcpy it saves, so the
         # default leaves cross-closure dedupe to the (vectorized) host
         # registry.  Equivalence holds either way (tests cover both).
         self.dedupe_closures = dedupe_closures
-        self._frontier = None  # [Fb, W] device
-        self._gens = None  # [Fb] device (CbO lineage)
+        self._frontier = None  # [Fb, W] plan-replicated
+        self._gens = None  # [Fb] plan-replicated (CbO lineage)
         self._n = 0
+
+        # Everything frontier-static is memoized on the ENGINE, not this
+        # object: a driver builds a fresh DeviceFrontier per run, and
+        # per-run jax.jit wrappers would re-trace and re-compile the whole
+        # pipeline every run (defeating the warm-run protocol).  The
+        # tables are engine-ctx-determined and the four fused steps are
+        # identical for every DeviceFrontier of a given engine.
+        cache = getattr(engine, "_frontier_cache", None)
+        if cache is None:
+            t = lectic.LecticTables(self.n_attrs)
+            n_attrs = self.n_attrs
+
+            # Host-side tables are closed over by the fused post stages
+            # (baked into the SPMD region as compile-time constants).
+            def post_cbo(gc, parents, gens, n_valid):
+                return filter_canonical(
+                    gc, parents, gens, n_valid, jnp.asarray(t.LOW)
+                )
+
+            def post_ganter(gc, Y, valid):
+                return ganter_select(
+                    gc, Y, valid, jnp.asarray(t.LOW),
+                    jnp.asarray(t.attr_mask), n_attrs=n_attrs,
+                )
+
+            cache = {
+                # plan-replicated so expansion runs on every partition
+                # instead of one device + a broadcast at the region edge
+                "LOW": self.plan.replicate(t.LOW),
+                "BIT": self.plan.replicate(t.BIT),
+                # fused per-round SPMD steps: each is ONE plan round doing
+                # closure map → AND-allreduce → the driver's filter
+                "plain": engine.spmd_step(),
+                "unique": engine.spmd_step(unique_closures, n_extra=1),
+                "cbo": engine.spmd_step(post_cbo, n_extra=3),
+                "ganter": engine.spmd_step(post_ganter, n_extra=2),
+            }
+            engine._frontier_cache = cache
+        self.LOW = cache["LOW"]
+        self.BIT = cache["BIT"]
+        self._close_plain = cache["plain"]
+        self._close_unique = cache["unique"]
+        self._close_cbo = cache["cbo"]
+        self._close_ganter = cache["ganter"]
 
     # -- frontier state ----------------------------------------------------
 
@@ -204,14 +260,14 @@ class DeviceFrontier:
         cap = bucket_size(max(1, n))
         buf = np.zeros((cap, self.W), np.uint32)
         buf[:n] = intents
-        self._frontier = jnp.asarray(buf)
+        self._frontier = self.plan.replicate(buf)
         st = self.engine.stats
         st.h2d_transfers += 1
         st.h2d_bytes += buf.nbytes
         if gens is not None:
             gbuf = np.zeros((cap,), np.int32)
             gbuf[:n] = gens
-            self._gens = jnp.asarray(gbuf)
+            self._gens = self.plan.replicate(gbuf)
             st.h2d_transfers += 1
             st.h2d_bytes += gbuf.nbytes
         self._n = n
@@ -233,19 +289,21 @@ class DeviceFrontier:
     # -- fused per-iteration steps ----------------------------------------
 
     def step_oplus(self, *, dedupe: bool) -> np.ndarray:
-        """One MRGanter+ iteration: expand → (dedupe) → close → collect.
+        """One MRGanter+ iteration: expand → local prune → close → collect.
 
         Returns the round's closure intents (host array; de-duplicated on
         device when ``dedupe_closures``); the caller runs the global-
         registry novelty check and hands the novel rows back via
-        :meth:`set_frontier`.
+        :meth:`set_frontier`.  ``dedupe=True`` prunes duplicate seeds on
+        the partition *before* the reduce is sized, so they never enter
+        the AND-allreduce.
         """
         eng = self.engine
         seeds, n_dev = expand_oplus(
             self._frontier, self._n, self.LOW, self.BIT,
             n_attrs=self.n_attrs, dedupe=dedupe,
         )
-        n_seeds = int(n_dev)  # scalar sync — the only blocking read
+        n_seeds = int(n_dev)  # scalar sync — sizes the reduce to the prune
         if n_seeds == 0:
             return np.zeros((0, self.W), np.uint32)
         uniq_parts = []
@@ -254,25 +312,28 @@ class DeviceFrontier:
             b = min(eng.max_batch, n_seeds - lo)
             cap = bucket_size(b, minimum=eng.min_bucket)
             chunk = slice_pad(seeds, lo, cap)
-            closures, _ = eng.closure_dev(chunk, b, count_round=first)
-            first = False
             if self.dedupe_closures:
-                cl_u, k_dev = unique_closures(closures, b)
+                cl_u, k_dev = self._close_unique(eng.rows, chunk, jnp.int32(b))
+                eng.charge_round(cap, b, count_round=first)
                 uniq_parts.append(self._download(cl_u, int(k_dev)))
             else:
+                closures = self._close_plain(eng.rows, chunk)
+                eng.charge_round(cap, b, count_round=first)
                 uniq_parts.append(self._download(closures, b))
+            first = False
         return np.concatenate(uniq_parts, axis=0)
 
     def step_cbo(self) -> tuple[np.ndarray, int, int]:
-        """One MRCbo iteration: expand → close → canonicity → adopt.
+        """One MRCbo iteration: expand → close+canonicity (fused) → adopt.
 
-        Canonical survivors stay on device as the next frontier; the same
-        rows are downloaded once for the result set.  Returns
-        ``(new_intents, n_seeds, n_new)`` — ``n_seeds`` is 0 when the
-        frontier was already exhausted (no closure round ran).
+        The canonicity filter runs inside the same SPMD region as the
+        closure map and reduce; canonical survivors stay on device as the
+        next frontier and the same rows are downloaded once for the result
+        set.  Returns ``(new_intents, n_seeds, n_new)`` — ``n_seeds`` is 0
+        when the frontier was already exhausted (no closure round ran).
         """
         eng = self.engine
-        seeds, parent, gen, n_dev = expand_cbo(
+        seeds, parents, gen, n_dev = expand_cbo(
             self._frontier, self._gens, self._n, self.BIT, n_attrs=self.n_attrs
         )
         n_seeds = int(n_dev)
@@ -284,14 +345,15 @@ class DeviceFrontier:
         for lo in range(0, n_seeds, eng.max_batch):
             b = min(eng.max_batch, n_seeds - lo)
             cap = bucket_size(b, minimum=eng.min_bucket)
-            chunk = slice_pad(seeds, lo, cap)
-            closures, _ = eng.closure_dev(chunk, b, count_round=first)
-            first = False
-            z, g, k_dev = filter_canonical(
-                closures, self._frontier,
-                slice_pad(parent, lo, cap), slice_pad(gen, lo, cap),
-                b, self.LOW,
+            z, g, k_dev = self._close_cbo(
+                eng.rows,
+                slice_pad(seeds, lo, cap),
+                slice_pad(parents, lo, cap),
+                slice_pad(gen, lo, cap),
+                jnp.int32(b),
             )
+            eng.charge_round(cap, b, count_round=first)
+            first = False
             k = int(k_dev)
             if k:
                 surv_z.append(z[:k])
@@ -308,8 +370,9 @@ class DeviceFrontier:
 
     def step_ganter(self) -> tuple[np.ndarray, bool]:
         """One MRGanter iteration: ⊕-seeds for the single current intent,
-        closure, Alg.-5 feasibility scan, argmax-select — fused on device.
-        Returns ``(next intent (host), reached ⊤)``."""
+        then one fused SPMD region: closure map → AND-allreduce → Alg.-5
+        feasibility scan → argmax-select.  Returns ``(next intent (host),
+        reached ⊤)``."""
         eng = self.engine
         Y = self._frontier[0]
         seeds, valid = lectic.oplus_seeds_jnp(
@@ -317,12 +380,10 @@ class DeviceFrontier:
         )
         seeds = seeds.reshape(self.n_attrs, self.W)
         cap = bucket_size(self.n_attrs, minimum=eng.min_bucket)
-        closures, _ = eng.closure_dev(
-            slice_pad(seeds, 0, cap), int(valid[0].sum())
+        Y_next, done = self._close_ganter(
+            eng.rows, slice_pad(seeds, 0, cap), Y, valid[0]
         )
-        Y_next, done = ganter_select(
-            closures, Y, valid[0], self.LOW, self.mask, n_attrs=self.n_attrs
-        )
+        eng.charge_round(cap, int(valid[0].sum()))
         cap_f = self._frontier.shape[0]
         self._frontier = jnp.broadcast_to(Y_next, (cap_f, self.W))
         self._n = 1

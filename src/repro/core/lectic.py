@@ -11,8 +11,6 @@ becomes the word-parallel test ``((cand ^ Y) & low_mask(a)) == 0``.
 
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -76,17 +74,6 @@ def lectic_leq(y1: np.ndarray, y2: np.ndarray, n_attrs: int) -> bool:
 # jnp twins — the device half used by the frontier pipeline (core.frontier).
 # Same arithmetic as the numpy ops above, on [batch, ...] shapes, jit-able.
 # ---------------------------------------------------------------------------
-
-
-@functools.lru_cache(maxsize=None)
-def tables_jnp(n_attrs: int) -> tuple[jax.Array, jax.Array, jax.Array]:
-    """Device-resident ``(LOW [m, W], BIT [m, W], attr_mask [W])`` tables.
-
-    Cached per attribute count — uploaded once, then static data for every
-    iteration (the Twister discipline applied to the lectic masks).
-    """
-    t = LecticTables(n_attrs)
-    return jnp.asarray(t.LOW), jnp.asarray(t.BIT), jnp.asarray(t.attr_mask)
 
 
 def member_bits_jnp(Y: jax.Array, n_attrs: int) -> jax.Array:

@@ -2,10 +2,12 @@
 drivers over a :class:`repro.core.engine.ClosureEngine`.
 
 Each driver is the Twister control loop: the engine holds the static data
-(sharded context); the *dynamic data* — the frontier of previous intents —
-crosses the host/device boundary once per iteration, exactly like Twister
-re-configuring its long-running map tasks with the previous iteration's
-closures.
+(context sharded by its :class:`repro.dist.ShardPlan`); the *dynamic data*
+— the frontier of previous intents — crosses the host/device boundary once
+per iteration, exactly like Twister re-configuring its long-running map
+tasks with the previous iteration's closures.  Every closure round the
+drivers issue executes through the engine's plan — one partitioned path
+whether the partitions are a real device mesh or simulated on one chip.
 
 Two frontier substrates (``pipeline=``):
 
@@ -138,17 +140,24 @@ def mrganter_plus(
     *,
     dedupe_candidates: bool = False,
     dedupe_closures: bool = False,
+    local_prune: bool | None = None,
     max_iterations: int | None = None,
     pipeline: str = "device",
 ) -> MRResult:
-    """``dedupe_candidates=False`` is the paper-faithful map phase (every
+    """``dedupe_candidates=False`` is the paper-literal map phase (every
     frontier intent emits a candidate for every absent attribute).  ``True``
-    additionally drops duplicate *seeds* before the closure — a beyond-paper
-    optimization benchmarked in EXPERIMENTS.md (same output, fewer closures).
-    On the device pipeline the dedupe is the on-device lexsort+adjacent-
-    unique stage; on the host loop it is ``np.unique``.
+    drops duplicate *seeds* before the closure — the paper's per-partition
+    local pruning: on the device pipeline the dedupe is the on-device
+    lexsort+adjacent-unique stage, run partition-locally *before* the
+    AND-allreduce is sized, so pruned candidates never cross the wire
+    (EXPERIMENTS.md §Dist quantifies the reduce-byte savings); on the host
+    loop it is ``np.unique``.  Same output either way.  ``local_prune`` is
+    the paper-facing alias for the same switch (it wins when both are
+    given).
     """
     _check_pipeline(pipeline)
+    if local_prune is not None:
+        dedupe_candidates = local_prune
     t0 = time.perf_counter()
     H = TwoLevelHash()
     Y0, _ = engine.first_closure()

@@ -1,7 +1,13 @@
-"""Distribution substrate: collectives, logical-axis partitioning,
-pipeline parallelism, and gradient compression.
+"""Distribution substrate: the ShardPlan SPMD layer, collectives,
+logical-axis partitioning, pipeline parallelism, and gradient compression.
 
-``collectives`` is the FCA reduce phase (paper Theorem 2: global closure =
-bitwise-AND of per-partition local closures); the rest serves the LM
-training/serving half of the system.
+``shardplan`` is the partition-aware execution layer every MR* round runs
+through (one plan abstraction covering real meshes and simulated
+partitions); ``collectives`` is its reduce phase (paper Theorem 2: global
+closure = bitwise-AND of per-partition local closures); the rest serves
+the LM training/serving half of the system.
 """
+
+from repro.dist.shardplan import ShardPlan
+
+__all__ = ["ShardPlan"]

@@ -24,8 +24,6 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
-from repro.core import bitset
-
 IMPLS = ("allgather", "rsag", "pmin")
 
 
@@ -107,12 +105,16 @@ def and_allreduce(
     ).sum(axis=-1, dtype=jnp.uint32)
 
 
-def modeled_comm_bytes(impl: str, n_parts: int, batch: int, W: int) -> int:
+def modeled_comm_bytes(
+    impl: str, n_parts: int, batch: int, W: int, n_attrs: int | None = None
+) -> int:
     """Analytic wire bytes for one reduce round over all ``n_parts`` shards.
 
     Used for the paper's communication-cost accounting (Table 8 discussion)
     and by the dry-run/benchmarks; the simulated engine charges this model
-    since nothing actually crosses a network on one device.
+    since nothing actually crosses a network on one device.  ``n_attrs``
+    bounds the pmin lane count exactly as it bounds the implementation
+    (without it the full ``W·32`` unpacked width is charged).
     """
     if n_parts <= 1:
         return 0
@@ -122,11 +124,8 @@ def modeled_comm_bytes(impl: str, n_parts: int, batch: int, W: int) -> int:
     if impl == "rsag":
         return int(2 * (n_parts - 1) * word_bytes)  # ring RS + AG, summed
     if impl == "pmin":
-        # one byte per attribute lane (min-reduction on unpacked lanes)
-        return n_parts * (n_parts - 1) * batch * W * 32
+        # one uint32 per unpacked attribute lane — what lax.pmin actually
+        # exchanges (32× the packed impls when unbounded)
+        lanes = n_attrs if n_attrs is not None else W * 32
+        return n_parts * (n_parts - 1) * batch * lanes * 4
     raise ValueError(f"unknown reduce impl {impl!r}; choose {IMPLS}")
-
-
-def unpacked_width(n_attrs: int) -> int:
-    """Lane count of the pmin impl for ``n_attrs`` attributes."""
-    return bitset.n_words(n_attrs) * 32

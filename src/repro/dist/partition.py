@@ -26,6 +26,15 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 _DATA_AXES = ("pod", "data")
 _MODEL_AXES = ("model",)
 
+
+def object_axes(mesh) -> tuple[str, ...]:
+    """The mesh axes that carry an object/batch partition, pod-major.
+
+    Shared vocabulary between the LM data-parallel path and the FCA
+    ShardPlan (whose context rows shard over the same axes).
+    """
+    return tuple(a for a in _DATA_AXES if a in mesh.shape)
+
 RULES: dict[str, tuple[str, ...]] = {
     "batch": _DATA_AXES,
     "vocab": _MODEL_AXES,

@@ -1,0 +1,258 @@
+"""ShardPlan — the one partition-aware SPMD execution layer (paper §3).
+
+Every MR* round is the same program: per-shard local closure over the
+object-partitioned context, then a bitwise-AND all-reduce (Theorem 2) plus
+whatever per-round filter rides along (dedupe, canonicity, feasibility).
+Historically the engine kept two divergent code paths for this — a
+``shard_map`` path over a real jax Mesh and a hand-rolled reshape-and-vmap
+path for simulated partitions on one device.  ``ShardPlan`` collapses both
+behind one abstraction that owns
+
+  * **partition geometry** — object-axis shard count for the context
+    (``n_parts``), block alignment (``block_n``) and the frontier-batch
+    chunk cap for candidates (``max_batch``);
+  * **device placement** — ``place_rows`` shards the context over the
+    plan's axes, ``replicate`` pins frontier/table state to every shard;
+  * **the collective schedule** — which AND-allreduce implementation
+    (``allgather`` / ``rsag`` / ``pmin``, see :mod:`repro.dist.collectives`)
+    the reduce phase runs, and its analytic wire-byte model.
+
+``spmd(body, n_rep)`` is the single execution primitive: ``body`` receives
+the local context shard plus replicated operands and may call collectives
+over ``plan.reduce_axes``.  On a mesh plan it lowers through
+``shard_map``; on a simulated plan the *same body* runs under ``jax.vmap``
+with a named axis over the reshaped ``[k, N/k, W]`` rows — jax's batched
+collective rules make ``all_gather`` / ``all_to_all`` / ``pmin`` /
+``psum`` execute the identical arithmetic, so the two modes are
+bit-identical by construction (asserted in tests/test_shardplan.py and the
+8-device harness).  The AND semigroup is associative, commutative and
+idempotent over uint32 words, so every schedule agrees bit-for-bit too.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro import compat
+from repro.dist import collectives
+from repro.dist.partition import object_axes
+
+# vmap axis name carrying the simulated object partition. Collectives in a
+# shard body reference ``plan.reduce_axes`` and never this name directly.
+SIM_AXIS = "objpart"
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardPlan:
+    """Partition geometry + placement + collective schedule for one run."""
+
+    mesh: Mesh | None
+    axis_names: tuple[str, ...]
+    n_parts: int
+    reduce_impl: str = "rsag"
+    block_n: int = 256
+    max_batch: int = 8192
+
+    def __post_init__(self):
+        if self.reduce_impl not in collectives.IMPLS:
+            raise ValueError(
+                f"unknown reduce schedule {self.reduce_impl!r}; "
+                f"choose {collectives.IMPLS}"
+            )
+        if self.n_parts < 1:
+            raise ValueError(f"n_parts must be >= 1, got {self.n_parts}")
+
+    # -- constructors ------------------------------------------------------
+
+    @classmethod
+    def simulated(
+        cls,
+        n_parts: int = 1,
+        *,
+        reduce_impl: str = "rsag",
+        block_n: int = 256,
+        max_batch: int = 8192,
+    ) -> "ShardPlan":
+        """``n_parts`` object shards on one device (reshape + named vmap)."""
+        return cls(
+            mesh=None,
+            axis_names=(SIM_AXIS,),
+            n_parts=n_parts,
+            reduce_impl=reduce_impl,
+            block_n=block_n,
+            max_batch=max_batch,
+        )
+
+    @classmethod
+    def over_mesh(
+        cls,
+        mesh: Mesh,
+        *,
+        axis_names: tuple[str, ...] | None = None,
+        reduce_impl: str = "rsag",
+        block_n: int = 256,
+        max_batch: int = 8192,
+    ) -> "ShardPlan":
+        """Real SPMD over ``mesh``; object rows sharded over ``axis_names``
+        (default: whichever of the pod×data axes the mesh carries)."""
+        if axis_names is None:
+            axis_names = object_axes(mesh)
+        if not axis_names:
+            raise ValueError(
+                f"mesh {dict(mesh.shape)} has none of the object axes"
+            )
+        k = 1
+        for a in axis_names:
+            k *= mesh.shape[a]
+        return cls(
+            mesh=mesh,
+            axis_names=tuple(axis_names),
+            n_parts=k,
+            reduce_impl=reduce_impl,
+            block_n=block_n,
+            max_batch=max_batch,
+        )
+
+    @classmethod
+    def auto(
+        cls, n_parts: int = 8, *, reduce_impl: str = "rsag", **kw
+    ) -> "ShardPlan":
+        """Mesh plan over all local devices when there are >1, else a
+        simulated ``n_parts``-way plan on the single device."""
+        devices = jax.devices()
+        if len(devices) > 1:
+            mesh = Mesh(np.asarray(devices), ("data",))
+            return cls.over_mesh(mesh, reduce_impl=reduce_impl, **kw)
+        return cls.simulated(n_parts, reduce_impl=reduce_impl, **kw)
+
+    # -- geometry ----------------------------------------------------------
+
+    @property
+    def is_simulated(self) -> bool:
+        return self.mesh is None
+
+    @property
+    def reduce_axes(self):
+        """Axis name(s) the shard body's collectives reduce over."""
+        if self.mesh is None:
+            return SIM_AXIS
+        return self.axis_names if len(self.axis_names) > 1 else self.axis_names[0]
+
+    @property
+    def row_alignment(self) -> int:
+        """Context rows must pad to a multiple of this (shards block-align)."""
+        return self.n_parts * self.block_n
+
+    # -- placement ---------------------------------------------------------
+
+    def place_rows(self, rows: np.ndarray) -> jax.Array:
+        """Shard padded context rows ``[N, W]`` over the object axes.
+
+        Mesh plan: ``NamedSharding`` over ``axis_names``.  Simulated plan:
+        reshape to ``[k, N/k, W]`` so the named-vmap axis is the partition.
+        """
+        if rows.shape[0] % self.n_parts:
+            raise ValueError(
+                f"rows ({rows.shape[0]}) not divisible by n_parts ({self.n_parts})"
+            )
+        if self.mesh is not None:
+            sharding = NamedSharding(self.mesh, P(self.axis_names, None))
+            return jax.device_put(jnp.asarray(rows), sharding)
+        return jnp.asarray(rows).reshape(
+            self.n_parts, rows.shape[0] // self.n_parts, *rows.shape[1:]
+        )
+
+    def replicate(self, arr) -> jax.Array:
+        """Pin dynamic per-round state (frontier, tables) to every shard, so
+        expansion/pruning compute runs partition-locally instead of on one
+        device followed by a broadcast at the SPMD region boundary."""
+        if self.mesh is not None:
+            return jax.device_put(jnp.asarray(arr), NamedSharding(self.mesh, P()))
+        return jnp.asarray(arr)
+
+    # -- execution ---------------------------------------------------------
+
+    def spmd(self, body, *, n_rep: int, post=None, n_post_rep: int = 0):
+        """Wrap ``body(rows_local, *replicated)`` for per-shard execution.
+
+        The first argument is the object-sharded context; the following
+        ``n_rep`` arguments are replicated.  ``body`` may call collectives
+        over ``self.reduce_axes``; outputs must be shard-invariant (i.e.
+        globally reduced or computed from replicated operands) and come
+        back replicated.
+
+        ``post(*body_outputs, *post_replicated)`` is an optional fused
+        stage consuming the shard-invariant reduced outputs (canonicity,
+        feasibility, dedupe).  Because its input is identical on every
+        shard, the plan owns its placement: on a mesh it runs inside the
+        same SPMD region (each partition filters locally — the whole round
+        is one ``shard_map``); on a simulated plan it runs once after the
+        vmapped map+reduce, instead of k redundant lane copies on the one
+        device.  Bit-identical either way.  The returned callable takes
+        ``(rows, *replicated, *post_replicated)``; callers normally wrap
+        it in ``jax.jit``.
+        """
+        if self.mesh is not None:
+
+            def fused(rows_local, *rep):
+                out = body(rows_local, *rep[:n_rep])
+                if post is None:
+                    return out
+                out = out if isinstance(out, tuple) else (out,)
+                return post(*out, *rep[n_rep:])
+
+            in_specs = (P(self.axis_names, None),) + (P(),) * (n_rep + n_post_rep)
+            return compat.shard_map(
+                fused,
+                mesh=self.mesh,
+                in_specs=in_specs,
+                out_specs=P(),
+                check_vma=False,  # pallas_call outputs carry no vma info
+            )
+
+        vbody = jax.vmap(
+            body,
+            in_axes=(0,) + (None,) * n_rep,
+            out_axes=0,
+            axis_name=SIM_AXIS,
+        )
+
+        def run(rows, *rep):
+            outs = vbody(rows, *rep[:n_rep])
+            # Outputs are identical on every simulated shard (same invariant
+            # the mesh path's ``out_specs=P()`` asserts); keep shard 0.
+            outs = jax.tree_util.tree_map(lambda o: o[0], outs)
+            if post is None:
+                return outs
+            outs = outs if isinstance(outs, tuple) else (outs,)
+            return post(*outs, *rep[n_rep:])
+
+        return run
+
+    # -- accounting --------------------------------------------------------
+
+    def modeled_reduce_bytes(
+        self, batch: int, W: int, n_attrs: int | None = None
+    ) -> int:
+        """Analytic wire bytes one reduce round of ``batch`` candidates
+        costs under this plan's schedule (see collectives.modeled_comm_bytes)."""
+        return collectives.modeled_comm_bytes(
+            self.reduce_impl, self.n_parts, batch, W, n_attrs
+        )
+
+    def describe(self) -> dict:
+        """JSON-friendly summary for launcher output and benchmark records."""
+        return {
+            "mode": "simulated" if self.mesh is None else "mesh",
+            "n_parts": self.n_parts,
+            "axes": list(self.axis_names),
+            "mesh_shape": None if self.mesh is None else dict(self.mesh.shape),
+            "reduce_impl": self.reduce_impl,
+            "block_n": self.block_n,
+            "max_batch": self.max_batch,
+        }

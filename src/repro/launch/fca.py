@@ -1,20 +1,37 @@
 """Distributed FCA launcher — the paper's system as a production CLI.
 
     python -m repro.launch.fca --dataset mushroom --scale 0.05 \
-        --algorithm mrganter+ --parts 8 --reduce rsag
+        --algorithm mrganter+ --parts 8 --reduce rsag --local-prune
 
 With a real multi-device runtime pass ``--mesh`` to shard the context over
-the device mesh (objects over pod×data); otherwise partitions are
-simulated on one device with bit-identical arithmetic.
+the device mesh (objects over the pod×data axes the ShardPlan picks up);
+otherwise partitions are simulated on one device with bit-identical
+arithmetic.  Either way the run executes through one
+:class:`repro.dist.ShardPlan` — the CLI only chooses its geometry.
 """
 
 from __future__ import annotations
 
 import argparse
 import json
+import sys
 
 from repro.core import ClosureEngine, bitset, mrcbo, mrganter, mrganter_plus
+from repro.core.engine import BACKENDS
+from repro.core.mr import PIPELINES
 from repro.data import fca_datasets
+from repro.dist.collectives import IMPLS
+from repro.dist.shardplan import ShardPlan
+
+
+def build_plan(args) -> ShardPlan:
+    """The run's ShardPlan from CLI geometry flags."""
+    if args.mesh:
+        from repro.launch.mesh import make_local_mesh
+
+        mesh = make_local_mesh(model=1, pod=args.pod)
+        return ShardPlan.over_mesh(mesh, reduce_impl=args.reduce)
+    return ShardPlan.simulated(args.parts, reduce_impl=args.reduce)
 
 
 def main(argv=None):
@@ -25,40 +42,54 @@ def main(argv=None):
     p.add_argument("--algorithm", default="mrganter+",
                    choices=["mrganter", "mrganter+", "mrcbo"])
     p.add_argument("--parts", type=int, default=8)
-    p.add_argument("--reduce", default="rsag",
-                   choices=["allgather", "rsag", "pmin"])
+    p.add_argument("--reduce", default="rsag", choices=list(IMPLS),
+                   help="AND-allreduce schedule the plan's reduce phase runs")
     p.add_argument("--mesh", action="store_true",
                    help="shard over the jax device mesh (needs >1 device)")
-    p.add_argument("--no-kernel", action="store_true")
+    p.add_argument("--pod", type=int, default=1,
+                   help="pod axis size for --mesh (>1 builds a pod×data mesh)")
+    p.add_argument("--backend", default=None, choices=list(BACKENDS),
+                   help="closure map backend (default: kernel)")
+    p.add_argument("--no-kernel", action="store_true",
+                   help="deprecated: use --backend jnp")
+    p.add_argument("--pipeline", default="device", choices=list(PIPELINES),
+                   help="device-resident frontier pipeline vs host oracle loop")
+    p.add_argument("--local-prune", action="store_true",
+                   help="mrganter+: per-partition seed dedupe before the "
+                        "reduce (pruned candidates never cross the wire)")
     p.add_argument("--max-iterations", type=int, default=None)
     p.add_argument("--data-dir", default=None,
                    help="directory with real UCI .data files (else synthetic)")
     args = p.parse_args(argv)
 
+    backend = args.backend
+    if backend is None:
+        backend = "jnp" if args.no_kernel else "kernel"
+    elif args.no_kernel:
+        print("--no-kernel is deprecated and ignored when --backend is given",
+              file=sys.stderr)
+
     ctx, spec = fca_datasets.load(args.dataset, scale=args.scale,
                                   data_dir=args.data_dir)
-    if args.mesh:
-        import jax
-        from repro.launch.mesh import make_local_mesh
-
-        mesh = make_local_mesh(model=1)
-        eng = ClosureEngine(ctx, mesh=mesh, axis_names=("data",),
-                            reduce_impl=args.reduce,
-                            use_kernel=not args.no_kernel)
-    else:
-        eng = ClosureEngine(ctx, n_parts=args.parts, reduce_impl=args.reduce,
-                            use_kernel=not args.no_kernel)
+    plan = build_plan(args)
+    eng = ClosureEngine(ctx, plan=plan, backend=backend)
 
     algo = {"mrganter": mrganter, "mrganter+": mrganter_plus, "mrcbo": mrcbo}[
         args.algorithm
     ]
-    res = algo(ctx, eng, max_iterations=args.max_iterations)
+    kw = {"pipeline": args.pipeline}
+    if args.algorithm == "mrganter+":
+        kw["local_prune"] = args.local_prune
+    res = algo(ctx, eng, max_iterations=args.max_iterations, **kw)
     print(json.dumps({
         "dataset": spec.name,
         "objects": spec.n_objects,
         "attributes": spec.n_attrs,
         "density": round(spec.density, 4),
         "synthetic": spec.synthetic,
+        "plan": plan.describe(),
+        "backend": backend,
+        "pipeline": args.pipeline,
         "algorithm": res.algorithm,
         "concepts": res.n_concepts,
         "iterations": res.n_iterations,

@@ -31,5 +31,11 @@ def make_local_mesh(data: int | None = None, model: int = 1, pod: int = 1):
 
 
 def data_axes(mesh) -> tuple[str, ...]:
-    """The batch-sharding axes present in this mesh (pod first)."""
-    return tuple(a for a in ("pod", "data") if a in mesh.shape)
+    """The batch-sharding axes present in this mesh (pod first).
+
+    Same vocabulary the FCA ShardPlan uses for its object partition —
+    one definition, shared via repro.dist.partition.
+    """
+    from repro.dist.partition import object_axes
+
+    return object_axes(mesh)

@@ -34,17 +34,113 @@ def _run(body: str, timeout=420) -> str:
 
 
 def test_fca_mesh_matches_centralized():
+    """Legacy (mesh=, axis_names=) engine kwargs route through a ShardPlan
+    and still match the centralized oracle on a real pod×data mesh."""
     out = _run("""
         from repro.core import FormalContext, ClosureEngine, mrganter_plus, all_closures, bitset
+        from repro.dist.shardplan import ShardPlan
         mesh = jax.make_mesh((2, 4), ("pod", "data"))
         fc = FormalContext.synthetic(300, 48, 0.2, seed=3)
         ref = {bitset.key_bytes(y) for y in all_closures(fc)}
         for impl in ("allgather", "rsag", "pmin"):
             eng = ClosureEngine(fc, mesh=mesh, axis_names=("pod", "data"), reduce_impl=impl, block_n=64)
+            assert isinstance(eng.plan, ShardPlan) and eng.plan.n_parts == 8
+            assert eng.plan.axis_names == ("pod", "data")
             res = mrganter_plus(fc, eng, dedupe_candidates=True)
             got = {bitset.key_bytes(y) for y in res.intents}
             assert got == ref, impl
         print("OK", len(ref))
+    """)
+    assert "OK" in out
+
+
+def test_shardplan_local_pruning_matches_host_oracle():
+    """MRGanter+ with per-partition local pruning on an 8-device ShardPlan:
+    same concept set as the host-loop oracle, fewer reduce bytes than the
+    no-pruning plan (the pruned candidates never enter the AND-allreduce),
+    and bit-identical to the simulated plan of the same geometry."""
+    out = _run("""
+        from repro.core import FormalContext, ClosureEngine, mrganter_plus, bitset
+        from repro.dist.shardplan import ShardPlan
+        fc = FormalContext.synthetic(280, 40, 0.22, seed=11)
+        mesh = jax.make_mesh((8,), ("data",))
+        plan = ShardPlan.over_mesh(mesh, reduce_impl="rsag", block_n=64)
+        assert plan.n_parts == 8 and plan.axis_names == ("data",)
+
+        # host-loop oracle (same partition count, simulated)
+        e_host = ClosureEngine(fc, n_parts=8, block_n=64, backend="jnp")
+        ref = {bitset.key_bytes(y) for y in
+               mrganter_plus(fc, e_host, pipeline="host").intents}
+
+        e_on = ClosureEngine(fc, plan=plan, backend="jnp")
+        r_on = mrganter_plus(fc, e_on, local_prune=True)
+        assert {bitset.key_bytes(y) for y in r_on.intents} == ref
+
+        e_off = ClosureEngine(fc, plan=plan, backend="jnp")
+        r_off = mrganter_plus(fc, e_off, local_prune=False)
+        assert {bitset.key_bytes(y) for y in r_off.intents} == ref
+        assert e_on.stats.modeled_comm_bytes < e_off.stats.modeled_comm_bytes, (
+            e_on.stats.modeled_comm_bytes, e_off.stats.modeled_comm_bytes)
+
+        # mesh plan ≡ simulated plan, bit for bit
+        e_sim = ClosureEngine(
+            fc, plan=ShardPlan.simulated(8, reduce_impl="rsag", block_n=64),
+            backend="jnp")
+        r_sim = mrganter_plus(fc, e_sim, local_prune=True)
+        a = sorted(y.tobytes() for y in r_on.intents)
+        b = sorted(y.tobytes() for y in r_sim.intents)
+        assert a == b
+        print("OK", len(ref), e_off.stats.modeled_comm_bytes,
+              "->", e_on.stats.modeled_comm_bytes)
+    """)
+    assert "OK" in out
+
+
+def test_collectives_and_allreduce_property():
+    """allgather/rsag/pmin are bit-identical AND-reductions across shard
+    counts {2, 4, 8} and ragged batch sizes, on real device meshes."""
+    out = _run("""
+        from functools import partial
+        from repro.dist import collectives
+        from repro.dist.shardplan import ShardPlan
+        from jax.sharding import Mesh
+
+        rng = np.random.default_rng(0)
+        devices = jax.devices()
+        W = 3
+        for k in (2, 4, 8):
+            mesh = Mesh(np.asarray(devices[:k]), ("data",))
+            plan = ShardPlan.over_mesh(mesh)
+            sim = ShardPlan.simulated(k)
+            for B in (1, 5, 16, 33):   # ragged: exercises the rsag pad path
+                x = rng.integers(0, 1 << 32, size=(k, B, W), dtype=np.uint32)
+                ref = x[0].copy()
+                for i in range(1, k):
+                    ref &= x[i]
+                # shard the k blocks over the k devices: [k*B, W] with
+                # rows sharded → each shard sees its own [B, W] block
+                flat = jnp.asarray(x.reshape(k * B, W))
+                for impl in ("allgather", "rsag", "pmin"):
+                    body = partial(
+                        collectives.and_allreduce, impl=impl,
+                        n_attrs=W * 32 - 7)
+                    got = jax.jit(plan.spmd(
+                        lambda xi: body(xi, plan.reduce_axes), n_rep=0))(flat)
+                    got_sim = jax.jit(sim.spmd(
+                        lambda xi: body(xi, sim.reduce_axes), n_rep=0))(
+                        jnp.asarray(x))
+                    want = ref
+                    if impl == "pmin":  # pmin masks to the n_attrs bound
+                        mask = np.zeros(W * 32, np.uint32)
+                        mask[: W * 32 - 7] = 1
+                        weights = (np.uint32(1) << np.arange(32, dtype=np.uint32))
+                        want = ((((ref[..., None] >> np.arange(32, dtype=np.uint32))
+                                  & 1).reshape(B, W * 32) * mask
+                                 ).reshape(B, W, 32) * weights
+                                ).sum(-1).astype(np.uint32)
+                    np.testing.assert_array_equal(np.asarray(got), want, err_msg=f"{impl} k={k} B={B}")
+                    np.testing.assert_array_equal(np.asarray(got_sim), want, err_msg=f"sim {impl} k={k} B={B}")
+        print("OK")
     """)
     assert "OK" in out
 

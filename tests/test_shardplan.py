@@ -1,0 +1,168 @@
+"""ShardPlan — the one partitioned execution path: geometry, placement,
+legacy-kwarg routing, schedule equivalence, and the local-pruning wire
+model.  The real multi-device mesh path is exercised in
+tests/test_distributed_8dev.py; here every mesh is the single CPU device,
+which must be bit-identical to the simulated plan by construction."""
+
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import ClosureEngine, all_closures_batched, bitset, mrcbo, mrganter_plus
+from repro.core.context import FormalContext
+from repro.dist.collectives import IMPLS
+from repro.dist.shardplan import SIM_AXIS, ShardPlan
+
+
+def _keys(intents):
+    return {bitset.key_bytes(y) for y in intents}
+
+
+@pytest.fixture(scope="module")
+def ctx():
+    return FormalContext.synthetic(90, 21, 0.25, seed=4)
+
+
+@pytest.fixture(scope="module")
+def ref(ctx):
+    return _keys(all_closures_batched(ctx))
+
+
+def _one_device_mesh():
+    return jax.sharding.Mesh(np.asarray(jax.devices()[:1]), ("data",))
+
+
+# -- geometry / placement ----------------------------------------------------
+
+
+def test_simulated_geometry():
+    plan = ShardPlan.simulated(4, reduce_impl="allgather", block_n=64)
+    assert plan.is_simulated
+    assert plan.n_parts == 4
+    assert plan.reduce_axes == SIM_AXIS
+    assert plan.row_alignment == 4 * 64
+    rows = np.arange(4 * 64 * 2 * 3, dtype=np.uint32).reshape(-1, 3)
+    placed = plan.place_rows(rows)
+    assert placed.shape == (4, 2 * 64, 3)
+    np.testing.assert_array_equal(
+        np.asarray(placed).reshape(-1, 3), rows
+    )
+
+
+def test_mesh_geometry_picks_object_axes():
+    plan = ShardPlan.over_mesh(_one_device_mesh())
+    assert not plan.is_simulated
+    assert plan.axis_names == ("data",)
+    assert plan.n_parts == 1
+    assert plan.describe()["mode"] == "mesh"
+
+
+def test_plan_validation():
+    with pytest.raises(ValueError, match="reduce schedule"):
+        ShardPlan.simulated(2, reduce_impl="morse-code")
+    with pytest.raises(ValueError, match="n_parts"):
+        ShardPlan.simulated(0)
+    plan = ShardPlan.simulated(3)
+    with pytest.raises(ValueError, match="divisible"):
+        plan.place_rows(np.zeros((7, 2), np.uint32))
+
+
+def test_auto_plan_single_device():
+    # one CPU device in the main pytest process → simulated fallback
+    plan = ShardPlan.auto(n_parts=5)
+    assert plan.is_simulated and plan.n_parts == 5
+
+
+# -- engine routes every spelling to one plan --------------------------------
+
+
+def test_legacy_kwargs_build_plans(ctx):
+    e_parts = ClosureEngine(ctx, n_parts=3, reduce_impl="pmin", block_n=64)
+    assert isinstance(e_parts.plan, ShardPlan)
+    assert e_parts.plan.is_simulated
+    assert e_parts.plan.n_parts == 3 == e_parts.n_parts
+    assert e_parts.plan.reduce_impl == "pmin"
+    assert e_parts.plan.block_n == 64  # engine kwarg overrides plan default
+
+    e_mesh = ClosureEngine(ctx, mesh=_one_device_mesh(), block_n=64)
+    assert not e_mesh.plan.is_simulated
+    assert e_mesh.plan.axis_names == ("data",)
+
+
+def test_plan_conflicts_with_legacy_geometry(ctx):
+    with pytest.raises(ValueError, match="not both"):
+        ClosureEngine(ctx, plan=ShardPlan.simulated(2), n_parts=3)
+    with pytest.raises(ValueError, match="not both"):
+        ClosureEngine(ctx, plan=ShardPlan.simulated(2), mesh=_one_device_mesh())
+    # scalar knobs override the plan uniformly (same as block_n/max_batch)
+    eng = ClosureEngine(ctx, plan=ShardPlan.simulated(2), reduce_impl="allgather")
+    assert eng.reduce_impl == "allgather" == eng.plan.reduce_impl
+
+
+def test_engine_accepts_plan_directly(ctx, ref):
+    plan = ShardPlan.simulated(2, reduce_impl="rsag", block_n=64, max_batch=512)
+    eng = ClosureEngine(ctx, plan=plan, backend="jnp")
+    assert eng.max_batch == 512
+    res = mrganter_plus(ctx, eng, local_prune=True)
+    assert _keys(res.intents) == ref
+
+
+# -- equivalence across geometry and schedule --------------------------------
+
+
+@pytest.mark.parametrize("impl", IMPLS)
+def test_one_device_mesh_bitidentical_to_simulated(ctx, impl):
+    """The same shard body runs under shard_map (mesh) and named-axis vmap
+    (simulated); on one device with k=1 both must produce identical bits."""
+    e_sim = ClosureEngine(
+        ctx, plan=ShardPlan.simulated(1, reduce_impl=impl, block_n=64),
+        backend="jnp",
+    )
+    e_mesh = ClosureEngine(
+        ctx, plan=ShardPlan.over_mesh(_one_device_mesh(), reduce_impl=impl,
+                                      block_n=64),
+        backend="jnp",
+    )
+    cands = FormalContext.synthetic(17, ctx.n_attrs, 0.3, seed=8).rows
+    c_sim, s_sim = e_sim.closure(cands)
+    c_mesh, s_mesh = e_mesh.closure(cands)
+    np.testing.assert_array_equal(c_sim, c_mesh)
+    np.testing.assert_array_equal(s_sim, s_mesh)
+
+
+@pytest.mark.parametrize("impl", IMPLS)
+def test_schedules_agree_through_plan(ctx, ref, impl):
+    plan = ShardPlan.simulated(4, reduce_impl=impl, block_n=64)
+    res = mrcbo(ctx, ClosureEngine(ctx, plan=plan, backend="jnp"))
+    assert _keys(res.intents) == ref
+
+
+# -- local pruning: the reduce is sized by the pruned bucket -----------------
+
+
+def test_local_pruning_reduces_wire_bytes(ctx, ref):
+    plan = ShardPlan.simulated(8, reduce_impl="rsag", block_n=64)
+    e_off = ClosureEngine(ctx, plan=plan, backend="jnp")
+    e_on = ClosureEngine(ctx, plan=plan, backend="jnp")
+    r_off = mrganter_plus(ctx, e_off, local_prune=False)
+    r_on = mrganter_plus(ctx, e_on, local_prune=True)
+    assert _keys(r_off.intents) == _keys(r_on.intents) == ref
+    # pruned candidates never enter the AND-allreduce
+    assert e_on.stats.modeled_comm_bytes < e_off.stats.modeled_comm_bytes
+    assert e_on.stats.closures_computed < e_off.stats.closures_computed
+
+
+def test_modeled_reduce_bytes_matches_collectives_model():
+    plan = ShardPlan.simulated(4, reduce_impl="rsag")
+    from repro.dist import collectives
+
+    assert plan.modeled_reduce_bytes(128, 3) == collectives.modeled_comm_bytes(
+        "rsag", 4, 128, 3
+    )
+    assert dataclasses.replace(plan, n_parts=1).modeled_reduce_bytes(128, 3) == 0
+    # pmin charges one uint32 per unpacked lane, bounded by n_attrs like the impl
+    pmin = ShardPlan.simulated(4, reduce_impl="pmin")
+    assert pmin.modeled_reduce_bytes(128, 3, n_attrs=70) == 4 * 3 * 128 * 70 * 4
+    assert pmin.modeled_reduce_bytes(128, 3) == 4 * 3 * 128 * (3 * 32) * 4
