@@ -11,7 +11,7 @@ def main(argv=None) -> None:
     p = argparse.ArgumentParser()
     p.add_argument(
         "--only", default=None,
-        help="comma-separated subset: table7,table8,table9,fig234,kernel,frontier,dist,roofline",
+        help="comma-separated subset: table7,table8,table9,fig234,kernel,frontier,dist,query,roofline",
     )
     p.add_argument("--roofline-path", default="dryrun_single.jsonl")
     args = p.parse_args(argv)
@@ -21,6 +21,7 @@ def main(argv=None) -> None:
         dist_bench,
         fig234_scaling,
         kernel_bench,
+        query_bench,
         roofline,
         table7_datasets,
         table8_runtime,
@@ -35,6 +36,7 @@ def main(argv=None) -> None:
         "kernel": kernel_bench.run,
         "frontier": kernel_bench.run_frontier,
         "dist": dist_bench.run,
+        "query": query_bench.run,
         "roofline": lambda: roofline.run(args.roofline_path),
     }
     print("name,us_per_call,derived")

@@ -7,7 +7,7 @@ from repro.core.mr import MRResult, mrcbo, mrganter, mrganter_plus
 from repro.core.nextclosure import all_closures, all_closures_batched, first_closure, next_closure
 from repro.core.closebyone import CbOResult, close_by_one
 from repro.core.hashindex import TwoLevelHash
-from repro.core.incremental import add_object, add_objects
+from repro.core.incremental import add_object, add_objects, add_objects_sequential
 from repro.core.lattice import ConceptLattice, build_lattice
 
 __all__ = [
@@ -30,4 +30,5 @@ __all__ = [
     "build_lattice",
     "add_object",
     "add_objects",
+    "add_objects_sequential",
 ]

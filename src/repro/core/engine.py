@@ -38,7 +38,7 @@ from jax.sharding import Mesh
 from repro.core import bitset
 from repro.core.context import FormalContext
 from repro.dist import collectives
-from repro.dist.shardplan import ShardPlan
+from repro.dist.shardplan import AUTO_IMPLS, ShardPlan
 from repro.kernels import ops
 
 
@@ -56,6 +56,10 @@ class EngineStats:
     h2d_bytes: int = 0
     d2h_transfers: int = 0
     d2h_bytes: int = 0
+    # per-dispatch schedule census: {impl: dispatch count}.  For a fixed
+    # reduce_impl this has one key; under ``reduce_impl="auto"`` it records
+    # the autotuner's per-round allgather-vs-rsag choices.
+    reduce_rounds: dict = dataclasses.field(default_factory=dict)
 
 
 class ClosureEngine:
@@ -183,22 +187,39 @@ class ClosureEngine:
         """
         plan, ctx = self.plan, self.ctx
         local_closure = self._local_closure()
-        axes, impl = plan.reduce_axes, plan.reduce_impl
+        axes = plan.reduce_axes
         mask_np, n_pad = self._mask_np, self.n_pad_rows
 
-        def body(rows_local, cands):
-            lc, ls = local_closure(rows_local, cands)
-            gc = collectives.and_allreduce(
-                lc, axes, impl=impl, n_attrs=ctx.n_attrs
-            )
-            gc = gc & jnp.asarray(mask_np)
-            if with_supports:
-                return gc, lax.psum(ls, axes) - n_pad
-            return gc
+        def make(impl):
+            def body(rows_local, cands):
+                lc, ls = local_closure(rows_local, cands)
+                gc = collectives.and_allreduce(
+                    lc, axes, impl=impl, n_attrs=ctx.n_attrs
+                )
+                gc = gc & jnp.asarray(mask_np)
+                if with_supports:
+                    return gc, lax.psum(ls, axes) - n_pad
+                return gc
 
-        return jax.jit(
-            plan.spmd(body, n_rep=1, post=post, n_post_rep=n_extra)
-        )
+            return jax.jit(
+                plan.spmd(body, n_rep=1, post=post, n_post_rep=n_extra)
+            )
+
+        if plan.reduce_impl != "auto":
+            return make(plan.reduce_impl)
+
+        # Schedule autotuning: one jitted step per candidate schedule; the
+        # dispatcher resolves the round's schedule from the padded batch
+        # size (the AND semigroup makes every schedule bit-identical, so
+        # the choice only moves wire cost).  ``charge_round`` sees the same
+        # (cap, plan) pair and ledgers the matching bytes + choice.
+        steps = {impl: make(impl) for impl in AUTO_IMPLS}
+
+        def dispatch(rows, cands, *extras):
+            impl = plan.resolve_impl(cands.shape[0], ctx.W, ctx.n_attrs)
+            return steps[impl](rows, cands, *extras)
+
+        return dispatch
 
     # -- stats accounting ---------------------------------------------------
 
@@ -211,6 +232,8 @@ class ClosureEngine:
         self.stats.modeled_comm_bytes += self.plan.modeled_reduce_bytes(
             cap, self.ctx.W, self.ctx.n_attrs
         )
+        impl = self.plan.resolve_impl(cap, self.ctx.W, self.ctx.n_attrs)
+        self.stats.reduce_rounds[impl] = self.stats.reduce_rounds.get(impl, 0) + 1
 
     # -- public API ----------------------------------------------------------
 

@@ -15,6 +15,8 @@ per-row ``add`` remains as the paper-literal oracle
 
 from __future__ import annotations
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.core import bitset
@@ -33,6 +35,32 @@ def batch_heads(rows: np.ndarray) -> np.ndarray:
     lsb = np.bitwise_count((lowbit - np.uint32(1)) & np.uint32(0xFFFFFFFF))
     head = first_w * bitset.WORD_BITS + lsb
     return np.where(nonzero.any(axis=-1), head, -1).astype(np.int32)
+
+
+def batch_heads_jnp(rows: jax.Array) -> jax.Array:
+    """Device twin of :func:`batch_heads` — jit-able, same arithmetic.
+
+    Used by the query subsystem's device-resident index
+    (:mod:`repro.query.store`) to key lookups inside the SPMD step.
+    """
+    rows = rows.astype(jnp.uint32)
+    nonzero = rows != 0
+    first_w = jnp.argmax(nonzero, axis=-1)
+    v = jnp.take_along_axis(rows, first_w[:, None], axis=-1)[:, 0]
+    lowbit = v & (~v + jnp.uint32(1))
+    lsb = jax.lax.population_count(lowbit - jnp.uint32(1))
+    head = first_w.astype(jnp.int32) * bitset.WORD_BITS + lsb.astype(jnp.int32)
+    return jnp.where(nonzero.any(axis=-1), head, -1)
+
+
+def bucket_key(heads, lengths, n_attrs: int):
+    """Flat index key combining both hash levels: (head+1)·(m+2) + length.
+
+    Works for numpy and jnp inputs alike; strictly increasing in
+    (head, length), so a table sorted by it supports two-sided
+    ``searchsorted`` bucket probes (the device index's lookup path).
+    """
+    return (heads + 1) * (n_attrs + 2) + lengths
 
 
 class TwoLevelHash:

@@ -129,3 +129,43 @@ def modeled_comm_bytes(
         lanes = n_attrs if n_attrs is not None else W * 32
         return n_parts * (n_parts - 1) * batch * lanes * 4
     raise ValueError(f"unknown reduce impl {impl!r}; choose {IMPLS}")
+
+
+def ring_steps(impl: str, n_parts: int) -> int:
+    """Per-device ring-step (latency hop) count for one reduce round.
+
+    ``allgather``/``pmin`` are one ring pass (k-1 steps); ``rsag`` pays two
+    passes (reduce-scatter then all-gather, 2(k-1) steps) for its lower
+    wire-byte volume — the classic latency/bandwidth trade the schedule
+    autotuner arbitrates.
+    """
+    if impl not in IMPLS:
+        raise ValueError(f"unknown reduce impl {impl!r}; choose {IMPLS}")
+    if n_parts <= 1:
+        return 0
+    k = n_parts
+    return 2 * (k - 1) if impl == "rsag" else k - 1
+
+
+def modeled_cost_bytes(
+    impl: str,
+    n_parts: int,
+    batch: int,
+    W: int,
+    n_attrs: int | None = None,
+    *,
+    hop_bytes: int = 4096,
+) -> int:
+    """α-β reduce-cost model in byte units: wire volume + per-hop latency.
+
+    ``hop_bytes`` is the latency term α expressed as its bandwidth-
+    equivalent byte cost per ring step per device.  Small batches are
+    latency-bound (allgather's single pass wins); large batches are
+    bandwidth-bound (rsag's 2(k-1)/k volume wins).  This is what
+    ``ShardPlan.resolve_impl`` minimizes for ``reduce_impl="auto"``.
+    """
+    if n_parts <= 1:
+        return 0
+    return modeled_comm_bytes(impl, n_parts, batch, W, n_attrs) + (
+        n_parts * ring_steps(impl, n_parts) * hop_bytes
+    )

@@ -15,7 +15,10 @@ behind one abstraction that owns
     plan's axes, ``replicate`` pins frontier/table state to every shard;
   * **the collective schedule** — which AND-allreduce implementation
     (``allgather`` / ``rsag`` / ``pmin``, see :mod:`repro.dist.collectives`)
-    the reduce phase runs, and its analytic wire-byte model.
+    the reduce phase runs, and its analytic wire-byte model.  With
+    ``reduce_impl="auto"`` the plan autotunes: ``resolve_impl`` picks
+    allgather-vs-rsag per round by minimizing the α-β cost model
+    (wire volume + ring-step latency) for that round's padded batch.
 
 ``spmd(body, n_rep)`` is the single execution primitive: ``body`` receives
 the local context shard plus replicated operands and may call collectives
@@ -46,6 +49,10 @@ from repro.dist.partition import object_axes
 # shard body reference ``plan.reduce_axes`` and never this name directly.
 SIM_AXIS = "objpart"
 
+# Schedules the autotuner arbitrates between. ``pmin`` is excluded: its
+# unpacked-lane volume is strictly dominated for every batch size.
+AUTO_IMPLS = ("allgather", "rsag")
+
 
 @dataclasses.dataclass(frozen=True)
 class ShardPlan:
@@ -57,12 +64,18 @@ class ShardPlan:
     reduce_impl: str = "rsag"
     block_n: int = 256
     max_batch: int = 8192
+    # latency term of the "auto" schedule model: bandwidth-equivalent byte
+    # cost of one ring step per device (collectives.modeled_cost_bytes).
+    auto_hop_bytes: int = 4096
 
     def __post_init__(self):
-        if self.reduce_impl not in collectives.IMPLS:
+        if (
+            self.reduce_impl != "auto"
+            and self.reduce_impl not in collectives.IMPLS
+        ):
             raise ValueError(
                 f"unknown reduce schedule {self.reduce_impl!r}; "
-                f"choose {collectives.IMPLS}"
+                f"choose {collectives.IMPLS + ('auto',)}"
             )
         if self.n_parts < 1:
             raise ValueError(f"n_parts must be >= 1, got {self.n_parts}")
@@ -236,13 +249,35 @@ class ShardPlan:
 
     # -- accounting --------------------------------------------------------
 
+    def resolve_impl(
+        self, batch: int, W: int, n_attrs: int | None = None
+    ) -> str:
+        """The schedule one reduce round of ``batch`` candidates runs.
+
+        A fixed ``reduce_impl`` is returned as-is; ``"auto"`` picks the
+        α-β-cheapest of :data:`AUTO_IMPLS` for this round's measured batch
+        (``collectives.modeled_cost_bytes``: allgather's single ring pass
+        wins latency-bound small batches, rsag's 2(k-1)/k volume wins
+        bandwidth-bound large ones).  Deterministic in the padded batch
+        size, so the per-bucket jit caches see a stable choice.
+        """
+        if self.reduce_impl != "auto":
+            return self.reduce_impl
+        return min(
+            AUTO_IMPLS,
+            key=lambda impl: collectives.modeled_cost_bytes(
+                impl, self.n_parts, batch, W, n_attrs,
+                hop_bytes=self.auto_hop_bytes,
+            ),
+        )
+
     def modeled_reduce_bytes(
         self, batch: int, W: int, n_attrs: int | None = None
     ) -> int:
         """Analytic wire bytes one reduce round of ``batch`` candidates
         costs under this plan's schedule (see collectives.modeled_comm_bytes)."""
         return collectives.modeled_comm_bytes(
-            self.reduce_impl, self.n_parts, batch, W, n_attrs
+            self.resolve_impl(batch, W, n_attrs), self.n_parts, batch, W, n_attrs
         )
 
     def describe(self) -> dict:

@@ -1,13 +1,21 @@
 """Distributed FCA launcher — the paper's system as a production CLI.
 
+    # mine (default subcommand)
     python -m repro.launch.fca --dataset mushroom --scale 0.05 \
         --algorithm mrganter+ --parts 8 --reduce rsag --local-prune
+
+    # mine → build the device-resident concept store → serve a mixed
+    # query/update batch (repro.query)
+    python -m repro.launch.fca serve --dataset mushroom --scale 0.02 \
+        --parts 4 --reduce auto --queries 256 --topk 32 --updates 8
 
 With a real multi-device runtime pass ``--mesh`` to shard the context over
 the device mesh (objects over the pod×data axes the ShardPlan picks up);
 otherwise partitions are simulated on one device with bit-identical
 arithmetic.  Either way the run executes through one
 :class:`repro.dist.ShardPlan` — the CLI only chooses its geometry.
+``--reduce auto`` lets the plan pick allgather-vs-rsag per round from the
+measured batch size (the per-round record lands in the printed stats).
 """
 
 from __future__ import annotations
@@ -15,6 +23,9 @@ from __future__ import annotations
 import argparse
 import json
 import sys
+import time
+
+import numpy as np
 
 from repro.core import ClosureEngine, bitset, mrcbo, mrganter, mrganter_plus
 from repro.core.engine import BACKENDS
@@ -34,16 +45,136 @@ def build_plan(args) -> ShardPlan:
     return ShardPlan.simulated(args.parts, reduce_impl=args.reduce)
 
 
+def _mine(args, ctx, plan, backend):
+    eng = ClosureEngine(ctx, plan=plan, backend=backend)
+    algo = {"mrganter": mrganter, "mrganter+": mrganter_plus, "mrcbo": mrcbo}[
+        args.algorithm
+    ]
+    kw = {"pipeline": args.pipeline}
+    if args.algorithm == "mrganter+":
+        kw["local_prune"] = args.local_prune
+    res = algo(ctx, eng, max_iterations=args.max_iterations, **kw)
+    return eng, res
+
+
+def cmd_mine(args, ctx, spec, plan, backend):
+    eng, res = _mine(args, ctx, plan, backend)
+    return {
+        "dataset": spec.name,
+        "objects": spec.n_objects,
+        "attributes": spec.n_attrs,
+        "density": round(spec.density, 4),
+        "synthetic": spec.synthetic,
+        "plan": plan.describe(),
+        "backend": backend,
+        "pipeline": args.pipeline,
+        "algorithm": res.algorithm,
+        "concepts": res.n_concepts,
+        "iterations": res.n_iterations,
+        "closures_computed": res.n_closures_computed,
+        "modeled_comm_bytes": res.modeled_comm_bytes,
+        "reduce_rounds": eng.stats.reduce_rounds,
+        "wall_time_s": round(res.wall_time_s, 3),
+    }
+
+
+def cmd_serve(args, ctx, spec, plan, backend):
+    """mine → build store → serve one mixed query/update batch."""
+    from repro.query import ConceptStore, QueryEngine, StreamUpdater
+    from repro.query.engine import QueryConfig
+
+    eng, res = _mine(args, ctx, plan, backend)
+
+    t0 = time.perf_counter()
+    store = ConceptStore.build(ctx, res.intents, plan=plan)
+    build_s = time.perf_counter() - t0
+    qe = QueryEngine(
+        store, QueryConfig(slots=args.slots, backend=backend)
+    )
+
+    rng = np.random.default_rng(args.seed)
+    # query attrsets: real rows with ~25% of their bits kept, so closures
+    # hit populated regions of the lattice
+    base = ctx.rows[rng.integers(0, ctx.n_objects, size=args.queries)]
+    keep = bitset.pack_bool(
+        rng.random((args.queries, ctx.n_attrs)) < 0.25, ctx.W
+    )
+    queries = base & keep
+
+    t0 = time.perf_counter()
+    closures, supports, ids = qe.closure_batch(queries)
+    tops, top_supports = qe.topk_batch(queries[: args.topk], k=5)
+    hit_ids = ids[ids >= 0]
+    trav = qe.children(hit_ids[:8]) if hit_ids.size else []
+    query_s = time.perf_counter() - t0
+
+    # streaming update: synthetic rows matched to the context density
+    upd = StreamUpdater(store)
+    new_rows = bitset.pack_bool(
+        rng.random((args.updates, ctx.n_attrs)) < max(0.05, spec.density),
+        ctx.W,
+    )
+    t0 = time.perf_counter()
+    receipt = upd.stage(new_rows)
+    upd.commit()
+    update_s = time.perf_counter() - t0
+    post_ids = qe.lookup_batch(closures)  # same intents, new snapshot
+
+    n_q = args.queries + min(args.queries, args.topk)
+    return {
+        "dataset": spec.name,
+        "plan": plan.describe(),
+        "backend": backend,
+        "algorithm": res.algorithm,
+        "concepts": res.n_concepts,
+        "mine_wall_s": round(res.wall_time_s, 3),
+        "store": store.describe(),
+        "store_build_s": round(build_s, 3),
+        "slots": args.slots,
+        "queries": int(n_q),
+        "query_wall_s": round(query_s, 4),
+        "queries_per_s": round(n_q / max(query_s, 1e-9), 1),
+        "closure_hit_rate": (
+            round(float((ids >= 0).mean()), 4) if ids.size else None
+        ),
+        "traversal_children_sample": [len(t) for t in trav],
+        "top_support_max": (
+            int(top_supports.max()) if top_supports.size else None
+        ),
+        "update": dataclass_dict(receipt),
+        "update_commit_s": round(update_s, 4),
+        "post_update_version": store.snapshot.version,
+        "post_update_hit_rate": (
+            round(float((post_ids >= 0).mean()), 4) if post_ids.size else None
+        ),
+        "query_stats": qe.describe()["stats"],
+    }
+
+
+def dataclass_dict(obj):
+    import dataclasses
+
+    return dataclasses.asdict(obj)
+
+
 def main(argv=None):
     p = argparse.ArgumentParser()
+    p.add_argument("command", nargs="?", default="mine",
+                   choices=["mine", "serve"],
+                   help="mine (default): run an MR* miner; serve: mine, "
+                        "build the repro.query concept store, then run a "
+                        "mixed query/update batch")
     p.add_argument("--dataset", default="mushroom",
                    choices=list(fca_datasets.PAPER_DATASETS))
     p.add_argument("--scale", type=float, default=0.05)
     p.add_argument("--algorithm", default="mrganter+",
                    choices=["mrganter", "mrganter+", "mrcbo"])
     p.add_argument("--parts", type=int, default=8)
-    p.add_argument("--reduce", default="rsag", choices=list(IMPLS),
-                   help="AND-allreduce schedule the plan's reduce phase runs")
+    p.add_argument("--reduce", default="rsag",
+                   choices=list(IMPLS) + ["auto"],
+                   help="AND-allreduce schedule the plan's reduce phase "
+                        "runs; 'auto' picks allgather-vs-rsag per round "
+                        "from the batch size")
     p.add_argument("--mesh", action="store_true",
                    help="shard over the jax device mesh (needs >1 device)")
     p.add_argument("--pod", type=int, default=1,
@@ -60,6 +191,16 @@ def main(argv=None):
     p.add_argument("--max-iterations", type=int, default=None)
     p.add_argument("--data-dir", default=None,
                    help="directory with real UCI .data files (else synthetic)")
+    # serve-only knobs
+    p.add_argument("--queries", type=int, default=256,
+                   help="serve: closure queries in the mixed batch")
+    p.add_argument("--topk", type=int, default=32,
+                   help="serve: top-k queries in the mixed batch")
+    p.add_argument("--updates", type=int, default=8,
+                   help="serve: streamed new objects in the update batch")
+    p.add_argument("--slots", type=int, default=64,
+                   help="serve: fixed micro-batch slot width")
+    p.add_argument("--seed", type=int, default=0)
     args = p.parse_args(argv)
 
     backend = args.backend
@@ -72,31 +213,10 @@ def main(argv=None):
     ctx, spec = fca_datasets.load(args.dataset, scale=args.scale,
                                   data_dir=args.data_dir)
     plan = build_plan(args)
-    eng = ClosureEngine(ctx, plan=plan, backend=backend)
-
-    algo = {"mrganter": mrganter, "mrganter+": mrganter_plus, "mrcbo": mrcbo}[
-        args.algorithm
-    ]
-    kw = {"pipeline": args.pipeline}
-    if args.algorithm == "mrganter+":
-        kw["local_prune"] = args.local_prune
-    res = algo(ctx, eng, max_iterations=args.max_iterations, **kw)
-    print(json.dumps({
-        "dataset": spec.name,
-        "objects": spec.n_objects,
-        "attributes": spec.n_attrs,
-        "density": round(spec.density, 4),
-        "synthetic": spec.synthetic,
-        "plan": plan.describe(),
-        "backend": backend,
-        "pipeline": args.pipeline,
-        "algorithm": res.algorithm,
-        "concepts": res.n_concepts,
-        "iterations": res.n_iterations,
-        "closures_computed": res.n_closures_computed,
-        "modeled_comm_bytes": res.modeled_comm_bytes,
-        "wall_time_s": round(res.wall_time_s, 3),
-    }, indent=2))
+    out = {"mine": cmd_mine, "serve": cmd_serve}[args.command](
+        args, ctx, spec, plan, backend
+    )
+    print(json.dumps(out, indent=2))
 
 
 if __name__ == "__main__":

@@ -1,0 +1,32 @@
+"""repro.query — device-resident concept store, batched query engine, and
+streaming updates.
+
+Mining (repro.core.mr) produces the lattice; this package makes it a
+first-class servable artifact, closing the paper's §1.1 gap ("batch
+algorithms … require that the entire lattice is reconstructed from scratch
+if the database changes") on the *serving* side:
+
+  * :mod:`repro.query.store`  — ``ConceptStore``: plan-sharded context +
+    extent tables, replicated intent table, the paper's two-level hash
+    index (head-attr × popcount) as device arrays, and the covering
+    relation materialized by a subset-test matmul.
+  * :mod:`repro.query.engine` — ``QueryEngine``: fixed-slot micro-batched
+    closure / lookup / traversal / top-k queries; each micro-batch is one
+    ``ShardPlan.spmd`` round, so B queries cost one collective, not B.
+  * :mod:`repro.query.stream` — ``StreamUpdater``: batched device-side
+    Godin insertion with double-buffered snapshots; queries keep serving
+    the active snapshot while an update batch stages, then ``commit()``
+    swaps atomically.
+"""
+
+from repro.query.engine import QueryEngine, QueryStats
+from repro.query.store import ConceptStore, Snapshot
+from repro.query.stream import StreamUpdater
+
+__all__ = [
+    "ConceptStore",
+    "Snapshot",
+    "QueryEngine",
+    "QueryStats",
+    "StreamUpdater",
+]

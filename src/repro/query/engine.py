@@ -1,0 +1,381 @@
+"""QueryEngine — fixed-slot micro-batched SPMD serving over a ConceptStore.
+
+The serving twin of :class:`repro.serve.engine.ServeEngine`'s
+continuous-batching core, for lattice queries instead of tokens: requests
+pad into fixed ``slots``-wide micro-batches (SPMD-friendly static shapes)
+and each micro-batch executes as ONE plan round —
+
+  * ``closure``  — closure-of-attrset: per-shard local closure over the
+    object-sharded context → AND-allreduce (+ psum of supports) → fused
+    two-level-hash concept lookup, all inside one ``ShardPlan.spmd``
+    region.  B queries cost one collective round, not B.
+  * ``top_k``    — the same closure round with a fused
+    contains-mask × supports ``lax.top_k`` stage instead of the lookup.
+  * ``extents``  — per-shard extent-table column gather + one all-gather.
+  * ``lookup`` / ``supers`` / ``subs`` / ``children`` / ``parents`` —
+    pure replicated-table reads: zero collective rounds.
+
+The jitted steps close over the *plan*, never over a snapshot: snapshot
+tables arrive as arguments, so streaming commits (new lattice versions)
+reuse the compiled steps as long as the padded shapes match — the same
+discipline as the mining engine's ``_frontier_cache``.
+
+Schedule autotuning rides along: with ``plan.reduce_impl == "auto"`` each
+micro-batch resolves allgather-vs-rsag from its padded slot count
+(``plan.resolve_impl``) and the choice is recorded in ``stats``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.core import bitset
+from repro.dist import collectives
+from repro.kernels import ops
+from repro.query.store import (
+    ConceptStore,
+    lookup_ids_jnp,
+    pack_bool_jnp,
+)
+
+BACKENDS = ("kernel", "jnp", "matmul")
+
+
+@dataclasses.dataclass
+class QueryStats:
+    queries: int = 0
+    micro_batches: int = 0
+    collective_rounds: int = 0
+    modeled_comm_bytes: int = 0
+    by_type: dict = dataclasses.field(default_factory=dict)
+    # per-round schedule choices (the autotuner's record under "auto")
+    reduce_rounds: dict = dataclasses.field(default_factory=dict)
+
+    def charge(self, kind: str, n: int, batches: int):
+        self.queries += n
+        self.micro_batches += batches
+        self.by_type[kind] = self.by_type.get(kind, 0) + n
+
+
+@dataclasses.dataclass
+class QueryConfig:
+    slots: int = 64  # fixed micro-batch width; every dispatch pads to this
+    backend: str = "jnp"  # closure map backend, as in ClosureEngine
+    block_n: int = 256
+    interpret: bool = True
+
+
+class QueryEngine:
+    def __init__(self, store: ConceptStore, cfg: QueryConfig | None = None):
+        self.store = store
+        self.cfg = cfg or QueryConfig()
+        if self.cfg.backend not in BACKENDS:
+            raise ValueError(
+                f"unknown backend {self.cfg.backend!r}; choose {BACKENDS}"
+            )
+        self.plan = store.plan
+        self.n_attrs = store.ctx.n_attrs
+        self.W = store.ctx.W
+        self.stats = QueryStats()
+        self._mask = bitset.attr_mask(self.n_attrs, self.W)
+        # jit caches — keyed by everything static to the compiled step
+        self._closure_steps: dict = {}  # (impl, probe) -> step
+        self._topk_steps: dict = {}  # (impl, k) -> step
+        self._extent_step = None
+
+    # -- step builders (close over plan/config only) ------------------------
+
+    def _local_closure(self):
+        cfg, n_attrs = self.cfg, self.n_attrs
+        if cfg.backend == "matmul":
+            return lambda rows_local, cands: ops.closure_matmul(
+                rows_local, cands, n_attrs, n_valid_rows=rows_local.shape[0]
+            )
+        return lambda rows_local, cands: ops.batched_closure(
+            rows_local,
+            cands,
+            n_attrs,
+            n_valid_rows=rows_local.shape[0],
+            block_n=cfg.block_n,
+            use_kernel=cfg.backend == "kernel",
+            interpret=cfg.interpret,
+        )
+
+    def _closure_body(self, impl: str):
+        plan, n_attrs = self.plan, self.n_attrs
+        local_closure = self._local_closure()
+        mask = self._mask
+        axes = plan.reduce_axes
+
+        def body(rows_local, cands, n_pad):
+            lc, ls = local_closure(rows_local, cands)
+            gc = collectives.and_allreduce(lc, axes, impl=impl, n_attrs=n_attrs)
+            return gc & jnp.asarray(mask), lax.psum(ls, axes) - n_pad
+
+        return body
+
+    def _closure_step(self, impl: str, probe: int):
+        step = self._closure_steps.get((impl, probe))
+        if step is None:
+            n_attrs = self.n_attrs
+
+            def post(gc, gs, intents, skeys, n_concepts):
+                ids = lookup_ids_jnp(
+                    gc, intents, skeys, n_concepts,
+                    n_attrs=n_attrs, probe=probe,
+                )
+                return gc, gs, ids
+
+            step = jax.jit(
+                self.plan.spmd(
+                    self._closure_body(impl), n_rep=2, post=post, n_post_rep=3
+                )
+            )
+            self._closure_steps[(impl, probe)] = step
+        return step
+
+    def _topk_step(self, impl: str, k: int):
+        step = self._topk_steps.get((impl, k))
+        if step is None:
+
+            def post(gc, gs, intents, supports, n_concepts):
+                # concepts whose intent ⊇ the query attrset == subconcepts
+                # of closure(attrset); masked top-k by support.  Extracted
+                # with k unrolled argmax passes — same order as lax.top_k
+                # (desc value, asc index on ties) but ~100× faster than
+                # XLA CPU's top_k on a [slots, cap] score matrix.
+                contains = jnp.all(
+                    (gc[:, None, :] & ~intents[None, :, :]) == 0, axis=-1
+                )
+                valid = jnp.arange(intents.shape[0]) < n_concepts
+                scores = jnp.where(
+                    contains & valid[None, :], supports[None, :], -1
+                ).astype(jnp.int32)
+                rows_arange = jnp.arange(scores.shape[0])
+                ids, vals = [], []
+                for _ in range(k):
+                    idx = jnp.argmax(scores, axis=1)
+                    val = jnp.take_along_axis(
+                        scores, idx[:, None], axis=1
+                    )[:, 0]
+                    ids.append(idx.astype(jnp.int32))
+                    vals.append(val)
+                    scores = scores.at[rows_arange, idx].set(-2)
+                vals = jnp.stack(vals, axis=1)
+                idx = jnp.stack(ids, axis=1)
+                idx = jnp.where(vals >= 0, idx, -1)
+                vals = jnp.maximum(vals, -1)  # exhausted slots read as -1
+                return gc, gs, idx, vals
+
+            step = jax.jit(
+                self.plan.spmd(
+                    self._closure_body(impl), n_rep=2, post=post, n_post_rep=3
+                )
+            )
+            self._topk_steps[(impl, k)] = step
+        return step
+
+    def _extents_step(self):
+        if self._extent_step is None:
+            axes = self.plan.reduce_axes
+
+            def body(ext_local, ids):
+                # [Nl, B] membership bits of each queried concept's column
+                w = jnp.take(ext_local, ids // 32, axis=1)
+                b = (w >> (ids % 32).astype(jnp.uint32)) & jnp.uint32(1)
+                return lax.all_gather(b, axes, axis=0, tiled=True)  # [Np, B]
+
+            def post(bits):
+                pad = (-bits.shape[0]) % 32
+                if pad:
+                    bits = jnp.concatenate(
+                        [bits, jnp.zeros((pad, bits.shape[1]), bits.dtype)]
+                    )
+                return pack_bool_jnp(bits.T.astype(bool))  # [B, Wo]
+
+            self._extent_step = jax.jit(
+                self.plan.spmd(body, n_rep=1, post=post)
+            )
+        return self._extent_step
+
+    # -- micro-batch plumbing ----------------------------------------------
+
+    def _chunks(self, arr: np.ndarray):
+        """Yield ``(lo, n_valid, chunk)`` with every chunk padded to the
+        fixed slot width — one compiled shape per step, ServeEngine-style.
+        Callers early-return on empty batches before reaching here."""
+        S = self.cfg.slots
+        for lo in range(0, arr.shape[0], S):
+            chunk = arr[lo : lo + S]
+            b = chunk.shape[0]
+            if b < S:
+                pad = np.zeros((S - b, *arr.shape[1:]), arr.dtype)
+                chunk = np.concatenate([chunk, pad], axis=0)
+            yield lo, b, chunk
+
+    def _charge_round(self, cap: int) -> str:
+        impl = self.plan.resolve_impl(cap, self.W, self.n_attrs)
+        st = self.stats
+        st.collective_rounds += 1
+        st.reduce_rounds[impl] = st.reduce_rounds.get(impl, 0) + 1
+        st.modeled_comm_bytes += collectives.modeled_comm_bytes(
+            impl, self.plan.n_parts, cap, self.W, self.n_attrs
+        )
+        return impl
+
+    # -- queries ------------------------------------------------------------
+
+    def closure_batch(
+        self, attrsets: np.ndarray
+    ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Closure-of-attrset for [B, W] packed queries → (closed intents
+        [B, W], supports [B], concept ids [B]).  One SPMD round per
+        micro-batch; ids resolve against the snapshot read at entry."""
+        st = self.store.state  # one consistent (rows, snapshot) view
+        snap, rows, n_pad = st.snapshot, st.rows, st.n_pad
+        attrsets = np.ascontiguousarray(attrsets, np.uint32) & self._mask
+        B = attrsets.shape[0]
+        out_c = np.empty((B, self.W), np.uint32)
+        out_s = np.empty((B,), np.int32)
+        out_i = np.empty((B,), np.int32)
+        if B == 0:
+            self.stats.charge("closure", 0, 0)
+            return out_c, out_s, out_i
+        batches = 0
+        for lo, b, chunk in self._chunks(attrsets):
+            impl = self._charge_round(chunk.shape[0])
+            gc, gs, ids = self._closure_step(impl, snap.probe)(
+                rows, jnp.asarray(chunk), jnp.int32(n_pad),
+                snap.intents, snap.skeys, jnp.int32(snap.n_concepts),
+            )
+            out_c[lo : lo + b] = np.asarray(gc)[:b]
+            out_s[lo : lo + b] = np.asarray(gs)[:b]
+            out_i[lo : lo + b] = np.asarray(ids)[:b]
+            batches += 1
+        self.stats.charge("closure", B, batches)
+        return out_c, out_s, out_i
+
+    def topk_batch(
+        self, attrsets: np.ndarray, k: int = 5
+    ) -> tuple[np.ndarray, np.ndarray]:
+        """Top-k concepts by support containing each query attrset →
+        (ids [B, k], supports [B, k]); -1 id pads when fewer match."""
+        st = self.store.state
+        snap, rows, n_pad = st.snapshot, st.rows, st.n_pad
+        attrsets = np.ascontiguousarray(attrsets, np.uint32) & self._mask
+        B = attrsets.shape[0]
+        out_i = np.empty((B, k), np.int32)
+        out_v = np.empty((B, k), np.int32)
+        if B == 0:
+            self.stats.charge("topk", 0, 0)
+            return out_i, out_v
+        batches = 0
+        for lo, b, chunk in self._chunks(attrsets):
+            impl = self._charge_round(chunk.shape[0])
+            _, _, idx, vals = self._topk_step(impl, k)(
+                rows, jnp.asarray(chunk), jnp.int32(n_pad),
+                snap.intents, snap.supports, jnp.int32(snap.n_concepts),
+            )
+            out_i[lo : lo + b] = np.asarray(idx)[:b]
+            out_v[lo : lo + b] = np.asarray(vals)[:b]
+            batches += 1
+        self.stats.charge("topk", B, batches)
+        return out_i, out_v
+
+    def lookup_batch(self, intents: np.ndarray) -> np.ndarray:
+        """Concept ids for already-closed intents [B, W]; -1 for misses.
+        Replicated-table read — no collective round."""
+        snap = self.store.snapshot
+        intents = np.ascontiguousarray(intents, np.uint32)
+        B = intents.shape[0]
+        out = np.empty((B,), np.int32)
+        if B == 0:
+            self.stats.charge("lookup", 0, 0)
+            return out
+        batches = 0
+        for lo, b, chunk in self._chunks(intents):
+            ids = lookup_ids_jnp(
+                jnp.asarray(chunk), snap.intents, snap.skeys,
+                jnp.int32(snap.n_concepts),
+                n_attrs=self.n_attrs, probe=snap.probe,
+            )
+            out[lo : lo + b] = np.asarray(ids)[:b]
+            batches += 1
+        self.stats.charge("lookup", B, batches)
+        return out
+
+    def _order_query(self, ids, table: jax.Array, kind: str):
+        snap = self.store.snapshot
+        ids = np.asarray(ids, np.int32)
+        safe = np.clip(ids, 0, snap.cap - 1)
+        rows = np.asarray(jnp.take(table, jnp.asarray(safe), axis=0))
+        self.stats.charge(kind, ids.shape[0], 1)
+        out = []
+        for r, i in zip(rows, ids):
+            if i < 0 or i >= snap.n_concepts:
+                out.append(np.zeros((0,), np.int32))
+            else:
+                out.append(
+                    np.nonzero(bitset.unpack_bits(r, snap.cap))[0].astype(
+                        np.int32
+                    )
+                )
+        return out
+
+    def supers(self, ids) -> list[np.ndarray]:
+        """All strict superconcepts (smaller intents) per queried id."""
+        return self._order_query(ids, self.store.snapshot.sup_rows, "supers")
+
+    def subs(self, ids) -> list[np.ndarray]:
+        """All strict subconcepts (larger intents) per queried id."""
+        return self._order_query(ids, self.store.snapshot.sub_rows, "subs")
+
+    def children(self, ids) -> list[np.ndarray]:
+        """Covering-relation reads: the ids each concept covers
+        (``ConceptLattice.children`` convention)."""
+        return self._order_query(
+            ids, self.store.snapshot.children_rows, "children"
+        )
+
+    def parents(self, ids) -> list[np.ndarray]:
+        return self._order_query(
+            ids, self.store.snapshot.parents_rows, "parents"
+        )
+
+    def extents_batch(self, ids) -> np.ndarray:
+        """Packed object extents [B, Wo] for concept ids (one all-gather
+        round over the object-sharded extent table per micro-batch)."""
+        st = self.store.state
+        snap = st.snapshot
+        ids = np.asarray(ids, np.int32)
+        B = ids.shape[0]
+        Wo = -(-st.N_padded // 32)
+        out = np.empty((B, Wo), np.uint32)
+        if B == 0:
+            self.stats.charge("extents", 0, 0)
+            return out
+        step = self._extents_step()
+        batches = 0
+        for lo, b, chunk in self._chunks(np.clip(ids, 0, snap.cap - 1)):
+            packed = step(snap.ext_cols, jnp.asarray(chunk))
+            out[lo : lo + b] = np.asarray(packed)[:b]
+            batches += 1
+            self.stats.collective_rounds += 1
+        # misses / out-of-snapshot ids get the empty extent, mirroring
+        # _order_query's empty result (never another concept's objects)
+        out[(ids < 0) | (ids >= snap.n_concepts)] = 0
+        self.stats.charge("extents", B, batches)
+        return out
+
+    def describe(self) -> dict:
+        return {
+            "slots": self.cfg.slots,
+            "backend": self.cfg.backend,
+            "plan": self.plan.describe(),
+            "stats": dataclasses.asdict(self.stats),
+        }

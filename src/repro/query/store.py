@@ -1,0 +1,408 @@
+"""ConceptStore — the mined lattice as a device-resident, queryable artifact.
+
+The store owns one :class:`repro.dist.ShardPlan` (normally the same plan
+that mined the intents) and keeps two kinds of state:
+
+  * **object-sharded** — the packed context rows (``plan.place_rows``, the
+    engine's placement) and the extent table ``ext_cols [N_pad, Wc]``:
+    word ``wc`` of object ``g`` packs membership bits "g ∈ extent(c)" for
+    concepts ``c ∈ [32·wc, 32·wc+32)``.  Extent queries and the streaming
+    support recount run over these shards (one collective per batch).
+  * **replicated snapshot** — a :class:`Snapshot`: the intent table in
+    canonical index order, supports, the two-level hash index
+    (head-attr × popcount, :mod:`repro.core.hashindex`) flattened to a
+    sorted key array for two-sided ``searchsorted`` bucket probes, and the
+    packed order tables (sub/superconcept sets + the covering relation)
+    materialized by the subset-test matmul of :mod:`repro.core.lattice`'s
+    jnp twin below.
+
+Snapshots are immutable and double-buffered: :class:`repro.query.stream.
+StreamUpdater` stages a successor while queries keep serving the active
+one; ``commit()`` swaps a single reference.  Concept ids are positions in
+the snapshot's canonical order and are only meaningful together with
+``snapshot.version``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.core import bitset, hashindex, incremental
+from repro.core.closure import batched_closure_np
+from repro.core.context import FormalContext
+from repro.dist.shardplan import ShardPlan
+from repro.kernels.ops import bucket_size
+
+
+# ---------------------------------------------------------------------------
+# device primitives (jnp twins of the host index/lattice machinery)
+# ---------------------------------------------------------------------------
+
+
+def popcount_jnp(x: jax.Array) -> jax.Array:
+    """Per-set popcount of packed ``[..., W]`` uint32 sets → int32."""
+    return lax.population_count(x.astype(jnp.uint32)).sum(
+        axis=-1, dtype=jnp.int32
+    )
+
+
+def pack_bool_jnp(dense: jax.Array) -> jax.Array:
+    """Pack a bool array ``[..., 32·Wc]`` into ``[..., Wc]`` uint32 words
+    (device twin of ``bitset.pack_bool``; the last dim must already be a
+    multiple of 32)."""
+    *lead, n = dense.shape
+    b = dense.reshape(*lead, n // 32, 32)
+    weights = (jnp.uint32(1) << jnp.arange(32, dtype=jnp.uint32))
+    return (b.astype(jnp.uint32) * weights).sum(axis=-1, dtype=jnp.uint32)
+
+
+@functools.partial(jax.jit, static_argnames=("n_attrs",))
+def order_tables_jnp(intents: jax.Array, n_concepts, *, n_attrs: int):
+    """Subset-test matmul → packed order tables, all on device.
+
+    ``leq[i, j] = intent_i ⊆ intent_j`` via one popcount matmul over the
+    unpacked bit-planes; the covering relation is the transitive reduction
+    ``strict & ~(strict ∘ strict)`` (second matmul) — the device twin of
+    ``repro.core.lattice.subset_matrix`` / ``covering_matmul``.
+
+    Returns ``(sub_rows, sup_rows, children_rows, parents_rows)``, each
+    ``[Cb, Wc]`` uint32 with ``Wc = Cb/32``: row ``c`` packs, over concept
+    ids ``d``, the strict subconcepts of ``c`` (``intent_c ⊂ intent_d``),
+    its strict superconcepts, the concepts ``c`` covers (the
+    ``ConceptLattice.children`` convention: ``d``'s intent ⊂ ``c``'s with
+    nothing between) and the concepts covering ``c``.
+    """
+    Cb, W = intents.shape
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    bits = ((intents[:, :, None] >> shifts) & jnp.uint32(1)).reshape(Cb, W * 32)
+    bits = bits[:, :n_attrs].astype(jnp.float32)
+    sizes = bits.sum(axis=1)
+    inter = bits @ bits.T  # [Cb, Cb] — |y_i ∩ y_j|
+    valid = jnp.arange(Cb) < n_concepts
+    leq = (inter == sizes[:, None]) & valid[:, None] & valid[None, :]
+    strict = leq & ~jnp.eye(Cb, dtype=bool)
+    via = (strict.astype(jnp.float32) @ strict.astype(jnp.float32)) > 0
+    cover = strict & ~via  # cover[d, c]: d ∈ children[c]
+    sub_rows = pack_bool_jnp(strict)  # row c: {d : intent_c ⊂ intent_d}
+    sup_rows = pack_bool_jnp(strict.T)  # row c: {d : intent_d ⊂ intent_c}
+    children_rows = pack_bool_jnp(cover.T)
+    parents_rows = pack_bool_jnp(cover)
+    return sub_rows, sup_rows, children_rows, parents_rows
+
+
+@functools.partial(jax.jit, static_argnames=("n_attrs", "probe"))
+def lookup_ids_jnp(
+    queries: jax.Array,
+    intents: jax.Array,
+    skeys: jax.Array,
+    n_concepts,
+    *,
+    n_attrs: int,
+    probe: int,
+) -> jax.Array:
+    """Two-level-hash concept lookup for a batch of (closed) intents.
+
+    Level-1/level-2 keys (head attribute, popcount) flatten to
+    ``hashindex.bucket_key``; the snapshot's intent table is sorted by that
+    key, so the bucket is one ``searchsorted`` plus a static ``probe``-wide
+    window scan (``probe`` ≥ the snapshot's widest bucket) — O(probe·W)
+    per query instead of O(C·W).  Returns concept ids, -1 for misses.
+    """
+    heads = hashindex.batch_heads_jnp(queries)
+    lengths = popcount_jnp(queries)
+    keys = hashindex.bucket_key(heads, lengths, n_attrs).astype(skeys.dtype)
+    lo = jnp.searchsorted(skeys, keys, side="left")
+    window = lo[:, None] + jnp.arange(probe)[None, :]  # [B, probe]
+    safe = jnp.clip(window, 0, intents.shape[0] - 1)
+    hit = (
+        (window < n_concepts)
+        & (skeys[safe] == keys[:, None])
+        & jnp.all(intents[safe] == queries[:, None, :], axis=-1)
+    )
+    return jnp.max(jnp.where(hit, window, -1), axis=1).astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# snapshot
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Snapshot:
+    """One immutable, device-resident lattice version.
+
+    Replicated arrays are padded to ``cap`` (a power of two ≥ 32, so the
+    packed order tables stay word-aligned); rows past ``n_concepts`` are
+    padding every query masks by id.  ``ext_cols`` is the object-sharded
+    extent table (see module docstring) riding with the snapshot because a
+    staged update grows it together with the intent set.
+    """
+
+    version: int
+    n_concepts: int
+    cap: int
+    max_bucket: int
+    intents: jax.Array  # [cap, W] uint32, canonical (bucket-key) order
+    supports: jax.Array  # [cap] int32
+    skeys: jax.Array  # [cap] int32, ascending; pads = int32 max
+    sub_rows: jax.Array  # [cap, Wc]
+    sup_rows: jax.Array  # [cap, Wc]
+    children_rows: jax.Array  # [cap, Wc]
+    parents_rows: jax.Array  # [cap, Wc]
+    ext_cols: jax.Array  # object-sharded [N_pad, Wc]
+    intents_np: np.ndarray  # [C, W] host copy (oracles, export)
+    supports_np: np.ndarray  # [C]
+
+    @property
+    def probe(self) -> int:
+        """Static bucket-scan window for ``lookup_ids_jnp``."""
+        return bucket_size(max(1, self.max_bucket), minimum=4)
+
+
+def canonical_order(intents: np.ndarray, n_attrs: int) -> np.ndarray:
+    """Sort permutation for the snapshot's canonical concept order:
+    ascending two-level bucket key, packed words as the tiebreak."""
+    heads = hashindex.batch_heads(intents)
+    lengths = bitset.popcount(intents)
+    keys = hashindex.bucket_key(heads, lengths, n_attrs)
+    words = tuple(intents[:, w] for w in reversed(range(intents.shape[1])))
+    return np.lexsort(words + (keys,))
+
+
+# ---------------------------------------------------------------------------
+# store
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class StoreState:
+    """Everything one store version consists of: the context, its device
+    placement, and the snapshot built against it.  Immutable — a commit
+    swaps the store's single reference to one of these, so a concurrent
+    query batch reads a consistent (rows, snapshot) pair no matter when
+    the swap lands."""
+
+    ctx: FormalContext
+    rows: jax.Array
+    n_pad: int
+    N_padded: int
+    snapshot: Snapshot | None
+
+
+class ConceptStore:
+    """Device-resident concept store over one ShardPlan.
+
+    ``build`` places the context once (the mining engine's placement can be
+    reused by passing its plan) and materializes the first snapshot; the
+    store then serves :class:`repro.query.engine.QueryEngine` reads and
+    :class:`repro.query.stream.StreamUpdater` writes.
+    """
+
+    def __init__(self, ctx: FormalContext, plan: ShardPlan | None = None):
+        self.plan = plan or ShardPlan.simulated(1)
+        rows, n_pad = ctx.padded_rows(self.plan.row_alignment)
+        self._state = StoreState(
+            ctx=ctx,
+            rows=self.plan.place_rows(rows),
+            n_pad=n_pad,
+            N_padded=rows.shape[0],
+            snapshot=None,
+        )
+        self._supports_step = self._build_supports_step()
+        self._staged: StoreState | None = None
+
+    # one consistent view per read — query batches grab this once
+    @property
+    def state(self) -> StoreState:
+        return self._state
+
+    @property
+    def ctx(self) -> FormalContext:
+        return self._state.ctx
+
+    @property
+    def rows(self) -> jax.Array:
+        return self._state.rows
+
+    @property
+    def n_pad(self) -> int:
+        return self._state.n_pad
+
+    @property
+    def N_padded(self) -> int:
+        return self._state.N_padded
+
+    @property
+    def snapshot(self) -> Snapshot | None:
+        return self._state.snapshot
+
+    # -- construction ------------------------------------------------------
+
+    @classmethod
+    def build(
+        cls,
+        ctx: FormalContext,
+        intents,
+        *,
+        plan: ShardPlan | None = None,
+    ) -> "ConceptStore":
+        store = cls(ctx, plan)
+        arr = np.unique(incremental.as_intent_array(intents), axis=0)
+        store._state = dataclasses.replace(
+            store._state, snapshot=store.make_snapshot(arr, version=0)
+        )
+        return store
+
+    def make_snapshot(
+        self,
+        intents_np: np.ndarray,
+        *,
+        version: int,
+        rows_dev: jax.Array | None = None,
+        n_pad: int | None = None,
+        ctx: FormalContext | None = None,
+    ) -> Snapshot:
+        """Materialize a snapshot for ``intents_np`` (distinct, unordered).
+
+        ``rows_dev``/``n_pad``/``ctx`` default to the store's active
+        context; the stream updater passes the staged (grown) ones.
+        Supports are recounted with one plan-SPMD psum round per chunk;
+        the order tables are two device matmuls (``order_tables_jnp``).
+        """
+        ctx = ctx or self.ctx
+        rows_dev = self.rows if rows_dev is None else rows_dev
+        n_pad = self.n_pad if n_pad is None else n_pad
+        m, W = ctx.n_attrs, ctx.W
+
+        perm = canonical_order(intents_np, m)
+        arr = intents_np[perm]
+        C = arr.shape[0]
+        cap = bucket_size(C, minimum=32)
+        heads = hashindex.batch_heads(arr)
+        lengths = bitset.popcount(arr)
+        keys = hashindex.bucket_key(heads, lengths, m).astype(np.int32)
+        max_bucket = int(np.bincount(keys - keys.min()).max()) if C else 1
+
+        buf = np.full((cap, W), 0xFFFFFFFF, np.uint32)
+        buf[:C] = arr
+        skeys = np.full((cap,), np.iinfo(np.int32).max, np.int32)
+        skeys[:C] = keys
+
+        plan = self.plan
+        intents_dev = plan.replicate(buf)
+        skeys_dev = plan.replicate(skeys)
+
+        supports = self._supports(arr, rows_dev, n_pad)
+        sup_buf = np.zeros((cap,), np.int32)
+        sup_buf[:C] = supports
+
+        tables = order_tables_jnp(intents_dev, jnp.int32(C), n_attrs=m)
+        sub_rows, sup_rows, children_rows, parents_rows = (
+            plan.replicate(t) for t in tables
+        )
+
+        # Extent table, object-sharded: ext_cols[g, wc] packs g ∈ extent(c)
+        # over the 32 concepts of word wc.  (Padded context rows are
+        # all-ones and would match every concept; they pack as zeros here.)
+        N_padded = ctx.n_objects + n_pad
+        ext_bool = np.zeros((N_padded, cap), dtype=bool)
+        if C:
+            n = ctx.n_objects
+            sub = bitset.is_subset(arr[None, :, :], ctx.rows[:, None, :])
+            ext_bool[:n, :C] = sub
+        ext_cols = plan.place_rows(
+            bitset.pack_bool(ext_bool, cap // 32)
+        )
+
+        return Snapshot(
+            version=version,
+            n_concepts=C,
+            cap=cap,
+            max_bucket=max(1, max_bucket),
+            intents=intents_dev,
+            supports=plan.replicate(sup_buf),
+            skeys=skeys_dev,
+            sub_rows=sub_rows,
+            sup_rows=sup_rows,
+            children_rows=children_rows,
+            parents_rows=parents_rows,
+            ext_cols=ext_cols,
+            intents_np=arr,
+            supports_np=supports,
+        )
+
+    # -- device support recount (one psum round per chunk) ------------------
+
+    def _build_supports_step(self):
+        plan = self.plan
+        axes = plan.reduce_axes
+
+        def body(rows_local, cands, n_pad):
+            match = jnp.all(
+                (rows_local[None, :, :] & cands[:, None, :])
+                == cands[:, None, :],
+                axis=-1,
+            )
+            local = match.sum(axis=-1, dtype=jnp.int32)
+            return lax.psum(local, axes) - n_pad
+
+        return jax.jit(plan.spmd(body, n_rep=2))
+
+    def _supports(
+        self, intents_np: np.ndarray, rows_dev: jax.Array, n_pad: int
+    ) -> np.ndarray:
+        C, W = intents_np.shape
+        if C == 0:
+            return np.zeros((0,), np.int32)
+        out = np.empty((C,), np.int32)
+        step = min(self.plan.max_batch, 4096)
+        for lo in range(0, C, step):
+            chunk = intents_np[lo : lo + step]
+            cap = bucket_size(chunk.shape[0], minimum=8)
+            buf = np.zeros((cap, W), np.uint32)
+            buf[: chunk.shape[0]] = chunk
+            s = self._supports_step(
+                rows_dev, jnp.asarray(buf), jnp.int32(n_pad)
+            )
+            out[lo : lo + chunk.shape[0]] = np.asarray(s)[: chunk.shape[0]]
+        return out
+
+    # -- double-buffered commit protocol -----------------------------------
+
+    def stage(self, state: StoreState):
+        """Install a staged successor; the active snapshot keeps serving."""
+        self._staged = state
+
+    def commit(self) -> Snapshot:
+        """Atomically swap the staged state in (one reference assignment —
+        an in-flight query batch finishes on whichever state it read)."""
+        if self._staged is None:
+            raise RuntimeError("no staged update to commit")
+        self._state, self._staged = self._staged, None
+        return self._state.snapshot
+
+    # -- introspection ------------------------------------------------------
+
+    def describe(self) -> dict:
+        snap = self.snapshot
+        return {
+            "plan": self.plan.describe(),
+            "objects": self.ctx.n_objects,
+            "attrs": self.ctx.n_attrs,
+            "version": None if snap is None else snap.version,
+            "concepts": None if snap is None else snap.n_concepts,
+            "cap": None if snap is None else snap.cap,
+            "max_bucket": None if snap is None else snap.max_bucket,
+        }
+
+
+def host_supports(ctx: FormalContext, intents_np: np.ndarray) -> np.ndarray:
+    """Host oracle for the SPMD support recount (tests/benchmarks)."""
+    _, s = batched_closure_np(ctx.rows, intents_np, ctx.attr_mask())
+    return s.astype(np.int32)

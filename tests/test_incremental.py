@@ -8,7 +8,12 @@ except ModuleNotFoundError:  # deterministic seeded fallback (repro.testing)
 
 from repro.core import all_closures_batched, bitset
 from repro.core.context import FormalContext
-from repro.core.incremental import add_object, add_objects
+from repro.core.incremental import (
+    add_object,
+    add_objects,
+    add_objects_sequential,
+    row_intersections,
+)
 
 settings.register_profile("inc", deadline=None, max_examples=25)
 settings.load_profile("inc")
@@ -42,6 +47,43 @@ def test_incremental_equals_batch(n, m, density, seed, k_new):
     grown_ctx, grown = add_objects(base, intents, full.rows[n:])
     assert _keys(grown) == _keys(all_closures_batched(full))
     assert np.array_equal(grown_ctx.rows, full.rows)
+
+
+@given(
+    st.integers(2, 30), st.integers(1, 14), st.floats(0.1, 0.6),
+    st.integers(0, 10_000), st.integers(1, 6),
+)
+def test_batched_equals_sequential_oracle(n, m, density, seed, k_new):
+    """The one-pass batched ``add_objects`` must match the per-row Godin
+    loop exactly — including on *non-closed* seed intent sets, where the
+    full-attribute intent M is absent."""
+    full = FormalContext.synthetic(n + k_new, m, density, seed=seed)
+    base = FormalContext(rows=full.rows[:n], n_objects=n, n_attrs=m)
+    intents = np.stack(all_closures_batched(base))
+    c1, g1 = add_objects(base, intents, full.rows[n:])
+    c2, g2 = add_objects_sequential(base, intents, full.rows[n:])
+    assert _keys(g1) == _keys(g2)
+    assert np.array_equal(c1.rows, c2.rows)
+    # non-closed seed: just the base rows themselves
+    seed_set = np.unique(base.rows, axis=0)
+    _, g3 = add_objects(base, seed_set, full.rows[n:])
+    _, g4 = add_objects_sequential(base, seed_set, full.rows[n:])
+    assert _keys(g3) == _keys(g4)
+
+
+@given(
+    st.integers(1, 6), st.integers(1, 10), st.floats(0.2, 0.7),
+    st.integers(0, 10_000),
+)
+def test_row_intersections_is_all_subset_meets(k, m, density, seed):
+    rows = FormalContext.synthetic(k, m, density, seed=seed).rows
+    P = row_intersections(rows)
+    ref = set()
+    for mask in range(1, 2**k):
+        sel = [rows[i] for i in range(k) if (mask >> i) & 1]
+        ref.add(bitset.key_bytes(np.bitwise_and.reduce(np.stack(sel), axis=0)))
+    assert _keys(P) == ref
+    assert P.shape[0] == len(ref)  # deduped
 
 
 def test_incremental_much_cheaper_than_remine():

@@ -1,0 +1,99 @@
+"""Covering-relation construction: the vectorized subset-test-matmul path
+vs the host loop vs a brute-force transitive-reduction oracle."""
+
+import numpy as np
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:  # deterministic seeded fallback (repro.testing)
+    from repro.testing import given, settings, st
+
+from repro.core import all_closures_batched, bitset
+from repro.core.context import FormalContext, paper_context
+from repro.core.lattice import (
+    build_lattice,
+    covering_matmul,
+    subset_matrix,
+)
+
+settings.register_profile("lat", deadline=None, max_examples=20)
+settings.load_profile("lat")
+
+
+def _brute_force_children(arr: np.ndarray) -> list[list[int]]:
+    """Independent O(C³) oracle: strict-subset pairs, then drop any pair
+    with a strictly-between third intent (transitive reduction)."""
+    C = arr.shape[0]
+    strict = np.zeros((C, C), dtype=bool)  # strict[j, i]: intent_j ⊂ intent_i
+    for j in range(C):
+        for i in range(C):
+            if j != i and bool(bitset.is_subset(arr[j], arr[i])) and not (
+                np.array_equal(arr[j], arr[i])
+            ):
+                strict[j, i] = True
+    children = [[] for _ in range(C)]
+    for i in range(C):
+        for j in range(C):
+            if strict[j, i] and not any(
+                strict[j, k] and strict[k, i] for k in range(C)
+            ):
+                children[i].append(j)
+    return children
+
+
+@given(
+    st.integers(3, 30), st.integers(2, 12), st.floats(0.15, 0.6),
+    st.integers(0, 10_000),
+)
+def test_covering_matmul_vs_oracles(n, m, density, seed):
+    ctx = FormalContext.synthetic(n, m, density, seed=seed)
+    intents = all_closures_batched(ctx)
+    lat_mm = build_lattice(ctx, intents, method="matmul")
+    lat_host = build_lattice(ctx, intents, method="host")
+    assert np.array_equal(lat_mm.intents, lat_host.intents)
+    assert [list(c) for c in lat_mm.children] == [
+        list(c) for c in lat_host.children
+    ]
+    assert lat_mm.children == _brute_force_children(lat_mm.intents)
+
+
+def test_subset_matrix_matches_pairwise():
+    ctx = FormalContext.synthetic(25, 10, 0.3, seed=3)
+    arr = np.stack(all_closures_batched(ctx))
+    leq = subset_matrix(arr, ctx.n_attrs)
+    C = arr.shape[0]
+    for i in range(C):
+        for j in range(C):
+            assert leq[i, j] == bool(bitset.is_subset(arr[i], arr[j]))
+
+
+def test_covering_paper_example_structure():
+    ctx = paper_context()
+    lat = build_lattice(ctx, all_closures_batched(ctx))
+    assert lat.n_concepts == 21
+    # the Hasse diagram of a lattice is connected: every non-top concept
+    # is covered by someone, every non-bottom concept covers someone
+    covered_by = [[] for _ in range(21)]
+    for i, kids in enumerate(lat.children):
+        for j in kids:
+            covered_by[j].append(i)
+    for i in range(21):
+        pop = int(bitset.popcount(lat.intents[i]))
+        if pop > 0:  # not the top (∅ intent) — someone's child
+            assert covered_by[i] or lat.children[i], i
+    # covering edges only go from larger to smaller intents
+    for i, kids in enumerate(lat.children):
+        for j in kids:
+            assert bitset.popcount(lat.intents[j]) < bitset.popcount(
+                lat.intents[i]
+            )
+            assert bool(bitset.is_subset(lat.intents[j], lat.intents[i]))
+
+
+def test_default_method_is_matmul_and_matches_seed_behaviour():
+    """The old host-loop output is the contract; the new default must
+    reproduce it exactly on a mined lattice."""
+    ctx = FormalContext.synthetic(40, 14, 0.25, seed=11)
+    intents = all_closures_batched(ctx)
+    assert build_lattice(ctx, intents).children == build_lattice(
+        ctx, intents, method="host"
+    ).children

@@ -1,0 +1,269 @@
+"""repro.query — store/engine results vs host oracles, shard-count
+invariance, and streaming-insert equivalence with batch remining."""
+
+import numpy as np
+import pytest
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:  # deterministic seeded fallback (repro.testing)
+    from repro.testing import given, settings, st
+
+from repro.core import all_closures_batched, bitset
+from repro.core.closure import closure_np, extent_np
+from repro.core.context import FormalContext, paper_context
+from repro.core.lattice import build_lattice
+from repro.dist.shardplan import ShardPlan
+from repro.query import ConceptStore, QueryEngine, StreamUpdater
+from repro.query.engine import QueryConfig
+from repro.query.store import host_supports
+
+settings.register_profile("query", deadline=None, max_examples=10)
+settings.load_profile("query")
+
+
+def _keys(intents):
+    return {bitset.key_bytes(y) for y in np.asarray(intents, np.uint32)}
+
+
+@pytest.fixture(scope="module")
+def served():
+    ctx = FormalContext.synthetic(60, 18, 0.3, seed=5)
+    intents = all_closures_batched(ctx)
+    plan = ShardPlan.simulated(4, block_n=16)
+    store = ConceptStore.build(ctx, intents, plan=plan)
+    qe = QueryEngine(store, QueryConfig(slots=16))
+    return ctx, intents, store, qe
+
+
+def _random_attrsets(ctx, n, seed):
+    rng = np.random.default_rng(seed)
+    base = ctx.rows[rng.integers(0, ctx.n_objects, size=n)]
+    keep = bitset.pack_bool(rng.random((n, ctx.n_attrs)) < 0.4, ctx.W)
+    return base & keep
+
+
+# -- store invariants --------------------------------------------------------
+
+
+def test_store_snapshot_supports_and_order(served):
+    ctx, intents, store, _ = served
+    snap = store.snapshot
+    assert snap.n_concepts == len(intents)
+    assert _keys(snap.intents_np) == _keys(intents)
+    np.testing.assert_array_equal(
+        snap.supports_np, host_supports(ctx, snap.intents_np)
+    )
+    # canonical order: ascending two-level bucket key
+    from repro.core import hashindex
+
+    keys = hashindex.bucket_key(
+        hashindex.batch_heads(snap.intents_np),
+        bitset.popcount(snap.intents_np),
+        ctx.n_attrs,
+    )
+    assert np.all(np.diff(keys) >= 0)
+
+
+def test_store_order_tables_vs_subset_loops(served):
+    ctx, _, store, qe = served
+    snap = store.snapshot
+    arr = snap.intents_np
+    C = snap.n_concepts
+    ids = np.arange(C, dtype=np.int32)
+    supers, subs = qe.supers(ids), qe.subs(ids)
+    for c in range(C):
+        sup_ref = [
+            d for d in range(C)
+            if d != c and bool(bitset.is_subset(arr[d], arr[c]))
+        ]
+        sub_ref = [
+            d for d in range(C)
+            if d != c and bool(bitset.is_subset(arr[c], arr[d]))
+        ]
+        assert list(supers[c]) == sup_ref
+        assert list(subs[c]) == sub_ref
+
+
+def test_store_covering_vs_build_lattice(served):
+    ctx, intents, store, qe = served
+    snap = store.snapshot
+    lat = build_lattice(ctx, intents)  # popcount-ordered host artifact
+    # map lattice indices -> store ids via intent bytes
+    id_of = {bitset.key_bytes(y): i for i, y in enumerate(snap.intents_np)}
+    perm = np.array([id_of[bitset.key_bytes(y)] for y in lat.intents])
+    children = qe.children(np.arange(snap.n_concepts, dtype=np.int32))
+    for i, kids in enumerate(lat.children):
+        got = set(children[perm[i]].tolist())
+        assert got == {int(perm[j]) for j in kids}
+
+
+# -- query engine vs host oracles -------------------------------------------
+
+
+def test_closure_batch_vs_host_oracle(served):
+    ctx, _, store, qe = served
+    qs = _random_attrsets(ctx, 33, seed=1)  # odd size: exercises padding
+    gc, gs, ids = qe.closure_batch(qs)
+    mask = ctx.attr_mask()
+    snap = store.snapshot
+    for q, c, s, i in zip(qs, gc, gs, ids):
+        c_ref, s_ref = closure_np(ctx.rows, q, mask)
+        assert np.array_equal(c, c_ref)
+        assert s == s_ref
+        assert i >= 0 and np.array_equal(snap.intents_np[i], c_ref)
+
+
+def test_lookup_hits_and_misses(served):
+    ctx, _, store, qe = served
+    snap = store.snapshot
+    ids = qe.lookup_batch(snap.intents_np)
+    np.testing.assert_array_equal(ids, np.arange(snap.n_concepts))
+    # a non-closed attrset must miss
+    non_intents = []
+    known = _keys(snap.intents_np)
+    for y in snap.intents_np:
+        for a in range(ctx.n_attrs):
+            cand = y | bitset.bit(a, ctx.W)
+            if bitset.key_bytes(cand) not in known:
+                non_intents.append(cand)
+                break
+        if len(non_intents) >= 5:
+            break
+    if non_intents:
+        miss = qe.lookup_batch(np.stack(non_intents))
+        assert np.all(miss == -1)
+
+
+def test_topk_vs_host_oracle(served):
+    ctx, _, store, qe = served
+    snap = store.snapshot
+    qs = _random_attrsets(ctx, 9, seed=2)
+    ids, vals = qe.topk_batch(qs, k=4)
+    mask = ctx.attr_mask()
+    for q, idr, valr in zip(qs, ids, vals):
+        c, _ = closure_np(ctx.rows, q, mask)
+        matches = sorted(
+            (
+                (int(snap.supports_np[j]), j)
+                for j in range(snap.n_concepts)
+                if bool(bitset.is_subset(c, snap.intents_np[j]))
+            ),
+            key=lambda t: (-t[0], t[1]),
+        )[:4]
+        ref_ids = [j for _, j in matches] + [-1] * (4 - len(matches))
+        ref_vals = [s for s, _ in matches] + [-1] * (4 - len(matches))
+        assert list(idr) == ref_ids
+        assert list(valr) == ref_vals
+
+
+def test_extents_vs_host_oracle(served):
+    ctx, _, store, qe = served
+    snap = store.snapshot
+    ids = np.arange(snap.n_concepts, dtype=np.int32)
+    packed = qe.extents_batch(ids)
+    for c in ids:
+        ext_ref = extent_np(ctx.rows, snap.intents_np[c])
+        got = bitset.unpack_bits(packed[c], store.N_padded)
+        assert np.array_equal(got[: ctx.n_objects], ext_ref)
+        assert not got[ctx.n_objects :].any()
+
+
+def test_extents_of_miss_ids_are_empty(served):
+    """-1 (miss/pad) ids must yield the empty extent, never another
+    concept's objects; empty batches dispatch no SPMD round."""
+    ctx, _, store, qe = served
+    packed = qe.extents_batch(np.array([-1, 0, store.snapshot.n_concepts]))
+    assert not packed[0].any()
+    assert not packed[2].any()
+    assert packed[1].any()  # concept 0 itself is real
+    rounds = qe.stats.collective_rounds
+    empty = qe.extents_batch(np.zeros((0,), np.int32))
+    assert empty.shape[0] == 0
+    assert qe.stats.collective_rounds == rounds
+    gc, gs, ids = qe.closure_batch(np.zeros((0, ctx.W), np.uint32))
+    assert gc.shape == (0, ctx.W) and gs.shape == (0,) and ids.shape == (0,)
+
+
+def test_shard_count_invariance():
+    """The same workload over 1/2/4 simulated shards — and allgather vs
+    rsag vs auto — must be bit-identical (AND-semigroup collectives)."""
+    ctx = FormalContext.synthetic(48, 12, 0.35, seed=9)
+    intents = all_closures_batched(ctx)
+    qs = _random_attrsets(ctx, 21, seed=3)
+    ref = None
+    for n_parts, impl in [(1, "rsag"), (2, "allgather"), (4, "auto")]:
+        plan = ShardPlan.simulated(n_parts, reduce_impl=impl, block_n=16)
+        store = ConceptStore.build(ctx, intents, plan=plan)
+        qe = QueryEngine(store, QueryConfig(slots=8))
+        out = qe.closure_batch(qs) + qe.topk_batch(qs[:5], k=3)
+        if ref is None:
+            ref = out
+        else:
+            for a, b in zip(ref, out):
+                np.testing.assert_array_equal(a, b)
+
+
+# -- streaming updates -------------------------------------------------------
+
+
+@given(
+    st.integers(4, 24), st.integers(2, 12), st.floats(0.15, 0.5),
+    st.integers(0, 10_000), st.integers(1, 5),
+)
+def test_stream_insert_equals_batch_remine(n, m, density, seed, k_new):
+    full = FormalContext.synthetic(n + k_new, m, density, seed=seed)
+    base = FormalContext(rows=full.rows[:n], n_objects=n, n_attrs=m)
+    intents = all_closures_batched(base)
+    store = ConceptStore.build(base, intents, plan=ShardPlan.simulated(2, block_n=8))
+    StreamUpdater(store).apply(full.rows[n:])
+    snap = store.snapshot
+    assert _keys(snap.intents_np) == _keys(all_closures_batched(full))
+    np.testing.assert_array_equal(store.ctx.rows, full.rows)
+    np.testing.assert_array_equal(
+        snap.supports_np, host_supports(full, snap.intents_np)
+    )
+    assert snap.version == 1
+
+
+def test_double_buffered_snapshot_serves_through_stage():
+    ctx = paper_context()
+    intents = all_closures_batched(ctx)
+    store = ConceptStore.build(ctx, intents, plan=ShardPlan.simulated(1))
+    qe = QueryEngine(store, QueryConfig(slots=8))
+    qs = _random_attrsets(ctx, 6, seed=0)
+    before = qe.closure_batch(qs)
+    v0 = store.snapshot.version
+
+    upd = StreamUpdater(store)
+    new_rows = bitset.pack_bool(
+        np.random.default_rng(1).random((2, ctx.n_attrs)) < 0.4, ctx.W
+    )
+    receipt = upd.stage(new_rows)
+    # staged but not committed: the active snapshot (and results) unchanged
+    assert store.snapshot.version == v0
+    mid = qe.closure_batch(qs)
+    for a, b in zip(before, mid):
+        np.testing.assert_array_equal(a, b)
+
+    upd.commit()
+    assert store.snapshot.version == v0 + 1
+    assert store.snapshot.n_concepts == receipt.n_concepts_after
+    # after the swap the same queries resolve against the grown context
+    gc, gs, ids = qe.closure_batch(qs)
+    mask = store.ctx.attr_mask()
+    for q, c, s, i in zip(qs, gc, gs, ids):
+        c_ref, s_ref = closure_np(store.ctx.rows, q, mask)
+        assert np.array_equal(c, c_ref) and s == s_ref and i >= 0
+    with pytest.raises(RuntimeError):
+        store.commit()
+
+
+def test_stream_rejects_bad_rows():
+    ctx = paper_context()
+    store = ConceptStore.build(
+        ctx, all_closures_batched(ctx), plan=ShardPlan.simulated(1)
+    )
+    upd = StreamUpdater(store)
+    bad = np.full((1, ctx.W), 0xFFFFFFFF, np.uint32)  # bits above n_attrs
+    with pytest.raises(ValueError):
+        upd.stage(bad)

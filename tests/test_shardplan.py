@@ -166,3 +166,63 @@ def test_modeled_reduce_bytes_matches_collectives_model():
     pmin = ShardPlan.simulated(4, reduce_impl="pmin")
     assert pmin.modeled_reduce_bytes(128, 3, n_attrs=70) == 4 * 3 * 128 * 70 * 4
     assert pmin.modeled_reduce_bytes(128, 3) == 4 * 3 * 128 * (3 * 32) * 4
+
+
+# -- schedule autotuning (reduce_impl="auto") --------------------------------
+
+
+def test_auto_resolves_by_batch_size():
+    plan = ShardPlan.simulated(8, reduce_impl="auto")
+    W, m = 5, 133
+    # latency-bound small batch → allgather's single ring pass
+    assert plan.resolve_impl(8, W, m) == "allgather"
+    # bandwidth-bound large batch → rsag's 2(k-1)/k volume
+    assert plan.resolve_impl(8192, W, m) == "rsag"
+    # monotone: once rsag wins it keeps winning as batches grow
+    impls = [plan.resolve_impl(b, W, m) for b in (8, 64, 512, 4096, 32768)]
+    assert impls == sorted(impls, key=("allgather", "rsag").index)
+    # a fixed schedule resolves to itself regardless of batch
+    fixed = ShardPlan.simulated(8, reduce_impl="pmin")
+    assert fixed.resolve_impl(8, W, m) == "pmin"
+
+
+def test_auto_modeled_bytes_follow_the_choice():
+    from repro.dist import collectives
+
+    plan = ShardPlan.simulated(8, reduce_impl="auto")
+    for batch in (8, 256, 8192):
+        impl = plan.resolve_impl(batch, 5, 133)
+        assert plan.modeled_reduce_bytes(batch, 5, 133) == (
+            collectives.modeled_comm_bytes(impl, 8, batch, 5, 133)
+        )
+
+
+def test_auto_cost_model_components():
+    from repro.dist import collectives
+
+    # one ring pass vs two: rsag pays twice the hops of allgather
+    assert collectives.ring_steps("rsag", 8) == 2 * collectives.ring_steps(
+        "allgather", 8
+    )
+    assert collectives.ring_steps("allgather", 1) == 0
+    # with the latency term zeroed, auto degenerates to pure volume (rsag
+    # for every k > 2)
+    plan = dataclasses.replace(
+        ShardPlan.simulated(8, reduce_impl="auto"), auto_hop_bytes=0
+    )
+    assert plan.resolve_impl(1, 5, 133) == "rsag"
+
+
+def test_auto_engine_mines_identically_and_records_choices(ctx, ref):
+    plan = ShardPlan.simulated(4, reduce_impl="auto", block_n=64)
+    eng = ClosureEngine(ctx, plan=plan, backend="jnp")
+    res = mrganter_plus(ctx, eng, local_prune=True)
+    assert _keys(res.intents) == ref
+    # every dispatched round recorded a concrete schedule
+    assert sum(eng.stats.reduce_rounds.values()) == eng.stats.closure_calls
+    assert set(eng.stats.reduce_rounds) <= {"allgather", "rsag"}
+
+
+def test_auto_rejects_unknown_schedule():
+    with pytest.raises(ValueError):
+        ShardPlan.simulated(4, reduce_impl="autotune")
