@@ -11,7 +11,7 @@ def main(argv=None) -> None:
     p = argparse.ArgumentParser()
     p.add_argument(
         "--only", default=None,
-        help="comma-separated subset: table7,table8,table9,fig234,kernel,frontier,dist,query,roofline",
+        help="comma-separated subset: table7,table8,table9,fig234,kernel,frontier,dist,query,rules,roofline",
     )
     p.add_argument("--roofline-path", default="dryrun_single.jsonl")
     args = p.parse_args(argv)
@@ -23,6 +23,7 @@ def main(argv=None) -> None:
         kernel_bench,
         query_bench,
         roofline,
+        rules_bench,
         table7_datasets,
         table8_runtime,
         table9_iterations,
@@ -37,6 +38,7 @@ def main(argv=None) -> None:
         "frontier": kernel_bench.run_frontier,
         "dist": dist_bench.run,
         "query": query_bench.run,
+        "rules": rules_bench.run,
         "roofline": lambda: roofline.run(args.roofline_path),
     }
     print("name,us_per_call,derived")

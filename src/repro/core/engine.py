@@ -60,6 +60,9 @@ class EngineStats:
     # reduce_impl this has one key; under ``reduce_impl="auto"`` it records
     # the autotuner's per-round allgather-vs-rsag choices.
     reduce_rounds: dict = dataclasses.field(default_factory=dict)
+    # the plan's "auto" latency term (measured when hop_calibrated)
+    auto_hop_bytes: int = 0
+    hop_calibrated: bool = False
 
 
 class ClosureEngine:
@@ -128,7 +131,10 @@ class ClosureEngine:
         self.block_n = plan.block_n
         self.max_batch = plan.max_batch
         self.interpret = interpret
-        self.stats = EngineStats()
+        self.stats = EngineStats(
+            auto_hop_bytes=plan.auto_hop_bytes,
+            hop_calibrated=plan.hop_calibrated,
+        )
         self.n_parts = plan.n_parts
 
         # Pad rows so every shard is block-aligned: N % (k * block_n) == 0.

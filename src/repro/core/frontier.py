@@ -11,8 +11,9 @@ iteration.  This module runs the whole frontier side through the engine's
                           adjacent-unique over packed words, *before* the
                           reduce — MRGanter+'s per-partition combiner)
                      ──►  plan-SPMD round, one region per chunk:
-                          local closure map → AND-allreduce →
-                          fused canonicity / feasibility / closure-dedupe
+                          local closure map → AND-allreduce (+ support
+                          psum) → fused canonicity / feasibility /
+                          closure-dedupe / iceberg min-support cut
                      ──►  compacted survivors
 
 Frontier state and the LOW/BIT tables are plan-replicated, so under a real
@@ -209,8 +210,10 @@ class DeviceFrontier:
         # object: a driver builds a fresh DeviceFrontier per run, and
         # per-run jax.jit wrappers would re-trace and re-compile the whole
         # pipeline every run (defeating the warm-run protocol).  The
-        # tables are engine-ctx-determined and the four fused steps are
-        # identical for every DeviceFrontier of a given engine.
+        # tables are engine-ctx-determined and the fused steps are
+        # identical for every DeviceFrontier of a given engine.  Steps are
+        # built lazily (``_step_fn``): a run that never mines icebergs
+        # never traces the iceberg variants.
         cache = getattr(engine, "_frontier_cache", None)
         if cache is None:
             t = lectic.LecticTables(self.n_attrs)
@@ -229,25 +232,87 @@ class DeviceFrontier:
                     jnp.asarray(t.attr_mask), n_attrs=n_attrs,
                 )
 
+            # Iceberg posts: min_support rides as a *traced* extra operand,
+            # so one compile serves every threshold.  The support filter
+            # runs right after the psum, inside the same SPMD region —
+            # infrequent candidates are compacted away before they are
+            # downloaded, re-expanded, or ever sized into a later reduce.
+            def post_iceberg(gc, gs, n_valid, min_sup):
+                keep = (jnp.arange(gc.shape[0]) < n_valid) & (gs >= min_sup)
+                n, gc = _compact(keep, gc)
+                return gc, n
+
+            def post_iceberg_unique(gc, gs, n_valid, min_sup):
+                keep = (jnp.arange(gc.shape[0]) < n_valid) & (gs >= min_sup)
+                n, gc = _sort_unique(gc, keep)
+                return gc, n
+
+            def post_cbo_iceberg(gc, gs, parents, gens, n_valid, min_sup):
+                ok = lectic.feasible_jnp(gc, parents, gens, jnp.asarray(t.LOW))
+                ok = ok & (jnp.arange(gc.shape[0]) < n_valid)
+                ok = ok & (gs >= min_sup)
+                n, gc, gens = _compact(ok, gc, gens)
+                return gc, gens, n
+
+            def post_ganter_iceberg(gc, gs, Y, valid, min_sup):
+                # Alg.-5 scan restricted to *frequent* successors: the next
+                # frequent closure in lectic order is Y ⊕ a for the largest
+                # feasible a with support ≥ min_sup (any smaller frequent
+                # closure between would be a subset of it — see
+                # tests/test_rules.py for the property statement).
+                gens = jnp.arange(n_attrs, dtype=jnp.int32)
+                ok = lectic.feasible_jnp(
+                    gc[:n_attrs], Y[None, :], gens, jnp.asarray(t.LOW)
+                )
+                ok = ok & valid & (gs[:n_attrs] >= min_sup)
+                score = jnp.where(ok, gens, -1)
+                Y_next = gc[jnp.argmax(score)]
+                return Y_next, ~jnp.any(ok)
+
             cache = {
                 # plan-replicated so expansion runs on every partition
                 # instead of one device + a broadcast at the region edge
                 "LOW": self.plan.replicate(t.LOW),
                 "BIT": self.plan.replicate(t.BIT),
                 # fused per-round SPMD steps: each is ONE plan round doing
-                # closure map → AND-allreduce → the driver's filter
-                "plain": engine.spmd_step(),
-                "unique": engine.spmd_step(unique_closures, n_extra=1),
-                "cbo": engine.spmd_step(post_cbo, n_extra=3),
-                "ganter": engine.spmd_step(post_ganter, n_extra=2),
+                # closure map → AND-allreduce [+ support psum] → the
+                # driver's filter.  Values are zero-arg builders; built
+                # steps land in "steps".
+                "steps": {},
+                "builders": {
+                    "plain": lambda: engine.spmd_step(),
+                    "unique": lambda: engine.spmd_step(
+                        unique_closures, n_extra=1
+                    ),
+                    "cbo": lambda: engine.spmd_step(post_cbo, n_extra=3),
+                    "ganter": lambda: engine.spmd_step(post_ganter, n_extra=2),
+                    "iceberg": lambda: engine.spmd_step(
+                        post_iceberg, with_supports=True, n_extra=2
+                    ),
+                    "iceberg_unique": lambda: engine.spmd_step(
+                        post_iceberg_unique, with_supports=True, n_extra=2
+                    ),
+                    "cbo_iceberg": lambda: engine.spmd_step(
+                        post_cbo_iceberg, with_supports=True, n_extra=4
+                    ),
+                    "ganter_iceberg": lambda: engine.spmd_step(
+                        post_ganter_iceberg, with_supports=True, n_extra=3
+                    ),
+                },
             }
             engine._frontier_cache = cache
+        self._cache = cache
         self.LOW = cache["LOW"]
         self.BIT = cache["BIT"]
-        self._close_plain = cache["plain"]
-        self._close_unique = cache["unique"]
-        self._close_cbo = cache["cbo"]
-        self._close_ganter = cache["ganter"]
+
+    def _step_fn(self, name: str):
+        """Fused SPMD step ``name``, built on first use and memoized on the
+        engine (shared by every DeviceFrontier of that engine)."""
+        steps = self._cache["steps"]
+        fn = steps.get(name)
+        if fn is None:
+            fn = steps[name] = self._cache["builders"][name]()
+        return fn
 
     # -- frontier state ----------------------------------------------------
 
@@ -288,7 +353,9 @@ class DeviceFrontier:
 
     # -- fused per-iteration steps ----------------------------------------
 
-    def step_oplus(self, *, dedupe: bool) -> np.ndarray:
+    def step_oplus(
+        self, *, dedupe: bool, min_support: int | None = None
+    ) -> np.ndarray:
         """One MRGanter+ iteration: expand → local prune → close → collect.
 
         Returns the round's closure intents (host array; de-duplicated on
@@ -296,7 +363,11 @@ class DeviceFrontier:
         registry novelty check and hands the novel rows back via
         :meth:`set_frontier`.  ``dedupe=True`` prunes duplicate seeds on
         the partition *before* the reduce is sized, so they never enter
-        the AND-allreduce.
+        the AND-allreduce.  With ``min_support``, infrequent closures are
+        compacted away right after the support psum, inside the same SPMD
+        region — they never cross the device→host boundary and (because
+        the caller re-expands only what it receives) never size a later
+        round's reduce.
         """
         eng = self.engine
         seeds, n_dev = expand_oplus(
@@ -312,24 +383,38 @@ class DeviceFrontier:
             b = min(eng.max_batch, n_seeds - lo)
             cap = bucket_size(b, minimum=eng.min_bucket)
             chunk = slice_pad(seeds, lo, cap)
-            if self.dedupe_closures:
-                cl_u, k_dev = self._close_unique(eng.rows, chunk, jnp.int32(b))
+            if min_support is not None:
+                name = "iceberg_unique" if self.dedupe_closures else "iceberg"
+                cl, k_dev = self._step_fn(name)(
+                    eng.rows, chunk, jnp.int32(b), jnp.int32(min_support)
+                )
+                eng.charge_round(cap, b, count_round=first)
+                uniq_parts.append(self._download(cl, int(k_dev)))
+            elif self.dedupe_closures:
+                cl_u, k_dev = self._step_fn("unique")(
+                    eng.rows, chunk, jnp.int32(b)
+                )
                 eng.charge_round(cap, b, count_round=first)
                 uniq_parts.append(self._download(cl_u, int(k_dev)))
             else:
-                closures = self._close_plain(eng.rows, chunk)
+                closures = self._step_fn("plain")(eng.rows, chunk)
                 eng.charge_round(cap, b, count_round=first)
                 uniq_parts.append(self._download(closures, b))
             first = False
         return np.concatenate(uniq_parts, axis=0)
 
-    def step_cbo(self) -> tuple[np.ndarray, int, int]:
+    def step_cbo(
+        self, *, min_support: int | None = None
+    ) -> tuple[np.ndarray, int, int]:
         """One MRCbo iteration: expand → close+canonicity (fused) → adopt.
 
         The canonicity filter runs inside the same SPMD region as the
         closure map and reduce; canonical survivors stay on device as the
         next frontier and the same rows are downloaded once for the result
-        set.  Returns ``(new_intents, n_seeds, n_new)`` — ``n_seeds`` is 0
+        set.  With ``min_support`` the support filter fuses into the same
+        region (CbO intents only grow along the tree, so every frequent
+        concept's canonical ancestors are frequent — pruning is lossless).
+        Returns ``(new_intents, n_seeds, n_new)`` — ``n_seeds`` is 0
         when the frontier was already exhausted (no closure round ran).
         """
         eng = self.engine
@@ -345,13 +430,19 @@ class DeviceFrontier:
         for lo in range(0, n_seeds, eng.max_batch):
             b = min(eng.max_batch, n_seeds - lo)
             cap = bucket_size(b, minimum=eng.min_bucket)
-            z, g, k_dev = self._close_cbo(
+            args = (
                 eng.rows,
                 slice_pad(seeds, lo, cap),
                 slice_pad(parents, lo, cap),
                 slice_pad(gen, lo, cap),
                 jnp.int32(b),
             )
+            if min_support is not None:
+                z, g, k_dev = self._step_fn("cbo_iceberg")(
+                    *args, jnp.int32(min_support)
+                )
+            else:
+                z, g, k_dev = self._step_fn("cbo")(*args)
             eng.charge_round(cap, b, count_round=first)
             first = False
             k = int(k_dev)
@@ -368,11 +459,20 @@ class DeviceFrontier:
         self._adopt(z_all, g_all, n_new)
         return self._download(self._frontier, n_new), n_seeds, n_new
 
-    def step_ganter(self) -> tuple[np.ndarray, bool]:
+    def step_ganter(
+        self, *, min_support: int | None = None
+    ) -> tuple[np.ndarray, bool]:
         """One MRGanter iteration: ⊕-seeds for the single current intent,
         then one fused SPMD region: closure map → AND-allreduce → Alg.-5
         feasibility scan → argmax-select.  Returns ``(next intent (host),
-        reached ⊤)``."""
+        reached ⊤)``.
+
+        With ``min_support`` the scan restricts to frequent successors
+        (support psum ≥ threshold, fused in-region) and the flag flips to
+        "no frequent successor exists" — when True, the returned intent is
+        garbage the caller must NOT emit (the full-lattice contract emits
+        ⊤ and reports done in the same step; the iceberg walk only learns
+        it is done from an empty scan)."""
         eng = self.engine
         Y = self._frontier[0]
         seeds, valid = lectic.oplus_seeds_jnp(
@@ -380,9 +480,15 @@ class DeviceFrontier:
         )
         seeds = seeds.reshape(self.n_attrs, self.W)
         cap = bucket_size(self.n_attrs, minimum=eng.min_bucket)
-        Y_next, done = self._close_ganter(
-            eng.rows, slice_pad(seeds, 0, cap), Y, valid[0]
-        )
+        if min_support is not None:
+            Y_next, done = self._step_fn("ganter_iceberg")(
+                eng.rows, slice_pad(seeds, 0, cap), Y, valid[0],
+                jnp.int32(min_support),
+            )
+        else:
+            Y_next, done = self._step_fn("ganter")(
+                eng.rows, slice_pad(seeds, 0, cap), Y, valid[0]
+            )
         eng.charge_round(cap, int(valid[0].sum()))
         cap_f = self._frontier.shape[0]
         self._frontier = jnp.broadcast_to(Y_next, (cap_f, self.W))

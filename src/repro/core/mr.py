@@ -53,6 +53,8 @@ class MRResult:
     modeled_comm_bytes: int
     wall_time_s: float
     algorithm: str
+    # iceberg runs record their (absolute) threshold; None == full lattice
+    min_support: int | None = None
 
     @property
     def n_concepts(self) -> int:
@@ -69,7 +71,9 @@ def _check_pipeline(pipeline: str):
         raise ValueError(f"unknown pipeline {pipeline!r}; choose {PIPELINES}")
 
 
-def _result(engine: ClosureEngine, intents, n_iter, t0, algorithm) -> MRResult:
+def _result(
+    engine: ClosureEngine, intents, n_iter, t0, algorithm, min_support=None
+) -> MRResult:
     return MRResult(
         intents=intents,
         n_iterations=n_iter,
@@ -77,7 +81,21 @@ def _result(engine: ClosureEngine, intents, n_iter, t0, algorithm) -> MRResult:
         modeled_comm_bytes=engine.stats.modeled_comm_bytes,
         wall_time_s=time.perf_counter() - t0,
         algorithm=algorithm,
+        min_support=min_support,
     )
+
+
+def _check_min_support(min_support: int | None) -> int | None:
+    """Validate and normalize the iceberg threshold (absolute count)."""
+    if min_support is None:
+        return None
+    s = int(min_support)
+    if s != min_support or s < 1:
+        raise ValueError(
+            f"min_support must be a positive object count, got {min_support!r}"
+            " (use repro.rules.resolve_min_support for fractional thresholds)"
+        )
+    return s
 
 
 # ---------------------------------------------------------------------------
@@ -91,25 +109,46 @@ def mrganter(
     max_iterations: int | None = None,
     *,
     pipeline: str = "device",
+    min_support: int | None = None,
 ) -> MRResult:
+    """``min_support`` mines the iceberg lattice in strict lectic order:
+    the Alg.-5 scan restricts to frequent successors (support psum ≥
+    threshold, fused into the SPMD round).  The next *frequent* closure
+    after Y is Y ⊕ a for the largest feasible frequent a — any frequent
+    closure lectically between would be a subset of Y ⊕ a for the smallest
+    differing attribute, hence itself of the form Y ⊕ i — so the jump
+    skips infrequent closures without ever visiting them."""
     _check_pipeline(pipeline)
+    min_support = _check_min_support(min_support)
     t0 = time.perf_counter()
     full = ctx.attr_mask()
-    Y, _ = engine.first_closure()
+    Y, s0 = engine.first_closure()
+    if min_support is not None and s0 < min_support:
+        return _result(engine, [], 1, t0, "mrganter", min_support)
     intents = [Y]
     n_iter = 1
 
     if pipeline == "device":
         fr = DeviceFrontier(engine)
         fr.set_frontier(Y[None, :])
-        done = np.array_equal(Y, full)
-        while not done:
+        if min_support is None:
+            done = np.array_equal(Y, full)
+            while not done:
+                if max_iterations is not None and n_iter >= max_iterations:
+                    break
+                Y, done = fr.step_ganter()
+                intents.append(Y)
+                n_iter += 1
+            return _result(engine, intents, n_iter, t0, "mrganter")
+        while not np.array_equal(Y, full):
             if max_iterations is not None and n_iter >= max_iterations:
                 break
-            Y, done = fr.step_ganter()
+            Y, exhausted = fr.step_ganter(min_support=min_support)
+            n_iter += 1  # the exhausting scan is a map/reduce round too
+            if exhausted:
+                break
             intents.append(Y)
-            n_iter += 1
-        return _result(engine, intents, n_iter, t0, "mrganter")
+        return _result(engine, intents, n_iter, t0, "mrganter", min_support)
 
     tables = lectic.LecticTables(ctx.n_attrs)
     while not np.array_equal(Y, full):
@@ -117,15 +156,20 @@ def mrganter(
             break
         # Map: local closures for every attribute p_i ∉ d (Alg. 4).
         seeds, valid = lectic.oplus_seeds_all(Y, tables)
-        closures, _ = engine.closure(seeds)  # Reduce: Theorem-2 intersection
+        closures, sups = engine.closure(seeds)  # Reduce: Theorem-2 intersection
         # Feasibility ≤_{p_i} (Alg. 5): first success scanning p_m → p_1.
         ok = lectic.feasible_batch(closures, Y, tables) & valid
+        if min_support is not None:
+            ok &= sups >= min_support
         idx = np.nonzero(ok)[0]
+        if min_support is not None and idx.size == 0:
+            n_iter += 1  # the exhausting scan
+            break
         assert idx.size, "NextClosure invariant: a feasible successor exists"
         Y = closures[int(idx.max())]
         intents.append(Y)
         n_iter += 1
-    return _result(engine, intents, n_iter, t0, "mrganter")
+    return _result(engine, intents, n_iter, t0, "mrganter", min_support)
 
 
 # ---------------------------------------------------------------------------
@@ -143,6 +187,7 @@ def mrganter_plus(
     local_prune: bool | None = None,
     max_iterations: int | None = None,
     pipeline: str = "device",
+    min_support: int | None = None,
 ) -> MRResult:
     """``dedupe_candidates=False`` is the paper-literal map phase (every
     frontier intent emits a candidate for every absent attribute).  ``True``
@@ -154,13 +199,26 @@ def mrganter_plus(
     loop it is ``np.unique``.  Same output either way.  ``local_prune`` is
     the paper-facing alias for the same switch (it wins when both are
     given).
+
+    ``min_support`` mines the iceberg lattice: closures below the
+    threshold are compacted away right after the support psum (device
+    pipeline: inside the same SPMD region) and never join the frontier —
+    every subsequent round's expansion and reduce is sized by the
+    surviving frequent set.  Lossless: each frequent closed Z ≠ ∅'' equals
+    closure(D ⊕ a) for D = closure of Z's attributes below some a ∈ Z —
+    a frequent (D ⊆ Z) closed proper subset — so the frequent subset of
+    the BFS reaches every frequent concept (tests/test_rules.py asserts
+    equality with post-hoc filtering, property-tested).
     """
     _check_pipeline(pipeline)
     if local_prune is not None:
         dedupe_candidates = local_prune
+    min_support = _check_min_support(min_support)
     t0 = time.perf_counter()
     H = TwoLevelHash()
-    Y0, _ = engine.first_closure()
+    Y0, s0 = engine.first_closure()
+    if min_support is not None and s0 < min_support:
+        return _result(engine, [], 1, t0, "mrganter+", min_support)
     H.add(Y0)
     intents = [Y0]
     n_iter = 1
@@ -171,8 +229,15 @@ def mrganter_plus(
         while len(fr):
             if max_iterations is not None and n_iter >= max_iterations:
                 break
-            uniq = fr.step_oplus(dedupe=dedupe_candidates)
+            rounds_before = engine.stats.rounds
+            uniq = fr.step_oplus(
+                dedupe=dedupe_candidates, min_support=min_support
+            )
             if uniq.shape[0] == 0:
+                # an iceberg round can run and prune every closure — that
+                # exhausting map/reduce round still counts (host parity)
+                if engine.stats.rounds > rounds_before:
+                    n_iter += 1
                 break
             n_iter += 1
             new_idx = H.add_batch(uniq)  # global registry (vectorized)
@@ -182,7 +247,7 @@ def mrganter_plus(
                 fr.set_frontier(new)  # the Twister dynamic delta, one upload
             else:
                 fr.set_frontier(np.zeros((0, ctx.W), np.uint32))
-        return _result(engine, intents, n_iter, t0, "mrganter+")
+        return _result(engine, intents, n_iter, t0, "mrganter+", min_support)
 
     tables = lectic.LecticTables(ctx.n_attrs)
     frontier = [Y0]
@@ -200,11 +265,13 @@ def mrganter_plus(
         if dedupe_candidates:
             seeds = np.unique(seeds, axis=0)
         n_iter += 1
-        closures, _ = engine.closure(seeds)
+        closures, sups = engine.closure(seeds)
+        if min_support is not None:
+            closures = closures[sups >= min_support]
         new_idx = H.add_batch(closures)
         frontier = [closures[i] for i in new_idx]
         intents.extend(frontier)
-    return _result(engine, intents, n_iter, t0, "mrganter+")
+    return _result(engine, intents, n_iter, t0, "mrganter+", min_support)
 
 
 # ---------------------------------------------------------------------------
@@ -218,10 +285,18 @@ def mrcbo(
     max_iterations: int | None = None,
     *,
     pipeline: str = "device",
+    min_support: int | None = None,
 ) -> MRResult:
+    """``min_support`` prunes the CbO tree at infrequent nodes (support
+    filter fused after the psum): intents only grow along the canonical
+    generation path, so every frequent concept's ancestors are frequent
+    and pruning is lossless."""
     _check_pipeline(pipeline)
+    min_support = _check_min_support(min_support)
     t0 = time.perf_counter()
-    root, _ = engine.first_closure()
+    root, s0 = engine.first_closure()
+    if min_support is not None and s0 < min_support:
+        return _result(engine, [], 1, t0, "mrcbo", min_support)
     intents = [root]
     n_iter = 1
 
@@ -231,12 +306,13 @@ def mrcbo(
         while len(fr):
             if max_iterations is not None and n_iter >= max_iterations:
                 break
-            new, n_seeds, _ = fr.step_cbo()  # canonicity filter IS the dedupe
+            # canonicity filter IS the dedupe; iceberg adds the support cut
+            new, n_seeds, _ = fr.step_cbo(min_support=min_support)
             if n_seeds == 0:  # frontier exhausted before any closure round
                 break
             n_iter += 1
             intents.extend(new)
-        return _result(engine, intents, n_iter, t0, "mrcbo")
+        return _result(engine, intents, n_iter, t0, "mrcbo", min_support)
 
     tables = lectic.LecticTables(ctx.n_attrs)
     frontier: list[tuple[np.ndarray, int]] = [(root, -1)]
@@ -254,12 +330,14 @@ def mrcbo(
         if not seeds:
             break
         n_iter += 1
-        closures, _ = engine.closure(np.stack(seeds))
+        closures, sups = engine.closure(np.stack(seeds))
         next_frontier = []
         for i in range(closures.shape[0]):
             a, Y, Z = gens[i], parents[i], closures[i]
+            if min_support is not None and sups[i] < min_support:
+                continue
             if np.all(((Z ^ Y) & tables.LOW[a]) == 0):  # CbO canonicity
                 intents.append(Z)
                 next_frontier.append((Z, a))
         frontier = next_frontier
-    return _result(engine, intents, n_iter, t0, "mrcbo")
+    return _result(engine, intents, n_iter, t0, "mrcbo", min_support)

@@ -35,10 +35,12 @@ idempotent over uint32 words, so every schedule agrees bit-for-bit too.
 from __future__ import annotations
 
 import dataclasses
+import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax import lax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro import compat
@@ -66,7 +68,10 @@ class ShardPlan:
     max_batch: int = 8192
     # latency term of the "auto" schedule model: bandwidth-equivalent byte
     # cost of one ring step per device (collectives.modeled_cost_bytes).
+    # The 4096 B default is replaced by a measured value when the plan is
+    # built with ``calibrate_hops=True`` (see :func:`probe_hop_bytes`).
     auto_hop_bytes: int = 4096
+    hop_calibrated: bool = False
 
     def __post_init__(self):
         if (
@@ -90,9 +95,10 @@ class ShardPlan:
         reduce_impl: str = "rsag",
         block_n: int = 256,
         max_batch: int = 8192,
+        calibrate_hops: bool = False,
     ) -> "ShardPlan":
         """``n_parts`` object shards on one device (reshape + named vmap)."""
-        return cls(
+        plan = cls(
             mesh=None,
             axis_names=(SIM_AXIS,),
             n_parts=n_parts,
@@ -100,6 +106,7 @@ class ShardPlan:
             block_n=block_n,
             max_batch=max_batch,
         )
+        return plan.calibrate_hops() if calibrate_hops else plan
 
     @classmethod
     def over_mesh(
@@ -110,6 +117,7 @@ class ShardPlan:
         reduce_impl: str = "rsag",
         block_n: int = 256,
         max_batch: int = 8192,
+        calibrate_hops: bool = False,
     ) -> "ShardPlan":
         """Real SPMD over ``mesh``; object rows sharded over ``axis_names``
         (default: whichever of the pod×data axes the mesh carries)."""
@@ -122,7 +130,7 @@ class ShardPlan:
         k = 1
         for a in axis_names:
             k *= mesh.shape[a]
-        return cls(
+        plan = cls(
             mesh=mesh,
             axis_names=tuple(axis_names),
             n_parts=k,
@@ -130,6 +138,7 @@ class ShardPlan:
             block_n=block_n,
             max_batch=max_batch,
         )
+        return plan.calibrate_hops() if calibrate_hops else plan
 
     @classmethod
     def auto(
@@ -142,6 +151,22 @@ class ShardPlan:
             mesh = Mesh(np.asarray(devices), ("data",))
             return cls.over_mesh(mesh, reduce_impl=reduce_impl, **kw)
         return cls.simulated(n_parts, reduce_impl=reduce_impl, **kw)
+
+    def calibrate_hops(self) -> "ShardPlan":
+        """This plan with ``auto_hop_bytes`` measured, not defaulted.
+
+        Runs :func:`probe_hop_bytes` (one-shot per interconnect, cached at
+        module level) and records the result — the "auto" schedule's
+        latency term then reflects the actual allgather step cost of the
+        devices under the plan instead of the 4096 B guess.
+        ``hop_calibrated`` stays False when the probe hit its noise floor
+        (no measurable per-byte slope) and fell back to the default —
+        the stats never claim a measurement that didn't happen.
+        """
+        hop, measured = probe_hop_bytes(self)
+        return dataclasses.replace(
+            self, auto_hop_bytes=hop, hop_calibrated=measured
+        )
 
     # -- geometry ----------------------------------------------------------
 
@@ -160,6 +185,22 @@ class ShardPlan:
     def row_alignment(self) -> int:
         """Context rows must pad to a multiple of this (shards block-align)."""
         return self.n_parts * self.block_n
+
+    def shard_index(self):
+        """This shard's position along the object partition, traced.
+
+        Only meaningful inside an ``spmd`` body.  Multi-axis meshes fold
+        major-to-minor in ``axis_names`` order — the same order
+        ``place_rows``'s ``PartitionSpec`` splits the row axis, so
+        ``shard_index() * rows_local.shape[0]`` is the global offset of the
+        shard's first row.
+        """
+        if self.mesh is None:
+            return lax.axis_index(SIM_AXIS)
+        idx = lax.axis_index(self.axis_names[0])
+        for a in self.axis_names[1:]:
+            idx = idx * self.mesh.shape[a] + lax.axis_index(a)
+        return idx
 
     # -- placement ---------------------------------------------------------
 
@@ -190,14 +231,32 @@ class ShardPlan:
 
     # -- execution ---------------------------------------------------------
 
-    def spmd(self, body, *, n_rep: int, post=None, n_post_rep: int = 0):
+    def spmd(
+        self,
+        body,
+        *,
+        n_rep: int,
+        post=None,
+        n_post_rep: int = 0,
+        out_shard: tuple[bool, ...] | None = None,
+    ):
         """Wrap ``body(rows_local, *replicated)`` for per-shard execution.
 
         The first argument is the object-sharded context; the following
         ``n_rep`` arguments are replicated.  ``body`` may call collectives
         over ``self.reduce_axes``; outputs must be shard-invariant (i.e.
         globally reduced or computed from replicated operands) and come
-        back replicated.
+        back replicated — unless ``out_shard`` marks them otherwise.
+
+        ``out_shard`` gives one region *mixed* output placement: a tuple of
+        booleans, one per ``body`` output, where True means the output stays
+        object-sharded (its leading axis is this shard's row slice — the
+        same layout ``place_rows`` produces) and False means replicated /
+        shard-invariant.  This is how the concept store builds the extent
+        table on device: one region emits the sharded packed extent columns
+        *and* the psum-reduced supports without a host round-trip.
+        Incompatible with ``post`` (which by definition consumes
+        shard-invariant inputs).
 
         ``post(*body_outputs, *post_replicated)`` is an optional fused
         stage consuming the shard-invariant reduced outputs (canonicity,
@@ -210,6 +269,8 @@ class ShardPlan:
         ``(rows, *replicated, *post_replicated)``; callers normally wrap
         it in ``jax.jit``.
         """
+        if out_shard is not None and post is not None:
+            raise ValueError("out_shard= and post= are mutually exclusive")
         if self.mesh is not None:
 
             def fused(rows_local, *rep):
@@ -220,11 +281,17 @@ class ShardPlan:
                 return post(*out, *rep[n_rep:])
 
             in_specs = (P(self.axis_names, None),) + (P(),) * (n_rep + n_post_rep)
+            if out_shard is None:
+                out_specs = P()
+            else:
+                out_specs = tuple(
+                    P(self.axis_names) if s else P() for s in out_shard
+                )
             return compat.shard_map(
                 fused,
                 mesh=self.mesh,
                 in_specs=in_specs,
-                out_specs=P(),
+                out_specs=out_specs,
                 check_vma=False,  # pallas_call outputs carry no vma info
             )
 
@@ -237,6 +304,14 @@ class ShardPlan:
 
         def run(rows, *rep):
             outs = vbody(rows, *rep[:n_rep])
+            if out_shard is not None:
+                # Sharded outputs keep the [k, rows/k, ...] lane-major
+                # layout (the simulated twin of place_rows); replicated
+                # ones collapse to lane 0 as usual.
+                return tuple(
+                    o if s else jax.tree_util.tree_map(lambda x: x[0], o)
+                    for o, s in zip(outs, out_shard)
+                )
             # Outputs are identical on every simulated shard (same invariant
             # the mesh path's ``out_specs=P()`` asserts); keep shard 0.
             outs = jax.tree_util.tree_map(lambda o: o[0], outs)
@@ -290,4 +365,84 @@ class ShardPlan:
             "reduce_impl": self.reduce_impl,
             "block_n": self.block_n,
             "max_batch": self.max_batch,
+            "auto_hop_bytes": self.auto_hop_bytes,
+            "hop_calibrated": self.hop_calibrated,
         }
+
+
+# ---------------------------------------------------------------------------
+# interconnect probe (auto_hop_bytes calibration)
+# ---------------------------------------------------------------------------
+
+# One-shot per interconnect: plans over the same devices with the same shard
+# count share a measurement (the probe is geometry-, not schedule-, shaped).
+# Values are (hop_bytes, measured) — measured=False marks a noise-floor
+# fallback to the default.
+_HOP_PROBE_CACHE: dict[tuple, tuple[int, bool]] = {}
+
+_PROBE_W = 4  # packed words per probe row — scale-free, cancels in the ratio
+
+
+def probe_hop_bytes(plan: ShardPlan) -> tuple[int, bool]:
+    """Measure the plan's per-ring-step latency as equivalent wire bytes.
+
+    Times the plan's own allgather AND-reduce (the exact collective the
+    "auto" schedule arbitrates) at a tiny and a large batch:
+    ``t(B) ≈ α + β·B`` separates the per-round fixed cost α (ring-step
+    latency, dispatch) from the per-row cost β.  The model charges
+    ``k·steps·hop_bytes`` latency bytes against ``k·(k-1)·B·W·4`` volume
+    bytes for allgather, so the bandwidth-equivalent hop cost is
+    ``hop_bytes = (α/β) · W · 4`` — independent of the probe's row width.
+    Best-of-3 timings; returns ``(hop_bytes, measured)`` and caches it per
+    device set × shard count.  ``measured=False`` means the probe saw no
+    per-byte slope (noise floor) and fell back to the 4096 B default.
+    """
+    key = (
+        plan.n_parts,
+        None
+        if plan.mesh is None
+        else tuple(str(d) for d in plan.mesh.devices.flat),
+    )
+    cached = _HOP_PROBE_CACHE.get(key)
+    if cached is not None:
+        return cached
+
+    axes = plan.reduce_axes
+
+    def body(rows_local, cands):
+        lc = rows_local[:1] & cands  # touch the sharded operand
+        return collectives.and_allreduce(
+            lc, axes, impl="allgather", n_attrs=_PROBE_W * 32
+        )
+
+    fn = jax.jit(plan.spmd(body, n_rep=1))
+    rows = plan.place_rows(np.ones((plan.n_parts, _PROBE_W), np.uint32))
+
+    def timed(batch: int) -> float:
+        cands = jnp.ones((batch, _PROBE_W), jnp.uint32)
+        fn(rows, cands).block_until_ready()  # warm (compile excluded)
+        best = float("inf")
+        for _ in range(3):
+            t0 = time.perf_counter()
+            fn(rows, cands).block_until_ready()
+            best = min(best, time.perf_counter() - t0)
+        return best
+
+    b_small, b_large = 8, 4096
+    t_small, t_large = timed(b_small), timed(b_large)
+    slope = t_large - t_small
+    if slope <= 0:
+        # Noise floor: the large batch measured no slower than the tiny
+        # one, so the per-byte term is unobservable here — keep the
+        # documented default rather than caching a nonsense ratio, and
+        # report the measurement as failed.
+        result = (4096, False)
+    else:
+        beta = slope / (b_large - b_small)
+        alpha = max(t_small - beta * b_small, 0.0)
+        # bound at 16 MiB: beyond that the "latency term" would just
+        # mean the probe was swamped by noise
+        hop = min(1 << 24, max(1, int(round(alpha / beta * _PROBE_W * 4))))
+        result = (hop, True)
+    _HOP_PROBE_CACHE[key] = result
+    return result

@@ -9,13 +9,22 @@
     python -m repro.launch.fca serve --dataset mushroom --scale 0.02 \
         --parts 4 --reduce auto --queries 256 --topk 32 --updates 8
 
+    # iceberg-mine → extract implication/association-rule bases → answer
+    # a rule-query batch (repro.rules)
+    python -m repro.launch.fca rules --dataset census-income --scale 0.002 \
+        --parts 8 --min-support 0.05 --min-conf 0.5 --rule-queries 128
+
 With a real multi-device runtime pass ``--mesh`` to shard the context over
 the device mesh (objects over the pod×data axes the ShardPlan picks up);
 otherwise partitions are simulated on one device with bit-identical
 arithmetic.  Either way the run executes through one
 :class:`repro.dist.ShardPlan` — the CLI only chooses its geometry.
 ``--reduce auto`` lets the plan pick allgather-vs-rsag per round from the
-measured batch size (the per-round record lands in the printed stats).
+measured batch size (the per-round record lands in the printed stats);
+``--calibrate-hops`` replaces the model's 4096 B latency default with a
+measured interconnect probe.  ``--min-support`` takes an absolute object
+count (≥ 1) or a fraction of |O| (in (0, 1)); the resolved count is echoed
+in the JSON stats.
 """
 
 from __future__ import annotations
@@ -37,20 +46,33 @@ from repro.dist.shardplan import ShardPlan
 
 def build_plan(args) -> ShardPlan:
     """The run's ShardPlan from CLI geometry flags."""
+    calibrate = getattr(args, "calibrate_hops", False)
     if args.mesh:
         from repro.launch.mesh import make_local_mesh
 
         mesh = make_local_mesh(model=1, pod=args.pod)
-        return ShardPlan.over_mesh(mesh, reduce_impl=args.reduce)
-    return ShardPlan.simulated(args.parts, reduce_impl=args.reduce)
+        return ShardPlan.over_mesh(
+            mesh, reduce_impl=args.reduce, calibrate_hops=calibrate
+        )
+    return ShardPlan.simulated(
+        args.parts, reduce_impl=args.reduce, calibrate_hops=calibrate
+    )
 
 
-def _mine(args, ctx, plan, backend):
+def _resolved_min_support(args, ctx) -> int | None:
+    if args.min_support is None:
+        return None
+    from repro.rules import resolve_min_support
+
+    return resolve_min_support(args.min_support, ctx.n_objects)
+
+
+def _mine(args, ctx, plan, backend, min_support=None):
     eng = ClosureEngine(ctx, plan=plan, backend=backend)
     algo = {"mrganter": mrganter, "mrganter+": mrganter_plus, "mrcbo": mrcbo}[
         args.algorithm
     ]
-    kw = {"pipeline": args.pipeline}
+    kw = {"pipeline": args.pipeline, "min_support": min_support}
     if args.algorithm == "mrganter+":
         kw["local_prune"] = args.local_prune
     res = algo(ctx, eng, max_iterations=args.max_iterations, **kw)
@@ -58,7 +80,7 @@ def _mine(args, ctx, plan, backend):
 
 
 def cmd_mine(args, ctx, spec, plan, backend):
-    eng, res = _mine(args, ctx, plan, backend)
+    eng, res = _mine(args, ctx, plan, backend, _resolved_min_support(args, ctx))
     return {
         "dataset": spec.name,
         "objects": spec.n_objects,
@@ -69,6 +91,7 @@ def cmd_mine(args, ctx, spec, plan, backend):
         "backend": backend,
         "pipeline": args.pipeline,
         "algorithm": res.algorithm,
+        "min_support_resolved": res.min_support,
         "concepts": res.n_concepts,
         "iterations": res.n_iterations,
         "closures_computed": res.n_closures_computed,
@@ -83,7 +106,7 @@ def cmd_serve(args, ctx, spec, plan, backend):
     from repro.query import ConceptStore, QueryEngine, StreamUpdater
     from repro.query.engine import QueryConfig
 
-    eng, res = _mine(args, ctx, plan, backend)
+    eng, res = _mine(args, ctx, plan, backend, _resolved_min_support(args, ctx))
 
     t0 = time.perf_counter()
     store = ConceptStore.build(ctx, res.intents, plan=plan)
@@ -108,17 +131,29 @@ def cmd_serve(args, ctx, spec, plan, backend):
     trav = qe.children(hit_ids[:8]) if hit_ids.size else []
     query_s = time.perf_counter() - t0
 
-    # streaming update: synthetic rows matched to the context density
-    upd = StreamUpdater(store)
-    new_rows = bitset.pack_bool(
-        rng.random((args.updates, ctx.n_attrs)) < max(0.05, spec.density),
-        ctx.W,
-    )
-    t0 = time.perf_counter()
-    receipt = upd.stage(new_rows)
-    upd.commit()
-    update_s = time.perf_counter() - t0
-    post_ids = qe.lookup_batch(closures)  # same intents, new snapshot
+    # streaming update: synthetic rows matched to the context density.
+    # Skipped for iceberg serves: the Godin grow formula maintains the
+    # FULL intent family, so streaming onto an iceberg store would drift
+    # to neither the full nor the iceberg lattice of the grown context
+    # (re-mine, or serve rules, after updates instead).
+    receipt, update_s, post_ids = None, None, ids
+    if res.min_support is None:
+        upd = StreamUpdater(store)
+        new_rows = bitset.pack_bool(
+            rng.random((args.updates, ctx.n_attrs)) < max(0.05, spec.density),
+            ctx.W,
+        )
+        t0 = time.perf_counter()
+        receipt = upd.stage(new_rows)
+        upd.commit()
+        update_s = time.perf_counter() - t0
+        post_ids = qe.lookup_batch(closures)  # same intents, new snapshot
+    elif args.updates:
+        print(
+            "serve --min-support: skipping the streaming-update phase "
+            "(Godin insertion maintains the full family, not an iceberg)",
+            file=sys.stderr,
+        )
 
     n_q = args.queries + min(args.queries, args.topk)
     return {
@@ -126,6 +161,7 @@ def cmd_serve(args, ctx, spec, plan, backend):
         "plan": plan.describe(),
         "backend": backend,
         "algorithm": res.algorithm,
+        "min_support_resolved": res.min_support,
         "concepts": res.n_concepts,
         "mine_wall_s": round(res.wall_time_s, 3),
         "store": store.describe(),
@@ -141,12 +177,77 @@ def cmd_serve(args, ctx, spec, plan, backend):
         "top_support_max": (
             int(top_supports.max()) if top_supports.size else None
         ),
-        "update": dataclass_dict(receipt),
-        "update_commit_s": round(update_s, 4),
+        "update": None if receipt is None else dataclass_dict(receipt),
+        "update_commit_s": None if update_s is None else round(update_s, 4),
         "post_update_version": store.snapshot.version,
         "post_update_hit_rate": (
             round(float((post_ids >= 0).mean()), 4) if post_ids.size else None
         ),
+        "query_stats": qe.describe()["stats"],
+    }
+
+
+def cmd_rules(args, ctx, spec, plan, backend):
+    """iceberg-mine → store → extract DG + Luxenburger bases → serve a
+    rule-query batch through the QueryEngine's fixed-slot rule ops."""
+    from repro.query import ConceptStore, QueryEngine
+    from repro.query.engine import QueryConfig
+    from repro.rules import RuleIndex, extract_bases
+    from repro.rules.index import rule_query_mix
+
+    min_support = _resolved_min_support(args, ctx)
+    if min_support is None:  # rules without a threshold = iceberg at 1
+        min_support = 1
+    eng, res = _mine(args, ctx, plan, backend, min_support)
+
+    t0 = time.perf_counter()
+    store = ConceptStore.build(ctx, res.intents, plan=plan)
+    build_s = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    basis = extract_bases(store, min_conf=args.min_conf)
+    index = RuleIndex.build(basis, plan=plan)
+    basis_s = time.perf_counter() - t0
+
+    qe = QueryEngine(store, QueryConfig(slots=args.slots, backend=backend))
+    rng = np.random.default_rng(args.seed)
+    n_q = args.rule_queries
+    queries = rule_query_mix(ctx, index, n_q, rng)
+
+    t0 = time.perf_counter()
+    ids, scores, consequents = qe.rules_batch(
+        index, queries, k=args.topk_rules, min_conf=args.min_conf,
+        rank_by=args.rank_by,
+    )
+    query_s = time.perf_counter() - t0
+    hits = ids[:, 0] >= 0
+
+    return {
+        "dataset": spec.name,
+        "plan": plan.describe(),
+        "backend": backend,
+        "algorithm": res.algorithm,
+        "min_support_resolved": min_support,
+        "min_conf": args.min_conf,
+        "iceberg_concepts": res.n_concepts,
+        "mine_iterations": res.n_iterations,
+        "mine_wall_s": round(res.wall_time_s, 3),
+        "store_build_s": round(build_s, 3),
+        "basis": basis.describe(),
+        "rule_index": index.describe(),
+        "basis_extract_s": round(basis_s, 3),
+        "rule_queries": int(n_q),
+        "rank_by": args.rank_by,
+        "rule_query_wall_s": round(query_s, 4),
+        "rule_queries_per_s": round(n_q / max(query_s, 1e-9), 1),
+        "rule_hit_rate": round(float(hits.mean()), 4) if n_q else None,
+        "top_score_max": float(scores.max()) if scores.size else None,
+        "consequent_bits_mean": (
+            round(float(bitset.popcount(consequents).mean()), 2)
+            if n_q
+            else None
+        ),
+        "reduce_rounds": eng.stats.reduce_rounds,
         "query_stats": qe.describe()["stats"],
     }
 
@@ -160,10 +261,12 @@ def dataclass_dict(obj):
 def main(argv=None):
     p = argparse.ArgumentParser()
     p.add_argument("command", nargs="?", default="mine",
-                   choices=["mine", "serve"],
+                   choices=["mine", "serve", "rules"],
                    help="mine (default): run an MR* miner; serve: mine, "
                         "build the repro.query concept store, then run a "
-                        "mixed query/update batch")
+                        "mixed query/update batch; rules: iceberg-mine, "
+                        "extract the DG/Luxenburger bases, answer a "
+                        "rule-query batch")
     p.add_argument("--dataset", default="mushroom",
                    choices=list(fca_datasets.PAPER_DATASETS))
     p.add_argument("--scale", type=float, default=0.05)
@@ -191,6 +294,14 @@ def main(argv=None):
     p.add_argument("--max-iterations", type=int, default=None)
     p.add_argument("--data-dir", default=None,
                    help="directory with real UCI .data files (else synthetic)")
+    p.add_argument("--min-support", type=float, default=None,
+                   help="iceberg threshold: absolute object count (≥1) or "
+                        "fraction of |O| (in (0,1)); fused in-round for "
+                        "every driver, resolved count echoed in the stats")
+    p.add_argument("--calibrate-hops", action="store_true",
+                   help="measure the interconnect's per-ring-step latency "
+                        "(tiny allgather probe, cached) instead of the "
+                        "4096 B auto_hop_bytes default")
     # serve-only knobs
     p.add_argument("--queries", type=int, default=256,
                    help="serve: closure queries in the mixed batch")
@@ -199,8 +310,18 @@ def main(argv=None):
     p.add_argument("--updates", type=int, default=8,
                    help="serve: streamed new objects in the update batch")
     p.add_argument("--slots", type=int, default=64,
-                   help="serve: fixed micro-batch slot width")
+                   help="serve/rules: fixed micro-batch slot width")
     p.add_argument("--seed", type=int, default=0)
+    # rules-only knobs
+    p.add_argument("--min-conf", type=float, default=0.5,
+                   help="rules: Luxenburger basis + query confidence floor")
+    p.add_argument("--rule-queries", type=int, default=128,
+                   help="rules: rule-query batch size")
+    p.add_argument("--topk-rules", type=int, default=5,
+                   help="rules: top-k rules returned per query")
+    p.add_argument("--rank-by", default="confidence",
+                   choices=["confidence", "lift"],
+                   help="rules: top-k rank metric")
     args = p.parse_args(argv)
 
     backend = args.backend
@@ -213,9 +334,9 @@ def main(argv=None):
     ctx, spec = fca_datasets.load(args.dataset, scale=args.scale,
                                   data_dir=args.data_dir)
     plan = build_plan(args)
-    out = {"mine": cmd_mine, "serve": cmd_serve}[args.command](
-        args, ctx, spec, plan, backend
-    )
+    out = {"mine": cmd_mine, "serve": cmd_serve, "rules": cmd_rules}[
+        args.command
+    ](args, ctx, spec, plan, backend)
     print(json.dumps(out, indent=2))
 
 

@@ -214,7 +214,8 @@ class ConceptStore:
             N_padded=rows.shape[0],
             snapshot=None,
         )
-        self._supports_step = self._build_supports_step()
+        self._ext_step = self._build_ext_step()
+        self._sup_step = None  # supports-only twin, built on first filter
         self._staged: StoreState | None = None
 
     # one consistent view per read — query batches grab this once
@@ -251,11 +252,43 @@ class ConceptStore:
         intents,
         *,
         plan: ShardPlan | None = None,
+        min_support: int | None = None,
     ) -> "ConceptStore":
+        """``min_support`` keeps only the frequent (iceberg) concepts — one
+        SPMD support pass filters before the snapshot materializes."""
         store = cls(ctx, plan)
-        arr = np.unique(incremental.as_intent_array(intents), axis=0)
+        arr = (
+            incremental.as_intent_array(intents)
+            if len(intents)
+            else np.zeros((0, ctx.W), np.uint32)  # iceberg can mine nothing
+        )
+        arr = np.unique(arr, axis=0)
+        if min_support is not None and arr.shape[0]:
+            C = arr.shape[0]
+            buf = np.full(
+                (bucket_size(C, minimum=8), ctx.W), 0xFFFFFFFF, np.uint32
+            )
+            buf[:C] = arr
+            sups = store._supports_only(buf, store.rows, ctx.n_objects)
+            arr = arr[sups[:C] >= int(min_support)]
         store._state = dataclasses.replace(
             store._state, snapshot=store.make_snapshot(arr, version=0)
+        )
+        return store
+
+    def iceberg(self, min_support: int) -> "ConceptStore":
+        """A new store over the same context/plan serving only the active
+        snapshot's concepts with support ≥ ``min_support`` — the
+        iceberg-filtered view (supports come from the snapshot; no
+        recount decides membership)."""
+        snap = self.snapshot
+        if snap is None:
+            raise RuntimeError("no active snapshot to filter")
+        store = ConceptStore(self.ctx, self.plan)
+        keep = snap.intents_np[snap.supports_np >= int(min_support)]
+        store._state = dataclasses.replace(
+            store._state,
+            snapshot=store.make_snapshot(keep, version=snap.version),
         )
         return store
 
@@ -265,19 +298,20 @@ class ConceptStore:
         *,
         version: int,
         rows_dev: jax.Array | None = None,
-        n_pad: int | None = None,
         ctx: FormalContext | None = None,
     ) -> Snapshot:
         """Materialize a snapshot for ``intents_np`` (distinct, unordered).
 
-        ``rows_dev``/``n_pad``/``ctx`` default to the store's active
-        context; the stream updater passes the staged (grown) ones.
-        Supports are recounted with one plan-SPMD psum round per chunk;
-        the order tables are two device matmuls (``order_tables_jnp``).
+        ``rows_dev``/``ctx`` default to the store's active context; the
+        stream updater passes the staged (grown) ones.  Extent columns
+        and supports come from one mixed-out-spec plan-SPMD region per
+        concept chunk (``_build_ext_step`` — the extent pack stays on the
+        shards; padded context rows are masked by global row index, no
+        pad correction needed); the order tables are two device matmuls
+        (``order_tables_jnp``).
         """
         ctx = ctx or self.ctx
         rows_dev = self.rows if rows_dev is None else rows_dev
-        n_pad = self.n_pad if n_pad is None else n_pad
         m, W = ctx.n_attrs, ctx.W
 
         perm = canonical_order(intents_np, m)
@@ -298,26 +332,20 @@ class ConceptStore:
         intents_dev = plan.replicate(buf)
         skeys_dev = plan.replicate(skeys)
 
-        supports = self._supports(arr, rows_dev, n_pad)
-        sup_buf = np.zeros((cap,), np.int32)
-        sup_buf[:C] = supports
+        # Extent table + supports from ONE mixed-out-spec SPMD pass per
+        # concept chunk: each region's subset-test matrix yields the
+        # object-sharded packed extent columns (ext_cols[g, wc] packs
+        # g ∈ extent(c) over the 32 concepts of word wc — staying on the
+        # shards, never visiting the host) and the psum-reduced supports.
+        # Padded intents are all-ones: only padded (all-ones) context rows
+        # could contain them, and those are masked by the global row index,
+        # so pad concepts get zero columns and zero support.
+        ext_cols, sup_buf = self._ext_supports(buf, rows_dev, ctx.n_objects)
+        supports = sup_buf[:C]
 
         tables = order_tables_jnp(intents_dev, jnp.int32(C), n_attrs=m)
         sub_rows, sup_rows, children_rows, parents_rows = (
             plan.replicate(t) for t in tables
-        )
-
-        # Extent table, object-sharded: ext_cols[g, wc] packs g ∈ extent(c)
-        # over the 32 concepts of word wc.  (Padded context rows are
-        # all-ones and would match every concept; they pack as zeros here.)
-        N_padded = ctx.n_objects + n_pad
-        ext_bool = np.zeros((N_padded, cap), dtype=bool)
-        if C:
-            n = ctx.n_objects
-            sub = bitset.is_subset(arr[None, :, :], ctx.rows[:, None, :])
-            ext_bool[:n, :C] = sub
-        ext_cols = plan.place_rows(
-            bitset.pack_bool(ext_bool, cap // 32)
         )
 
         return Snapshot(
@@ -337,41 +365,86 @@ class ConceptStore:
             supports_np=supports,
         )
 
-    # -- device support recount (one psum round per chunk) ------------------
+    # -- device extent build + support recount (mixed out-spec regions) -----
 
-    def _build_supports_step(self):
+    def _build_ext_step(self):
+        """One SPMD region: per-shard subset test of a concept chunk
+        against the local context rows → (packed extent columns, staying
+        object-sharded via the plan's mixed ``out_shard``; supports,
+        psum-reduced and replicated).  The ROADMAP's device-side extent
+        build: the pack never round-trips through the host."""
         plan = self.plan
         axes = plan.reduce_axes
 
-        def body(rows_local, cands, n_pad):
-            match = jnp.all(
-                (rows_local[None, :, :] & cands[:, None, :])
-                == cands[:, None, :],
-                axis=-1,
-            )
-            local = match.sum(axis=-1, dtype=jnp.int32)
-            return lax.psum(local, axes) - n_pad
+        def body(rows_local, cands, n_objects):
+            # [Nl, B]: concept c's intent ⊆ row g  ⟺  g ∈ extent(c)
+            sub = self._masked_subset(rows_local, cands, n_objects)
+            supports = lax.psum(sub.sum(axis=0, dtype=jnp.int32), axes)
+            return pack_bool_jnp(sub), supports
 
-        return jax.jit(plan.spmd(body, n_rep=2))
+        return jax.jit(plan.spmd(body, n_rep=2, out_shard=(True, False)))
 
-    def _supports(
-        self, intents_np: np.ndarray, rows_dev: jax.Array, n_pad: int
+    def _masked_subset(self, rows_local, cands, n_objects):
+        """``sub[g, c] = intent_c ⊆ row_g`` for the local shard, with the
+        padded context rows masked out via the global row index — the one
+        kernel both the extent build and the supports-only filter share."""
+        n_local = rows_local.shape[0]
+        sub = jnp.all(
+            (cands[None, :, :] & ~rows_local[:, None, :]) == 0, axis=-1
+        )
+        start = self.plan.shard_index() * n_local
+        real = (start + jnp.arange(n_local)) < n_objects
+        return sub & real[:, None]
+
+    def _supports_only(
+        self, buf: np.ndarray, rows_dev: jax.Array, n_objects: int
     ) -> np.ndarray:
-        C, W = intents_np.shape
-        if C == 0:
-            return np.zeros((0,), np.int32)
-        out = np.empty((C,), np.int32)
-        step = min(self.plan.max_batch, 4096)
-        for lo in range(0, C, step):
-            chunk = intents_np[lo : lo + step]
-            cap = bucket_size(chunk.shape[0], minimum=8)
-            buf = np.zeros((cap, W), np.uint32)
-            buf[: chunk.shape[0]] = chunk
-            s = self._supports_step(
-                rows_dev, jnp.asarray(buf), jnp.int32(n_pad)
+        """Psum support recount without the extent pack — the cheap kernel
+        for pre-snapshot filters (``build(min_support=...)``), where the
+        extents of dropped concepts would be thrown away."""
+        if self._sup_step is None:
+            plan = self.plan
+            axes = plan.reduce_axes
+
+            def body(rows_local, cands, n_objects):
+                sub = self._masked_subset(rows_local, cands, n_objects)
+                return lax.psum(sub.sum(axis=0, dtype=jnp.int32), axes)
+
+            self._sup_step = jax.jit(plan.spmd(body, n_rep=2))
+        cap = buf.shape[0]
+        step = min(cap, 4096)
+        parts = []
+        for lo in range(0, cap, step):
+            parts.append(np.asarray(self._sup_step(
+                rows_dev, jnp.asarray(buf[lo : lo + step]),
+                jnp.int32(n_objects),
+            )))
+        return np.concatenate(parts)
+
+    def _ext_supports(
+        self, buf: np.ndarray, rows_dev: jax.Array, n_objects: int
+    ) -> tuple[jax.Array, np.ndarray]:
+        """Extent columns + supports for a padded intent table ``buf``
+        [cap, W] (cap a power of two ≥ 32; pad rows all-ones).  Chunks of
+        ≤4096 concepts bound the per-region subset matrix; chunk columns
+        concatenate on device in the plan's sharded row layout."""
+        cap = buf.shape[0]
+        step = min(cap, 4096)
+        ext_parts, sup_parts = [], []
+        for lo in range(0, cap, step):
+            ext, sup = self._ext_step(
+                rows_dev,
+                jnp.asarray(buf[lo : lo + step]),
+                jnp.int32(n_objects),
             )
-            out[lo : lo + chunk.shape[0]] = np.asarray(s)[: chunk.shape[0]]
-        return out
+            ext_parts.append(ext)
+            sup_parts.append(np.asarray(sup))
+        ext_cols = (
+            ext_parts[0]
+            if len(ext_parts) == 1
+            else jnp.concatenate(ext_parts, axis=-1)
+        )
+        return ext_cols, np.concatenate(sup_parts)
 
     # -- double-buffered commit protocol -----------------------------------
 

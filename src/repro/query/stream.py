@@ -130,7 +130,6 @@ class StreamUpdater:
             grown_np,
             version=snap.version + 1,
             rows_dev=rows_dev,
-            n_pad=n_pad,
             ctx=grown_ctx,
         )
         store.stage(

@@ -1,0 +1,48 @@
+"""repro.rules — distributed iceberg mining and basis extraction.
+
+Turns mined concepts into served knowledge, the workload every production
+FCA deployment actually runs (Chunduri & Cherukuri's Spark reproduction;
+the Apriori-on-MapReduce lineage):
+
+  * **iceberg mining** — ``min_support`` fused inside the MR* drivers'
+    SPMD rounds (:mod:`repro.core.mr` / :mod:`repro.core.frontier`):
+    infrequent candidates are compacted away right after the support psum,
+    so they never re-expand and every later round's reduce is sized by the
+    frequent survivors.  :func:`mine_iceberg` resolves count-or-fraction
+    thresholds; ``ConceptStore.build(min_support=...)`` / ``.iceberg()``
+    give the filtered store view.
+  * **basis extraction** (:mod:`repro.rules.basis`) — the Duquenne–Guigues
+    implication base and the Luxenburger partial-rule base of the stored
+    family, computed as batched device passes over the store's intent
+    table and covering relation; host brute-force oracles ride along for
+    testing.
+  * **serving** (:mod:`repro.rules.index` + ``QueryEngine.rules_batch``) —
+    the combined basis as a device-resident ``RuleIndex`` answered in
+    fixed-slot micro-batches: premise→consequent closure, min-confidence
+    filtering, top-k by confidence or lift.
+"""
+
+from repro.rules.basis import (
+    RuleBasis,
+    RuleSet,
+    dg_basis,
+    dg_basis_host,
+    extract_bases,
+    luxenburger_from_snapshot,
+    luxenburger_host,
+)
+from repro.rules.index import RuleIndex
+from repro.rules.mining import mine_iceberg, resolve_min_support
+
+__all__ = [
+    "RuleBasis",
+    "RuleSet",
+    "RuleIndex",
+    "dg_basis",
+    "dg_basis_host",
+    "extract_bases",
+    "luxenburger_from_snapshot",
+    "luxenburger_host",
+    "mine_iceberg",
+    "resolve_min_support",
+]

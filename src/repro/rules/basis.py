@@ -1,0 +1,553 @@
+"""Basis extraction: Duquenne–Guigues implications + Luxenburger rules.
+
+Both bases are computed *from the mined concept family* (a full lattice or
+an iceberg) rather than from raw transactions — the FCA route to
+association rules: the family of (frequent) closed intents is closed under
+intersection, so
+
+    φ(X) = ⋂ { Y ∈ family : X ⊆ Y }          (⋂ ∅ = M, the full attr set)
+
+is a closure operator whose closed sets are exactly the family (+ M).  For
+the full lattice φ coincides with the context's ``''`` closure; for an
+iceberg it is the iceberg closure system of Stumme's frequent-closed-set
+framework.
+
+  * **Duquenne–Guigues base** — the minimal implication cover
+    ``{P → φ(P)\\P : P pseudo-closed}``, enumerated with Ganter's
+    attribute-exploration loop: NextClosure over the *implication closure*
+    (L-saturation) visits every φ-closed and pseudo-closed set in lectic
+    order; each visited set that φ grows is a pseudo-intent.  The two
+    inner kernels — L-saturation of all m candidate seeds and the φ pass —
+    are batched device ops over the store's intent table (popcount-free
+    subset tests + monoid ``lax.reduce`` folds); the host loop is just the
+    sequential NextClosure control flow.  ``dg_basis_host`` is the pure
+    numpy brute-force oracle (same definition, independent code path).
+
+  * **Luxenburger base** — the minimal cover of the partial (conf < 1)
+    association rules: one rule per *covering* pair Y₁ ≺ Y₂ of the family
+    (premise Y₁, added attrs Y₂\\Y₁, confidence supp(Y₂)/supp(Y₁)).  The
+    covering relation is read from the store snapshot's device-matmul
+    order tables; confidences/lifts are vectorized over all edges at once.
+    ``luxenburger_host`` recomputes the covering with O(C²) subset loops —
+    the brute-force oracle.
+
+Both paths emit rules in the same canonical order (lexsort over packed
+premise then added words), so oracle comparisons are bit-for-bit.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.core import bitset, lectic
+from repro.kernels.ops import bucket_size
+
+
+# ---------------------------------------------------------------------------
+# device kernels (batched passes over the intent table)
+# ---------------------------------------------------------------------------
+
+
+def _or_fold(x: jax.Array, axis: int) -> jax.Array:
+    """Bitwise-OR monoid fold (lax.reduce — XLA input-fuses the select)."""
+    return lax.reduce(x, jnp.uint32(0), lambda a, b: a | b, (axis,))
+
+
+def _and_fold(x: jax.Array, axis: int) -> jax.Array:
+    return lax.reduce(
+        x, jnp.uint32(0xFFFFFFFF), lambda a, b: a & b, (axis,)
+    )
+
+
+@jax.jit
+def family_closure_jnp(
+    X: jax.Array, intents: jax.Array, n_concepts, mask: jax.Array
+) -> jax.Array:
+    """φ(X) for a batch [B, W]: AND-fold of the family intents ⊇ X.
+
+    ``intents`` is a padded [Cb, W] table (pads masked by ``n_concepts``);
+    a batch row covered by no intent closes to ``mask`` (= M).
+    """
+    covers = jnp.all((X[:, None, :] & ~intents[None, :, :]) == 0, axis=-1)
+    covers = covers & (jnp.arange(intents.shape[0]) < n_concepts)[None, :]
+    phi = _and_fold(
+        jnp.where(covers[:, :, None], intents[None], jnp.uint32(0xFFFFFFFF)),
+        axis=1,
+    )
+    return phi & mask
+
+
+@jax.jit
+def family_support_jnp(
+    X: jax.Array, intents: jax.Array, supports: jax.Array, n_concepts
+) -> jax.Array:
+    """Support of each batch row *as a family member* (0 when absent —
+    callers pass φ-closed rows, so absent ⟺ infrequent/M)."""
+    eq = jnp.all(X[:, None, :] == intents[None, :, :], axis=-1)
+    eq = eq & (jnp.arange(intents.shape[0]) < n_concepts)[None, :]
+    return jnp.max(
+        jnp.where(eq, supports[None, :].astype(jnp.int32), 0), axis=1
+    )
+
+
+@jax.jit
+def lclosure_jnp(
+    X: jax.Array, premises: jax.Array, added: jax.Array, n_rules
+) -> jax.Array:
+    """Implication saturation of a batch [B, W] to the L-closure fixpoint.
+
+    One pass ORs every applicable conclusion in; the while_loop runs to
+    stability (≤ |L| passes, in practice a handful).
+    """
+    rvalid = jnp.arange(premises.shape[0]) < n_rules
+
+    def one_pass(x):
+        app = jnp.all(
+            (premises[None, :, :] & ~x[:, None, :]) == 0, axis=-1
+        ) & rvalid[None, :]
+        grow = _or_fold(
+            jnp.where(app[:, :, None], added[None], jnp.uint32(0)), axis=1
+        )
+        return x | grow
+
+    def cond(carry):
+        prev, cur = carry
+        return jnp.any(prev != cur)
+
+    def body(carry):
+        _, cur = carry
+        return cur, one_pass(cur)
+
+    _, out = lax.while_loop(cond, body, (X, one_pass(X)))
+    return out
+
+
+@functools.partial(jax.jit, static_argnames=("n_attrs",))
+def _dg_next_jnp(
+    A: jax.Array,
+    premises: jax.Array,
+    added: jax.Array,
+    n_rules,
+    LOW: jax.Array,
+    BIT: jax.Array,
+    *,
+    n_attrs: int,
+) -> jax.Array:
+    """NextClosure step for the L-closure operator: the lectic-next
+    L-closed set after ``A``.  All m candidate seeds saturate in one
+    batched pass; the largest feasible generator wins (Alg.-5 shape —
+    the same scan the miners fuse after their reduce)."""
+    seeds = (A[None, :] & LOW) | BIT  # [m, W]
+    closed = lclosure_jnp(seeds, premises, added, n_rules)
+    member = lectic.member_bits_jnp(A[None, :], n_attrs)[0]
+    gens = jnp.arange(n_attrs, dtype=jnp.int32)
+    ok = lectic.feasible_jnp(closed, A[None, :], gens, LOW) & ~member
+    score = jnp.where(ok, gens, -1)
+    return closed[jnp.argmax(score)]
+
+
+# ---------------------------------------------------------------------------
+# rule containers
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class RuleSet:
+    """A batch of rules premise → premise ∪ added, canonical order."""
+
+    premise: np.ndarray  # [R, W] uint32
+    added: np.ndarray  # [R, W] uint32 (disjoint from premise)
+    support: np.ndarray  # [R] int32 — objects matching premise ∪ added
+    confidence: np.ndarray  # [R] float32
+    lift: np.ndarray  # [R] float32 (0 when the consequent leaves the family)
+
+    def __len__(self) -> int:
+        return self.premise.shape[0]
+
+    @staticmethod
+    def empty(W: int) -> "RuleSet":
+        z = np.zeros((0, W), np.uint32)
+        return RuleSet(
+            premise=z,
+            added=z.copy(),
+            support=np.zeros((0,), np.int32),
+            confidence=np.zeros((0,), np.float32),
+            lift=np.zeros((0,), np.float32),
+        )
+
+    @staticmethod
+    def concat(a: "RuleSet", b: "RuleSet") -> "RuleSet":
+        return RuleSet(
+            premise=np.concatenate([a.premise, b.premise]),
+            added=np.concatenate([a.added, b.added]),
+            support=np.concatenate([a.support, b.support]),
+            confidence=np.concatenate([a.confidence, b.confidence]),
+            lift=np.concatenate([a.lift, b.lift]),
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class RuleBasis:
+    """The two-part basis of the mined family: exact rules (DG) + partial
+    rules (Luxenburger), per the classic decomposition."""
+
+    n_objects: int
+    n_attrs: int
+    min_conf: float
+    implications: RuleSet  # confidence ≡ 1
+    partial: RuleSet  # confidence < 1
+
+    @property
+    def n_implications(self) -> int:
+        return len(self.implications)
+
+    @property
+    def n_partial(self) -> int:
+        return len(self.partial)
+
+    def combined(self) -> RuleSet:
+        return RuleSet.concat(self.implications, self.partial)
+
+    def describe(self) -> dict:
+        return {
+            "implications": self.n_implications,
+            "partial_rules": self.n_partial,
+            "min_conf": self.min_conf,
+            "n_objects": self.n_objects,
+            "n_attrs": self.n_attrs,
+        }
+
+
+def _canonical_rule_order(premise: np.ndarray, added: np.ndarray) -> np.ndarray:
+    keys = tuple(added[:, w] for w in reversed(range(added.shape[1])))
+    keys += tuple(premise[:, w] for w in reversed(range(premise.shape[1])))
+    return np.lexsort(keys)
+
+
+def _padded_family(
+    intents_np: np.ndarray, W: int
+) -> tuple[jax.Array, int]:
+    C = intents_np.shape[0]
+    cap = bucket_size(max(1, C), minimum=8)
+    buf = np.full((cap, W), 0xFFFFFFFF, np.uint32)
+    buf[:C] = intents_np
+    return jnp.asarray(buf), C
+
+
+def _consequent_lift(
+    added: np.ndarray,
+    confidence: np.ndarray,
+    intents_dev: jax.Array,
+    supports_dev: jax.Array,
+    n_concepts: int,
+    n_objects: int,
+    mask: jax.Array,
+) -> np.ndarray:
+    """lift = conf · |O| / supp(φ(added)), batched; 0 when φ(added) has
+    left the family (infrequent consequent in an iceberg store)."""
+    if added.shape[0] == 0:
+        return np.zeros((0,), np.float32)
+    out = np.zeros((added.shape[0],), np.float32)
+    step = 4096
+    for lo in range(0, added.shape[0], step):
+        chunk = jnp.asarray(added[lo : lo + step])
+        phi = family_closure_jnp(chunk, intents_dev, n_concepts, mask)
+        s = np.asarray(
+            family_support_jnp(phi, intents_dev, supports_dev, n_concepts)
+        ).astype(np.float32)
+        conf = confidence[lo : lo + step]
+        out[lo : lo + step] = np.where(
+            s > 0, conf * n_objects / np.maximum(s, 1), 0.0
+        )
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Duquenne–Guigues base
+# ---------------------------------------------------------------------------
+
+
+def dg_basis(
+    intents_np: np.ndarray,
+    supports_np: np.ndarray,
+    n_attrs: int,
+    *,
+    n_objects: int | None = None,
+) -> RuleSet:
+    """DG implication base of the family, device-batched Ganter loop.
+
+    Every iteration runs two device passes — L-saturation of the m
+    candidate seeds (``_dg_next_jnp``) and the φ pass over the intent
+    table — while the host only sequences NextClosure and collects
+    pseudo-intents.  Premises come out in lectic order.
+    """
+    W = bitset.n_words(n_attrs)
+    mask_np = bitset.attr_mask(n_attrs, W)
+    mask = jnp.asarray(mask_np)
+    t = lectic.LecticTables(n_attrs)
+    LOW, BIT = jnp.asarray(t.LOW), jnp.asarray(t.BIT)
+    intents_dev, C = _padded_family(intents_np, W)
+    supports_dev = jnp.zeros((intents_dev.shape[0],), jnp.int32)
+    if C:
+        supports_dev = supports_dev.at[:C].set(
+            jnp.asarray(supports_np.astype(np.int32))
+        )
+
+    premises: list[np.ndarray] = []
+    conclusions: list[np.ndarray] = []  # full φ(P), for the saturation
+    # device twin of the growing L, bucket-padded (rebuilt on growth —
+    # one tiny upload per pseudo-intent)
+    rcap = 8
+    prem_dev = jnp.full((rcap, W), 0xFFFFFFFF, jnp.uint32)
+    concl_dev = jnp.zeros((rcap, W), jnp.uint32)
+
+    A = np.zeros((W,), np.uint32)
+    while True:
+        phi = np.asarray(
+            family_closure_jnp(
+                jnp.asarray(A[None, :]), intents_dev, C, mask
+            )
+        )[0]
+        if not np.array_equal(phi, A):  # A is pseudo-closed
+            premises.append(A.copy())
+            conclusions.append(phi)
+            if len(premises) > rcap:
+                rcap = bucket_size(len(premises), minimum=8)
+            buf_p = np.full((rcap, W), 0xFFFFFFFF, np.uint32)
+            buf_c = np.zeros((rcap, W), np.uint32)
+            buf_p[: len(premises)] = np.stack(premises)
+            buf_c[: len(premises)] = np.stack(conclusions)
+            prem_dev, concl_dev = jnp.asarray(buf_p), jnp.asarray(buf_c)
+        if np.array_equal(A, mask_np):
+            break
+        A = np.asarray(
+            _dg_next_jnp(
+                jnp.asarray(A), prem_dev, concl_dev,
+                jnp.int32(len(premises)), LOW, BIT, n_attrs=n_attrs,
+            )
+        )
+
+    if not premises:
+        return RuleSet.empty(W)
+    prem = np.stack(premises)
+    concl = np.stack(conclusions)
+    added = concl & ~prem
+    support = np.asarray(
+        family_support_jnp(
+            jnp.asarray(concl), intents_dev, supports_dev, C
+        )
+    ).astype(np.int32)
+    confidence = np.ones((prem.shape[0],), np.float32)
+    # |O| defaults to the top concept's support (extent of ∅'' is O)
+    n_obj = (
+        n_objects
+        if n_objects is not None
+        else (int(supports_np.max()) if C else 0)
+    )
+    lift = _consequent_lift(
+        added, confidence, intents_dev, supports_dev, C, n_obj, mask
+    )
+    return RuleSet(
+        premise=prem, added=added, support=support,
+        confidence=confidence, lift=lift,
+    )
+
+
+def dg_basis_host(intents_np: np.ndarray, n_attrs: int) -> RuleSet:
+    """Pure-numpy brute-force oracle for :func:`dg_basis` (supports and
+    lifts zeroed — oracle comparisons cover premises/conclusions)."""
+    W = bitset.n_words(n_attrs)
+    mask = bitset.attr_mask(n_attrs, W)
+    t = lectic.LecticTables(n_attrs)
+
+    def phi(X):
+        out = mask.copy()
+        for Y in intents_np:
+            if bool(bitset.is_subset(X, Y)):
+                out &= Y
+        return out
+
+    def lclose(X, L):
+        X = X.copy()
+        changed = True
+        while changed:
+            changed = False
+            for p, c in L:
+                if bool(bitset.is_subset(p, X)) and not bool(
+                    bitset.is_subset(c, X)
+                ):
+                    X |= c
+                    changed = True
+        return X
+
+    L: list[tuple[np.ndarray, np.ndarray]] = []
+    A = np.zeros((W,), np.uint32)
+    while True:
+        p = phi(A)
+        if not np.array_equal(p, A):
+            L.append((A.copy(), p))
+        if np.array_equal(A, mask):
+            break
+        for i in reversed(range(n_attrs)):
+            if bitset.unpack_bits(A, n_attrs)[i]:
+                continue
+            B = lclose((A & t.LOW[i]) | t.BIT[i], L)
+            if bool(np.all(((B ^ A) & t.LOW[i]) == 0)):
+                A = B
+                break
+        else:  # pragma: no cover — NextClosure always has a successor
+            raise AssertionError("no lectic successor below M")
+
+    if not L:
+        return RuleSet.empty(W)
+    prem = np.stack([p for p, _ in L])
+    concl = np.stack([c for _, c in L])
+    R = prem.shape[0]
+    return RuleSet(
+        premise=prem, added=concl & ~prem,
+        support=np.zeros((R,), np.int32),
+        confidence=np.ones((R,), np.float32),
+        lift=np.zeros((R,), np.float32),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Luxenburger base
+# ---------------------------------------------------------------------------
+
+
+def _rules_from_cover(
+    cover_target_child: np.ndarray,  # bool [C, C]: [c, d] ⇒ d ≺ c (d child)
+    intents_np: np.ndarray,
+    supports_np: np.ndarray,
+    n_objects: int,
+    min_conf: float,
+    intents_dev: jax.Array,
+    supports_dev: jax.Array,
+    n_concepts: int,
+    mask: jax.Array,
+) -> RuleSet:
+    tgt, src = np.nonzero(cover_target_child)  # rule: intent[src] → intent[tgt]
+    keep = supports_np[src] > 0
+    tgt, src = tgt[keep], src[keep]
+    premise = intents_np[src]
+    added = intents_np[tgt] & ~premise
+    support = supports_np[tgt].astype(np.int32)
+    confidence = (
+        support.astype(np.float64) / supports_np[src].astype(np.float64)
+    ).astype(np.float32)
+    keep = confidence >= np.float32(min_conf)
+    premise, added = premise[keep], added[keep]
+    support, confidence = support[keep], confidence[keep]
+    lift = _consequent_lift(
+        added, confidence, intents_dev, supports_dev, n_concepts,
+        n_objects, mask,
+    )
+    order = _canonical_rule_order(premise, added)
+    return RuleSet(
+        premise=premise[order], added=added[order],
+        support=support[order], confidence=confidence[order],
+        lift=lift[order],
+    )
+
+
+def _m_mask(W: int, n_attrs: int | None) -> np.ndarray:
+    """The top element M for the φ no-cover fallback.  ``n_attrs=None``
+    falls back to every bit of the W words — only reachable by callers
+    that pass sets no family member covers, which the Luxenburger paths
+    never do (every consequent is a subset of a real intent)."""
+    if n_attrs is not None:
+        return bitset.attr_mask(n_attrs, W)
+    return np.full((W,), 0xFFFFFFFF, np.uint32)
+
+
+def luxenburger_from_snapshot(
+    snap, n_objects: int, *, min_conf: float = 0.0,
+    n_attrs: int | None = None,
+) -> RuleSet:
+    """Luxenburger base read off a ConceptStore snapshot: premises/targets
+    are the covering pairs the snapshot's device order-table matmuls
+    already materialized (``children_rows``)."""
+    C = snap.n_concepts
+    W = snap.intents_np.shape[1]  # valid even for an empty family
+    if C == 0:
+        return RuleSet.empty(W)
+    kids = np.asarray(snap.children_rows)[:C]
+    cover = bitset.unpack_bits(kids, snap.cap)[:, :C]  # [c, d]: d ≺ c
+    # family tables straight from the snapshot (already padded on device)
+    return _rules_from_cover(
+        cover, snap.intents_np, snap.supports_np.astype(np.int32),
+        n_objects, min_conf, snap.intents, snap.supports, C,
+        jnp.asarray(_m_mask(W, n_attrs)),
+    )
+
+
+def luxenburger_host(
+    intents_np: np.ndarray,
+    supports_np: np.ndarray,
+    n_objects: int,
+    *,
+    min_conf: float = 0.0,
+    n_attrs: int | None = None,
+) -> RuleSet:
+    """Brute-force oracle: O(C²) subset loops build the strict order, a
+    triple loop reduces it to the covering, then the same rule math."""
+    C, W = intents_np.shape
+    if C == 0:
+        return RuleSet.empty(W)
+    strict = np.zeros((C, C), bool)
+    for i in range(C):
+        for j in range(C):
+            if i != j and bool(bitset.is_subset(intents_np[i], intents_np[j])):
+                strict[i, j] = True  # intent_i ⊂ intent_j
+    cover = strict.copy()
+    for i in range(C):
+        for j in range(C):
+            if cover[i, j]:
+                for k in range(C):
+                    if strict[i, k] and strict[k, j]:
+                        cover[i, j] = False
+                        break
+    # cover[i, j]: j covers i (premise i → target j) → [target, child] layout
+    intents_dev, C_ = _padded_family(intents_np, W)
+    supports_dev = jnp.zeros((intents_dev.shape[0],), jnp.int32)
+    supports_dev = supports_dev.at[:C].set(
+        jnp.asarray(supports_np.astype(np.int32))
+    )
+    return _rules_from_cover(
+        cover.T, intents_np, supports_np.astype(np.int32), n_objects,
+        min_conf, intents_dev, supports_dev, C_,
+        jnp.asarray(_m_mask(W, n_attrs)),
+    )
+
+
+# ---------------------------------------------------------------------------
+# one-call extraction over a concept store
+# ---------------------------------------------------------------------------
+
+
+def extract_bases(store, *, min_conf: float = 0.0) -> RuleBasis:
+    """DG + Luxenburger bases of the store's active snapshot (full or
+    iceberg — φ is the snapshot family's closure system either way)."""
+    snap = store.snapshot
+    ctx = store.ctx
+    implications = dg_basis(
+        snap.intents_np, snap.supports_np.astype(np.int32), ctx.n_attrs,
+        n_objects=ctx.n_objects,
+    )
+    partial = luxenburger_from_snapshot(
+        snap, ctx.n_objects, min_conf=min_conf, n_attrs=ctx.n_attrs
+    )
+    return RuleBasis(
+        n_objects=ctx.n_objects,
+        n_attrs=ctx.n_attrs,
+        min_conf=min_conf,
+        implications=implications,
+        partial=partial,
+    )

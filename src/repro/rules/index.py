@@ -1,0 +1,104 @@
+"""RuleIndex — the extracted bases as a device-resident serving artifact.
+
+The serving twin of the concept store's snapshot: the combined rule table
+(DG implications, confidence ≡ 1, followed by the Luxenburger partial
+rules) padded to a power-of-two cap and replicated through the plan, so
+:class:`repro.query.engine.QueryEngine`'s fixed-slot rule ops read it like
+any other snapshot table — zero collective rounds, one compiled step per
+(k, rank metric) reused across index rebuilds of the same padded shape.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.ops import bucket_size
+from repro.rules.basis import RuleBasis, RuleSet
+
+
+@dataclasses.dataclass(frozen=True)
+class RuleIndex:
+    n_rules: int
+    n_exact: int  # leading rows that are DG implications (conf ≡ 1)
+    cap: int
+    premise: jax.Array  # [cap, W] uint32 (pads all-ones: match nothing real)
+    added: jax.Array  # [cap, W] uint32
+    support: jax.Array  # [cap] int32
+    confidence: jax.Array  # [cap] float32 (pads -1)
+    lift: jax.Array  # [cap] float32 (pads -1)
+    # host copies (oracles, answer detail expansion)
+    premise_np: np.ndarray
+    added_np: np.ndarray
+    support_np: np.ndarray
+    confidence_np: np.ndarray
+    lift_np: np.ndarray
+
+    @classmethod
+    def build(cls, basis: RuleBasis, *, plan=None) -> "RuleIndex":
+        combined: RuleSet = basis.combined()
+        R = len(combined)
+        W = combined.premise.shape[1]
+        cap = bucket_size(max(1, R), minimum=8)
+        prem = np.full((cap, W), 0xFFFFFFFF, np.uint32)
+        added = np.zeros((cap, W), np.uint32)
+        sup = np.zeros((cap,), np.int32)
+        conf = np.full((cap,), -1.0, np.float32)
+        lift = np.full((cap,), -1.0, np.float32)
+        prem[:R] = combined.premise
+        added[:R] = combined.added
+        sup[:R] = combined.support
+        conf[:R] = combined.confidence
+        lift[:R] = combined.lift
+        place = plan.replicate if plan is not None else jnp.asarray
+        return cls(
+            n_rules=R,
+            n_exact=basis.n_implications,
+            cap=cap,
+            premise=place(prem),
+            added=place(added),
+            support=place(sup),
+            confidence=place(conf),
+            lift=place(lift),
+            premise_np=prem[:R],
+            added_np=added[:R],
+            support_np=sup[:R],
+            confidence_np=conf[:R],
+            lift_np=lift[:R],
+        )
+
+    def describe(self) -> dict:
+        return {
+            "rules": self.n_rules,
+            "exact": self.n_exact,
+            "partial": self.n_rules - self.n_exact,
+            "cap": self.cap,
+        }
+
+
+def rule_query_mix(
+    ctx,
+    index: RuleIndex,
+    n: int,
+    rng,
+    *,
+    thin: float = 0.3,
+    hit_fraction: float = 0.5,
+) -> "np.ndarray":
+    """The standard rule-serving traffic mix (CLI smoke + benchmark share
+    it): context rows thinned to ``thin`` bit density (mixed hit/miss
+    traffic), with the leading ``hit_fraction`` of the batch overwritten
+    by real rule premises (guaranteed hits)."""
+    from repro.core import bitset
+
+    base = ctx.rows[rng.integers(0, ctx.n_objects, size=n)]
+    keep = bitset.pack_bool(rng.random((n, ctx.n_attrs)) < thin, ctx.W)
+    queries = base & keep
+    if index.n_rules:
+        n_hit = int(n * hit_fraction)
+        picks = rng.integers(0, index.n_rules, size=n_hit)
+        queries[:n_hit] = index.premise_np[picks]
+    return queries

@@ -1,0 +1,63 @@
+"""Iceberg mining entry points: threshold resolution + driver dispatch.
+
+The actual in-round pruning lives in the miners themselves
+(:mod:`repro.core.mr` ``min_support=``, fused after the support psum in
+:mod:`repro.core.frontier`); this module owns the user-facing threshold
+vocabulary (absolute count or fraction of |O|) and the one-call
+mine-to-store path the CLI and benchmarks share.
+"""
+
+from __future__ import annotations
+
+import math
+
+from repro.core.mr import MRResult, mrcbo, mrganter, mrganter_plus
+
+ALGORITHMS = {
+    "mrganter": mrganter,
+    "mrganter+": mrganter_plus,
+    "mrcbo": mrcbo,
+}
+
+
+def resolve_min_support(value, n_objects: int) -> int:
+    """An absolute object count from a count-or-fraction spec.
+
+    Fractions in (0, 1) resolve to ``ceil(value · n_objects)`` (≥ 1);
+    values ≥ 1 must be whole counts.  The resolved count is what the
+    miners, store filters and CLI stats all speak.
+    """
+    v = float(value)
+    if not math.isfinite(v) or v <= 0:
+        raise ValueError(f"min_support must be positive, got {value!r}")
+    if v < 1:
+        return max(1, math.ceil(v * n_objects))
+    if v != int(v):
+        raise ValueError(
+            f"min_support ≥ 1 must be a whole object count, got {value!r}"
+        )
+    return int(v)
+
+
+def mine_iceberg(
+    ctx,
+    engine,
+    *,
+    min_support,
+    algorithm: str = "mrganter+",
+    pipeline: str = "device",
+    **kw,
+) -> MRResult:
+    """Mine the iceberg lattice at ``min_support`` (count or fraction).
+
+    Dispatches to the chosen MR* driver with the threshold resolved to an
+    absolute count; the pruning is fused into the drivers' SPMD rounds.
+    """
+    if algorithm not in ALGORITHMS:
+        raise ValueError(
+            f"unknown algorithm {algorithm!r}; choose {sorted(ALGORITHMS)}"
+        )
+    s = resolve_min_support(min_support, ctx.n_objects)
+    return ALGORITHMS[algorithm](
+        ctx, engine, pipeline=pipeline, min_support=s, **kw
+    )

@@ -258,6 +258,30 @@ def test_double_buffered_snapshot_serves_through_stage():
         store.commit()
 
 
+def test_extents_after_stream_commit_match_host_oracle():
+    """The device-side extent build (mixed out-spec SPMD region) must stay
+    correct for staged snapshots over the grown, re-placed context."""
+    ctx = FormalContext.synthetic(30, 10, 0.35, seed=14)
+    intents = all_closures_batched(ctx)
+    store = ConceptStore.build(
+        ctx, intents, plan=ShardPlan.simulated(2, block_n=8)
+    )
+    qe = QueryEngine(store, QueryConfig(slots=8))
+    new_rows = bitset.pack_bool(
+        np.random.default_rng(2).random((3, ctx.n_attrs)) < 0.4, ctx.W
+    )
+    StreamUpdater(store).apply(new_rows)
+    snap = store.snapshot
+    grown = store.ctx
+    ids = np.arange(snap.n_concepts, dtype=np.int32)
+    packed = qe.extents_batch(ids)
+    for c in ids:
+        ref = extent_np(grown.rows, snap.intents_np[c])
+        got = bitset.unpack_bits(packed[c], store.N_padded)
+        assert np.array_equal(got[: grown.n_objects], ref)
+        assert not got[grown.n_objects :].any()
+
+
 def test_stream_rejects_bad_rows():
     ctx = paper_context()
     store = ConceptStore.build(

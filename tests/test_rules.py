@@ -1,0 +1,385 @@
+"""repro.rules — iceberg mining vs post-hoc filtering (property-tested
+across drivers × shard counts × schedules), DG/Luxenburger bases vs host
+brute-force oracles, and rule-query oracle equivalence."""
+
+import numpy as np
+import pytest
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:  # deterministic seeded fallback (repro.testing)
+    from repro.testing import given, settings, st
+
+from repro.core import (
+    ClosureEngine,
+    all_closures_batched,
+    bitset,
+    mrcbo,
+    mrganter,
+    mrganter_plus,
+)
+from repro.core.closure import closure_np
+from repro.core.context import FormalContext, paper_context
+from repro.dist.shardplan import ShardPlan
+from repro.query import ConceptStore, QueryEngine
+from repro.query.engine import QueryConfig
+from repro.query.store import host_supports
+from repro.rules import (
+    RuleIndex,
+    dg_basis,
+    dg_basis_host,
+    extract_bases,
+    luxenburger_from_snapshot,
+    luxenburger_host,
+    mine_iceberg,
+    resolve_min_support,
+)
+
+settings.register_profile("rules", deadline=None, max_examples=10)
+settings.load_profile("rules")
+
+DRIVERS = (mrganter, mrganter_plus, mrcbo)
+PLANS = ((1, "rsag"), (2, "allgather"), (4, "auto"))
+
+
+def _keys(intents):
+    return {bitset.key_bytes(y) for y in np.asarray(intents, np.uint32)}
+
+
+def _posthoc_ref(ctx, s):
+    full = np.stack(all_closures_batched(ctx))
+    sups = host_supports(ctx, full)
+    return _keys(full[sups >= s])
+
+
+# -- iceberg mining ----------------------------------------------------------
+
+
+@given(
+    st.integers(10, 40), st.integers(4, 12), st.floats(0.2, 0.5),
+    st.integers(0, 10_000), st.floats(0.05, 0.6),
+    st.integers(0, 2), st.integers(0, 2),
+)
+def test_iceberg_matches_posthoc_filter(n, m, density, seed, frac, di, pi):
+    """Fused in-round pruning ≡ filtering the full lattice, for every
+    driver, shard count, schedule, and pipeline."""
+    ctx = FormalContext.synthetic(n, m, density, seed=seed)
+    s = resolve_min_support(frac, n)
+    ref = _posthoc_ref(ctx, s)
+    driver = DRIVERS[di]
+    n_parts, impl = PLANS[pi]
+    for pipeline in ("device", "host"):
+        eng = ClosureEngine(
+            ctx,
+            plan=ShardPlan.simulated(n_parts, reduce_impl=impl, block_n=8),
+            backend="jnp",
+        )
+        res = driver(ctx, eng, pipeline=pipeline, min_support=s)
+        assert _keys(res.intents) == ref
+        assert res.min_support == s
+
+
+def test_iceberg_prunes_rounds_and_bytes():
+    """The acceptance shape: same concepts as post-hoc filtering, with
+    fewer closures computed, fewer reduce bytes, and no more rounds."""
+    ctx = FormalContext.synthetic(80, 16, 0.3, seed=11)
+    s = resolve_min_support(0.25, ctx.n_objects)
+    plan = ShardPlan.simulated(8, reduce_impl="rsag", block_n=8)
+    e_full = ClosureEngine(ctx, plan=plan, backend="jnp")
+    r_full = mrganter_plus(ctx, e_full, local_prune=True)
+    e_ice = ClosureEngine(ctx, plan=plan, backend="jnp")
+    r_ice = mrganter_plus(ctx, e_ice, local_prune=True, min_support=s)
+    full = np.stack(r_full.intents)
+    sups = host_supports(ctx, full)
+    assert _keys(r_ice.intents) == _keys(full[sups >= s])
+    assert len(r_ice.intents) < len(r_full.intents)
+    assert e_ice.stats.closures_computed < e_full.stats.closures_computed
+    assert e_ice.stats.modeled_comm_bytes < e_full.stats.modeled_comm_bytes
+    assert r_ice.n_iterations <= r_full.n_iterations
+
+
+def test_mrganter_iceberg_preserves_lectic_order():
+    """The iceberg walk emits exactly the frequent subsequence of the full
+    lectic enumeration, in the same order."""
+    ctx = FormalContext.synthetic(30, 10, 0.35, seed=3)
+    s = 5
+    eng = ClosureEngine(ctx, plan=ShardPlan.simulated(2, block_n=8),
+                        backend="jnp")
+    full = mrganter(ctx, eng).intents
+    sups = host_supports(ctx, np.stack(full))
+    ref = [y for y, sp in zip(full, sups) if sp >= s]
+    eng2 = ClosureEngine(ctx, plan=ShardPlan.simulated(2, block_n=8),
+                         backend="jnp")
+    ice = mrganter(ctx, eng2, min_support=s).intents
+    assert len(ice) == len(ref)
+    for a, b in zip(ice, ref):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_min_support_validation():
+    ctx = paper_context()
+    eng = ClosureEngine(ctx, plan=ShardPlan.simulated(1), backend="jnp")
+    with pytest.raises(ValueError, match="min_support"):
+        mrganter_plus(ctx, eng, min_support=0)
+    with pytest.raises(ValueError, match="min_support"):
+        mrcbo(ctx, eng, min_support=2.5)
+    assert resolve_min_support(0.5, 10) == 5
+    assert resolve_min_support(0.001, 10) == 1  # fraction floor
+    assert resolve_min_support(7, 10) == 7
+    with pytest.raises(ValueError):
+        resolve_min_support(-1, 10)
+    with pytest.raises(ValueError):
+        resolve_min_support(3.5, 10)
+    # threshold above |O|: nothing is frequent, result is empty
+    res = mine_iceberg(ctx, eng, min_support=ctx.n_objects + 1)
+    assert res.n_concepts == 0
+
+
+def test_store_iceberg_filter_matches_posthoc():
+    ctx = FormalContext.synthetic(50, 14, 0.3, seed=6)
+    intents = all_closures_batched(ctx)
+    plan = ShardPlan.simulated(2, block_n=8)
+    store = ConceptStore.build(ctx, intents, plan=plan)
+    s = 8
+    keep = store.snapshot.supports_np >= s
+    ref = _keys(store.snapshot.intents_np[keep])
+    ice = store.iceberg(s)
+    assert _keys(ice.snapshot.intents_np) == ref
+    np.testing.assert_array_equal(
+        ice.snapshot.supports_np,
+        host_supports(ctx, ice.snapshot.intents_np),
+    )
+    built = ConceptStore.build(ctx, intents, plan=plan, min_support=s)
+    assert _keys(built.snapshot.intents_np) == ref
+
+
+def test_empty_iceberg_family_end_to_end():
+    """A threshold above |O| mines nothing; the store, bases and rule
+    index must still build (multi-word contexts included — W > 1)."""
+    ctx = FormalContext.synthetic(20, 40, 0.3, seed=5)  # 40 attrs → W = 2
+    assert ctx.W > 1
+    plan = ShardPlan.simulated(2, block_n=8)
+    eng = ClosureEngine(ctx, plan=plan, backend="jnp")
+    res = mine_iceberg(ctx, eng, min_support=ctx.n_objects + 1)
+    assert res.n_concepts == 0
+    store = ConceptStore.build(ctx, res.intents, plan=plan)
+    assert store.snapshot.n_concepts == 0
+    basis = extract_bases(store, min_conf=0.5)
+    # with no family, ∅ already closes to M — exactly one implication
+    assert basis.n_implications == 1 and basis.n_partial == 0
+    assert basis.implications.premise.shape[1] == ctx.W
+    index = RuleIndex.build(basis, plan=plan)
+    qe = QueryEngine(store, QueryConfig(slots=8))
+    ids, scores, cons = qe.rules_batch(index, ctx.rows[:3], k=2)
+    assert ids.shape == (3, 2)
+    # the ∅→M implication fires on every query
+    assert np.all(ids[:, 0] == 0)
+
+
+# -- Duquenne–Guigues base ---------------------------------------------------
+
+
+@given(
+    st.integers(5, 22), st.integers(3, 8), st.floats(0.2, 0.6),
+    st.integers(0, 10_000), st.booleans(),
+)
+def test_dg_basis_matches_host_oracle(n, m, density, seed, iceberg):
+    ctx = FormalContext.synthetic(n, m, density, seed=seed)
+    intents = np.stack(all_closures_batched(ctx))
+    sups = host_supports(ctx, intents)
+    if iceberg:
+        s = max(1, int(0.2 * n))
+        intents, sups = intents[sups >= s], sups[sups >= s]
+    dev = dg_basis(intents, sups, ctx.n_attrs, n_objects=ctx.n_objects)
+    host = dg_basis_host(intents, ctx.n_attrs)
+    np.testing.assert_array_equal(dev.premise, host.premise)
+    np.testing.assert_array_equal(dev.added, host.added)
+
+
+def test_dg_basis_sound_and_complete():
+    """Sound: every implication holds in the context.  Complete: saturating
+    any attrset under the base reproduces the context's '' closure."""
+    ctx = FormalContext.synthetic(35, 9, 0.4, seed=1)
+    intents = np.stack(all_closures_batched(ctx))
+    sups = host_supports(ctx, intents)
+    dg = dg_basis(intents, sups, ctx.n_attrs, n_objects=ctx.n_objects)
+    mask = ctx.attr_mask()
+    for p, a in zip(dg.premise, dg.added):
+        ext_p = bitset.is_subset(p[None, :], ctx.rows).sum()
+        ext_pa = bitset.is_subset((p | a)[None, :], ctx.rows).sum()
+        assert ext_p == ext_pa  # premise and conclusion share the extent
+        assert not np.any(p & a)  # added is disjoint from the premise
+
+    def saturate(X):
+        X = X.copy()
+        changed = True
+        while changed:
+            changed = False
+            for p, a in zip(dg.premise, dg.added):
+                if bool(bitset.is_subset(p, X)) and not bool(
+                    bitset.is_subset(a, X)
+                ):
+                    X |= a
+                    changed = True
+        return X
+
+    rng = np.random.default_rng(0)
+    for _ in range(25):
+        X = bitset.pack_bool(rng.random(ctx.n_attrs) < 0.3, ctx.W)
+        c_ref, _ = closure_np(ctx.rows, X, mask)
+        np.testing.assert_array_equal(saturate(X), c_ref)
+
+
+def test_dg_basis_premises_in_lectic_order_and_empty_family():
+    ctx = paper_context()
+    intents = np.stack(all_closures_batched(ctx))
+    sups = host_supports(ctx, intents)
+    dg = dg_basis(intents, sups, ctx.n_attrs, n_objects=ctx.n_objects)
+    # lectic enumeration ⇒ premise popcounts never... (not monotone) but
+    # premises are distinct and every conclusion is nonempty
+    assert len({bitset.key_bytes(p) for p in dg.premise}) == len(dg)
+    assert np.all(bitset.popcount(dg.added) > 0)
+    empty = dg_basis(
+        np.zeros((0, ctx.W), np.uint32), np.zeros((0,), np.int32),
+        ctx.n_attrs, n_objects=ctx.n_objects,
+    )
+    # with no family, ∅ already closes to M: one implication ∅ → M
+    assert len(empty) == 1
+    assert bitset.popcount(empty.premise)[0] == 0
+
+
+# -- Luxenburger base --------------------------------------------------------
+
+
+@given(
+    st.integers(6, 24), st.integers(3, 8), st.floats(0.2, 0.6),
+    st.integers(0, 10_000), st.floats(0.0, 0.8), st.booleans(),
+)
+def test_luxenburger_matches_host_oracle(n, m, density, seed, min_conf, ice):
+    ctx = FormalContext.synthetic(n, m, density, seed=seed)
+    intents = all_closures_batched(ctx)
+    store = ConceptStore.build(
+        ctx, intents, plan=ShardPlan.simulated(2, block_n=8),
+        min_support=max(1, int(0.15 * n)) if ice else None,
+    )
+    snap = store.snapshot
+    dev = luxenburger_from_snapshot(snap, ctx.n_objects, min_conf=min_conf)
+    host = luxenburger_host(
+        snap.intents_np, snap.supports_np, ctx.n_objects, min_conf=min_conf
+    )
+    for f in ("premise", "added", "support", "confidence", "lift"):
+        np.testing.assert_array_equal(getattr(dev, f), getattr(host, f))
+    # basis semantics: strictly partial rules above the floor, correct conf
+    assert np.all(dev.confidence < 1.0)
+    assert np.all(dev.confidence >= np.float32(min_conf))
+    for p, a, sp, cf in zip(
+        dev.premise, dev.added, dev.support, dev.confidence
+    ):
+        s_p = bitset.is_subset(p[None, :], ctx.rows).sum()
+        s_pa = bitset.is_subset((p | a)[None, :], ctx.rows).sum()
+        assert s_pa == sp
+        assert cf == np.float32(np.float64(s_pa) / np.float64(s_p))
+
+
+# -- rule serving ------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def served_rules():
+    ctx = FormalContext.synthetic(45, 12, 0.35, seed=8)
+    intents = all_closures_batched(ctx)
+    plan = ShardPlan.simulated(2, block_n=8)
+    store = ConceptStore.build(ctx, intents, plan=plan)
+    basis = extract_bases(store, min_conf=0.1)
+    index = RuleIndex.build(basis, plan=plan)
+    qe = QueryEngine(store, QueryConfig(slots=8))
+    return ctx, basis, index, qe
+
+
+def _rule_oracle(index, q, k, min_conf, metric):
+    app = [
+        r
+        for r in range(index.n_rules)
+        if bool(bitset.is_subset(index.premise_np[r], q))
+        and index.confidence_np[r] >= np.float32(min_conf)
+    ]
+    ranked = sorted(app, key=lambda r: (-metric[r], r))[:k]
+    ids = ranked + [-1] * (k - len(ranked))
+    union = np.zeros(index.premise_np.shape[1], np.uint32)
+    for r in app:
+        union |= index.added_np[r]
+    return ids, union
+
+
+@pytest.mark.parametrize("rank_by", ["confidence", "lift"])
+def test_rules_batch_vs_oracle(served_rules, rank_by):
+    ctx, basis, index, qe = served_rules
+    rng = np.random.default_rng(4)
+    qs = ctx.rows[rng.integers(0, ctx.n_objects, 11)] & bitset.pack_bool(
+        rng.random((11, ctx.n_attrs)) < 0.5, ctx.W
+    )  # odd batch: exercises slot padding
+    qs[0] = index.premise_np[0]  # guaranteed hit
+    metric = (
+        index.confidence_np if rank_by == "confidence" else index.lift_np
+    )
+    before_rounds = qe.stats.collective_rounds
+    ids, scores, cons = qe.rules_batch(
+        index, qs, k=4, min_conf=0.4, rank_by=rank_by
+    )
+    assert qe.stats.collective_rounds == before_rounds  # table read only
+    for b, q in enumerate(qs):
+        ref_ids, ref_union = _rule_oracle(index, q, 4, 0.4, metric)
+        assert list(ids[b]) == ref_ids
+        np.testing.assert_array_equal(cons[b], ref_union)
+        for slot, r in enumerate(ids[b]):
+            if r >= 0:
+                assert scores[b, slot] == np.float32(metric[r])
+            else:
+                assert scores[b, slot] == -1.0
+
+
+def test_rules_batch_edge_cases(served_rules):
+    ctx, basis, index, qe = served_rules
+    # empty batch: no dispatch, shapes preserved
+    ids, scores, cons = qe.rules_batch(index, np.zeros((0, ctx.W), np.uint32))
+    assert ids.shape == (0, 5) and cons.shape == (0, ctx.W)
+    # min_conf above every rule: all misses, empty consequents
+    qs = ctx.rows[:3]
+    ids, scores, cons = qe.rules_batch(index, qs, k=3, min_conf=1.1)
+    assert np.all(ids == -1) and np.all(scores == -1.0)
+    assert not cons.any()
+    with pytest.raises(ValueError, match="rank_by"):
+        qe.rules_batch(index, qs, rank_by="support")
+    # implications lead the combined table and rank first by confidence
+    full_q = np.full((1, ctx.W), 0xFFFFFFFF, np.uint32)
+    ids, scores, _ = qe.rules_batch(index, full_q, k=1, min_conf=0.0)
+    if index.n_exact:
+        assert scores[0, 0] == 1.0
+
+
+def test_rule_index_shapes_and_pads(served_rules):
+    _, basis, index, _ = served_rules
+    assert index.n_rules == basis.n_implications + basis.n_partial
+    assert index.cap >= index.n_rules and index.cap % 8 == 0
+    assert np.all(index.confidence_np[: index.n_exact] == 1.0)
+    assert np.all(index.confidence_np[index.n_exact :] < 1.0)
+
+
+# -- end-to-end over the iceberg store --------------------------------------
+
+
+def test_extract_bases_on_iceberg_store_consistent():
+    """The iceberg family is intersection-closed, so φ is a closure
+    operator and both bases stay well-defined; spot-check that rule math
+    agrees with raw-context counting."""
+    ctx = FormalContext.synthetic(60, 14, 0.3, seed=12)
+    eng = ClosureEngine(ctx, plan=ShardPlan.simulated(4, block_n=8),
+                        backend="jnp")
+    res = mine_iceberg(ctx, eng, min_support=0.15, local_prune=True)
+    store = ConceptStore.build(ctx, res.intents, plan=eng.plan)
+    basis = extract_bases(store, min_conf=0.3)
+    for p, a, sp in zip(
+        basis.partial.premise, basis.partial.added, basis.partial.support
+    ):
+        assert bitset.is_subset((p | a)[None, :], ctx.rows).sum() == sp
+    s = resolve_min_support(0.15, ctx.n_objects)
+    assert np.all(basis.partial.support >= s)

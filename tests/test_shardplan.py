@@ -226,3 +226,115 @@ def test_auto_engine_mines_identically_and_records_choices(ctx, ref):
 def test_auto_rejects_unknown_schedule():
     with pytest.raises(ValueError):
         ShardPlan.simulated(4, reduce_impl="autotune")
+
+
+# -- mixed out-specs (sharded + replicated outputs from one region) ----------
+
+
+def test_spmd_mixed_out_specs_simulated():
+    import jax.numpy as jnp
+    from jax import lax
+
+    plan = ShardPlan.simulated(4, block_n=2)
+    rows = np.arange(4 * 2 * 2 * 3, dtype=np.uint32).reshape(-1, 3)
+    placed = plan.place_rows(rows)
+
+    def body(rows_local, delta):
+        total = lax.psum(
+            rows_local.sum(dtype=jnp.int32), plan.reduce_axes
+        )
+        start = plan.shard_index() * rows_local.shape[0]
+        gidx = start + jnp.arange(rows_local.shape[0], dtype=jnp.int32)
+        return rows_local + delta, total, gidx
+
+    fn = jax.jit(plan.spmd(body, n_rep=1, out_shard=(True, False, True)))
+    shifted, total, gidx = fn(placed, jnp.uint32(1))
+    # sharded outputs keep the plan's placement layout (== place_rows)
+    assert shifted.shape == placed.shape
+    np.testing.assert_array_equal(
+        np.asarray(shifted).reshape(-1, 3), rows + 1
+    )
+    # shard_index orders shards exactly as place_rows splits the rows
+    np.testing.assert_array_equal(
+        np.asarray(gidx).reshape(-1), np.arange(rows.shape[0])
+    )
+    assert int(total) == rows.sum()
+
+
+def test_spmd_mixed_out_specs_mesh_matches_simulated():
+    import jax.numpy as jnp
+    from jax import lax
+
+    rows = np.arange(6 * 3, dtype=np.uint32).reshape(-1, 3)
+    outs = []
+    for plan in (
+        ShardPlan.simulated(1, block_n=2),
+        ShardPlan.over_mesh(_one_device_mesh(), block_n=2),
+    ):
+        placed = plan.place_rows(rows)
+
+        def body(rows_local, delta):
+            total = lax.psum(
+                rows_local.sum(dtype=jnp.int32), plan.reduce_axes
+            )
+            return rows_local + delta, total
+
+        fn = jax.jit(plan.spmd(body, n_rep=1, out_shard=(True, False)))
+        shifted, total = fn(placed, jnp.uint32(3))
+        outs.append((np.asarray(shifted).reshape(-1, 3), int(total)))
+    np.testing.assert_array_equal(outs[0][0], outs[1][0])
+    assert outs[0][1] == outs[1][1]
+
+
+def test_spmd_out_shard_rejects_post():
+    plan = ShardPlan.simulated(2)
+    with pytest.raises(ValueError, match="mutually exclusive"):
+        plan.spmd(lambda r: r, n_rep=0, post=lambda x: x, out_shard=(True,))
+
+
+# -- hop-bytes calibration ---------------------------------------------------
+
+
+def test_hop_probe_measures_and_caches():
+    from repro.dist import shardplan as sp
+
+    sp._HOP_PROBE_CACHE.clear()
+    plan = ShardPlan.simulated(4, calibrate_hops=True)
+    # a real measurement yields a positive hop cost; a noise-floor probe
+    # keeps the default and must NOT claim calibration
+    if plan.hop_calibrated:
+        assert 1 <= plan.auto_hop_bytes <= 1 << 24
+    else:
+        assert plan.auto_hop_bytes == 4096
+    assert plan.describe()["hop_calibrated"] == plan.hop_calibrated
+    assert plan.describe()["auto_hop_bytes"] == plan.auto_hop_bytes
+    # second calibration hits the cache: same value, no re-measurement
+    key = next(iter(sp._HOP_PROBE_CACHE))
+    sp._HOP_PROBE_CACHE[key] = (12345, True)
+    cached = ShardPlan.simulated(4, calibrate_hops=True)
+    assert cached.auto_hop_bytes == 12345 and cached.hop_calibrated
+    sp._HOP_PROBE_CACHE.clear()
+    # uncalibrated plans keep the documented default
+    assert ShardPlan.simulated(4).auto_hop_bytes == 4096
+    assert not ShardPlan.simulated(4).hop_calibrated
+
+
+def test_calibrated_hop_bytes_flow_into_stats_and_auto(ctx):
+    import dataclasses as dc
+
+    from repro.query import ConceptStore, QueryEngine
+
+    plan = dc.replace(
+        ShardPlan.simulated(4, reduce_impl="auto"),
+        auto_hop_bytes=1 << 20, hop_calibrated=True,
+    )
+    eng = ClosureEngine(ctx, plan=plan, backend="jnp")
+    assert eng.stats.auto_hop_bytes == 1 << 20
+    assert eng.stats.hop_calibrated
+    # a huge measured hop cost makes the single-pass schedule win even at
+    # large batches — the calibration actually steers the autotuner
+    assert plan.resolve_impl(8192, 5, 133) == "allgather"
+    store = ConceptStore.build(ctx, all_closures_batched(ctx), plan=plan)
+    qe = QueryEngine(store)
+    assert qe.stats.auto_hop_bytes == 1 << 20
+    assert qe.stats.hop_calibrated
