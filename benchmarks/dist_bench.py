@@ -1,6 +1,6 @@
 """ShardPlan scaling sweep: 1→8 object shards × reduce schedule (§Dist).
 
-Two grids over MRGanter+ on the device pipeline, both through
+Three grids over MRGanter+ on the device pipeline, all through
 :class:`repro.dist.ShardPlan` (simulated geometry — the arithmetic and the
 analytic wire model are shard-count-exact on one CPU; the same plans run
 unchanged over a real mesh, equivalence-tested in
@@ -13,9 +13,13 @@ tests/test_distributed_8dev.py):
     on: the paper's MRGanter+ claim that per-partition pruning shrinks
     what the reduce moves.  The reduce is sized by the post-prune bucket,
     so pruned candidates never enter the collective.
+  * **2-D (candidate × object) A/B** — 8 total devices split obj×cand ∈
+    {8×1, 4×2, 2×4} at a fixed per-device chunk budget: the frontier-axis
+    decomposition's reduce-bytes/round against the 1-D plan, with the
+    concept sets asserted identical before any timing.
 
-Writes BENCH_dist.json; the headline is the pruning byte ratio under the
-production rsag schedule.
+Writes BENCH_dist.json; headlines are the pruning byte ratio and the
+1-D vs 2-D reduce-bytes ratio under the production rsag schedule.
 """
 
 from __future__ import annotations
@@ -32,15 +36,20 @@ from repro.dist.collectives import IMPLS
 from repro.dist.shardplan import ShardPlan
 
 
-def _timed_run(ctx, plan: ShardPlan, *, local_prune: bool) -> dict:
+def _timed_run(ctx, plan: ShardPlan, *, local_prune: bool, keys_out=None) -> dict:
     """Warm-run protocol: one run populates the plan's jit caches, stats
-    reset, then the steady-state run is timed."""
+    reset, then the steady-state run is timed.  ``keys_out`` (a list)
+    receives the run's concept-key set for pre-timing identity checks."""
     eng = ClosureEngine(ctx, plan=plan, backend="jnp")
     mrganter_plus(ctx, eng, local_prune=local_prune)
     eng.stats = EngineStats()
     t0 = time.perf_counter()
     res = mrganter_plus(ctx, eng, local_prune=local_prune)
     wall = time.perf_counter() - t0
+    if keys_out is not None:
+        from repro.core import bitset
+
+        keys_out.append({bitset.key_bytes(y) for y in res.intents})
     st = eng.stats
     rounds = max(1, st.rounds)
     return {
@@ -77,6 +86,22 @@ def run(
         for prune in (False, True):
             pruning.append(_timed_run(ctx, plan, local_prune=prune))
 
+    # 2-D A/B: 8 total devices split between the object and candidate
+    # axes at a fixed per-device chunk budget.  Concept-set identity with
+    # the 1-D plan is asserted BEFORE any timing is reported.
+    cand_keys: list = []
+    cand2d = []
+    for n_obj, n_cand in ((8, 1), (4, 2), (2, 4)):
+        plan = ShardPlan.simulated(
+            n_obj, cand_parts=n_cand, reduce_impl="rsag", max_batch=1024
+        )
+        cand2d.append(
+            _timed_run(ctx, plan, local_prune=True, keys_out=cand_keys)
+        )
+    cand_identical = all(k == cand_keys[0] for k in cand_keys[1:])
+    if not cand_identical:
+        raise RuntimeError("1-D vs 2-D concept sets diverged")
+
     def _ab(impl: str) -> tuple[dict, dict]:
         off, on = (
             r for r in pruning if r["plan"]["reduce_impl"] == impl
@@ -84,10 +109,14 @@ def run(
         return off, on
 
     off, on = _ab("rsag")
+    one_d, best_2d = cand2d[0], min(
+        cand2d[1:], key=lambda r: r["reduce_bytes_total"]
+    )
     payload = {
         "dataset": dataclasses.asdict(spec),
         "scaling": scaling,
         "pruning_ab": pruning,
+        "cand2d_ab": cand2d,
         "headline": {
             "plan": f"simulated {prune_ab_parts}-shard, rsag schedule",
             "reduce_bytes_per_round_no_prune": off["reduce_bytes_per_round"],
@@ -95,6 +124,21 @@ def run(
             "reduce_bytes_ratio": round(
                 off["reduce_bytes_total"] / max(1, on["reduce_bytes_total"]), 2
             ),
+        },
+        "headline_2d": {
+            "plan_1d": "simulated 8×1 obj shards, rsag",
+            "plan_2d": (
+                f"simulated {best_2d['plan']['n_parts']}×"
+                f"{best_2d['plan']['cand_parts']} obj×cand, rsag"
+            ),
+            "reduce_bytes_per_round_1d": one_d["reduce_bytes_per_round"],
+            "reduce_bytes_per_round_2d": best_2d["reduce_bytes_per_round"],
+            "reduce_bytes_ratio_1d_over_2d": round(
+                one_d["reduce_bytes_total"]
+                / max(1, best_2d["reduce_bytes_total"]),
+                2,
+            ),
+            "concept_sets_identical": cand_identical,  # checked pre-timing
         },
     }
     with open(out_path, "w") as f:
@@ -118,9 +162,22 @@ def run(
             f"reduce_B_per_round={r['reduce_bytes_per_round']}"
             f"|closures={r['closures_computed']}",
         ))
+    for r in cand2d:
+        p = r["plan"]
+        out.append(row(
+            f"dist/cand2d/rsag/obj={p['n_parts']}xcand={p['cand_parts']}",
+            1e6 * r["wall_time_s"],
+            f"reduce_B_per_round={r['reduce_bytes_per_round']}"
+            f"|concepts={r['n_concepts']}|rounds={r['rounds']}",
+        ))
     out.append(row(
         "dist/headline_prune_bytes_ratio",
         payload["headline"]["reduce_bytes_ratio"],
         f"rsag_k{prune_ab_parts}_noprune_vs_prune|json={out_path}",
+    ))
+    out.append(row(
+        "dist/headline_2d_bytes_ratio",
+        payload["headline_2d"]["reduce_bytes_ratio_1d_over_2d"],
+        f"rsag_8dev_1d_vs_2d|json={out_path}",
     ))
     return out

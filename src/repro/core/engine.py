@@ -227,6 +227,69 @@ class ClosureEngine:
 
         return dispatch
 
+    def spmd_step_cand(
+        self,
+        post,
+        merge,
+        *,
+        with_supports: bool = False,
+        n_cand: int = 1,
+        n_post_rep: int = 0,
+        n_merge_rep: int = 0,
+    ):
+        """2-D twin of :meth:`spmd_step` for candidate-sharded chunks.
+
+        The returned callable is ``step(rows, *cand_ops, *extras)``: the
+        ``n_cand`` candidate operands (seeds first, then lineage like
+        parents/gens) are blocked over the plan's candidate axis, each
+        block runs map → AND-allreduce over the *object* axes at the block
+        batch size, ``post(cand_idx, gc[, gs], *passthrough, *extras)``
+        filters block-locally, and only then are survivors all-gathered
+        along ``cand`` and handed to ``merge``.  Pruned candidates never
+        replicate across the candidate axis.  Lineage operands beyond the
+        seeds ride through ``body`` untouched so the block-local filter
+        sees its own block's rows.
+        """
+        plan, ctx = self.plan, self.ctx
+        local_closure = self._local_closure()
+        axes = plan.reduce_axes
+        mask_np, n_pad = self._mask_np, self.n_pad_rows
+
+        def make(impl):
+            def body(rows_local, *cand_ops):
+                lc, ls = local_closure(rows_local, cand_ops[0])
+                gc = collectives.and_allreduce(
+                    lc, axes, impl=impl, n_attrs=ctx.n_attrs
+                )
+                gc = gc & jnp.asarray(mask_np)
+                if with_supports:
+                    return (gc, lax.psum(ls, axes) - n_pad, *cand_ops[1:])
+                return (gc, *cand_ops[1:])
+
+            return jax.jit(
+                plan.spmd_cand(
+                    body,
+                    n_cand=n_cand,
+                    n_rep=0,
+                    post=post,
+                    n_post_rep=n_post_rep,
+                    merge=merge,
+                    n_merge_rep=n_merge_rep,
+                )
+            )
+
+        if plan.reduce_impl != "auto":
+            return make(plan.reduce_impl)
+
+        steps = {impl: make(impl) for impl in AUTO_IMPLS}
+
+        def dispatch(rows, cands, *extras):
+            block = cands.shape[0] // plan.cand_parts
+            impl = plan.resolve_impl(block, ctx.W, ctx.n_attrs)
+            return steps[impl](rows, cands, *extras)
+
+        return dispatch
+
     # -- stats accounting ---------------------------------------------------
 
     def charge_round(self, cap: int, n_valid: int, *, count_round: bool = True):
@@ -239,6 +302,22 @@ class ClosureEngine:
             cap, self.ctx.W, self.ctx.n_attrs
         )
         impl = self.plan.resolve_impl(cap, self.ctx.W, self.ctx.n_attrs)
+        self.stats.reduce_rounds[impl] = self.stats.reduce_rounds.get(impl, 0) + 1
+
+    def charge_round_cand(
+        self, block_cap: int, n_valid: int, *, count_round: bool = True
+    ):
+        """Ledger one 2-D dispatch: ``cand_parts`` blocks of ``block_cap``
+        candidates each (object reduce per block + the cand-axis survivor
+        gather — see ShardPlan.modeled_round_bytes_cand)."""
+        self.stats.closure_calls += 1
+        if count_round:
+            self.stats.rounds += 1
+        self.stats.closures_computed += n_valid
+        self.stats.modeled_comm_bytes += self.plan.modeled_round_bytes_cand(
+            block_cap, self.ctx.W, self.ctx.n_attrs
+        )
+        impl = self.plan.resolve_impl(block_cap, self.ctx.W, self.ctx.n_attrs)
         self.stats.reduce_rounds[impl] = self.stats.reduce_rounds.get(impl, 0) + 1
 
     # -- public API ----------------------------------------------------------

@@ -21,7 +21,16 @@ mesh the expansion and pruning stages compute partition-locally on every
 device (no central expand + broadcast), and the only wire traffic per round
 is the AND-allreduce itself — sized by the *pruned* candidate count, since
 the chunk buckets are chosen after the dedupe.  Pruned candidates never
-cross the wire.  XLA shapes are static, so the one scalar sync per round
+cross the wire.
+
+On a 2-D plan (``ShardPlan.cand_parts > 1`` — the Spark reproduction's
+row-block × column-block decomposition) the chunk itself is blocked over
+the candidate axis: each device closes only its ``1/cand_parts`` block of
+the chunk, the AND-allreduce runs over the object axes at the *block*
+batch size, the driver filter runs block-locally, and the blocks' compacted
+survivors are all-gathered along ``cand`` afterwards — so one round absorbs
+``cand_parts × max_batch`` candidates at the same per-device footprint, and
+pruned candidates never replicate across the candidate axis either.  XLA shapes are static, so the one scalar sync per round
 (the surviving-seed count) is what lets the reduce shrink to the pruned
 bucket; everything else stays on device.
 
@@ -85,7 +94,14 @@ def _sort_unique(seeds: jax.Array, valid: jax.Array, *arrays) -> tuple:
 
 def slice_pad(arr, lo: int, cap: int, fill=0):
     """Static-shape device slice ``arr[lo:lo+cap]``, zero-padded past the
-    end — keeps chunk shapes bucketed without a host round-trip."""
+    end — keeps chunk shapes bucketed without a host round-trip.
+
+    This is a *windowing* primitive: rows past ``lo + cap`` are simply not
+    in this window, and the caller is responsible for covering them with
+    further windows (the drivers' chunk loops) — callers that use it to
+    retain an entire array must size ``cap`` to hold every live row (see
+    :meth:`DeviceFrontier._adopt`, which guards exactly that).
+    """
     chunk = arr[lo : lo + cap]
     short = cap - chunk.shape[0]
     if short > 0:
@@ -150,6 +166,54 @@ def unique_closures(closures, n_valid):
     valid = jnp.arange(closures.shape[0]) < n_valid
     n, closures = _sort_unique(closures, valid)
     return closures, n
+
+
+# -- candidate-axis (2-D) block merges ---------------------------------------
+# Post-reduce filters run block-locally on each candidate shard; these
+# merges consume the cand-axis all-gather of the filtered blocks
+# ([cand_parts, Bc, ...] stacks + per-block survivor counts) and produce
+# the chunk's global survivors.  Shard-invariant by construction (their
+# inputs are the gathered stacks), so the plan places them like any fused
+# post stage.
+
+
+def _block_valid(counts, Bc):
+    """Flattened validity mask for gathered [cand, Bc, ...] block stacks."""
+    return (jnp.arange(Bc)[None, :] < counts[:, None]).reshape(-1)
+
+
+def merge_blocks_plain(gc_blocks):
+    """No filter ran: concatenating blocks restores the chunk's row order
+    (block i held rows [i·Bc, (i+1)·Bc) of the chunk)."""
+    return gc_blocks.reshape(-1, gc_blocks.shape[-1])
+
+
+def merge_blocks_compact(gc_blocks, counts):
+    """Compact each block's survivors (already front-packed) into one run."""
+    valid = _block_valid(counts, gc_blocks.shape[1])
+    n, gc = _compact(valid, gc_blocks.reshape(-1, gc_blocks.shape[-1]))
+    return gc, n
+
+
+def merge_blocks_unique(gc_blocks, counts):
+    """Block-local dedupe removed intra-block duplicates; this pass removes
+    the cross-block ones (sorted-unique over the concatenated survivors)."""
+    valid = _block_valid(counts, gc_blocks.shape[1])
+    n, gc = _sort_unique(gc_blocks.reshape(-1, gc_blocks.shape[-1]), valid)
+    return gc, n
+
+
+def merge_blocks_cbo(gc_blocks, gen_blocks, counts):
+    """CbO survivors with their generator lineage (canonicity already ran
+    block-locally; canonical survivors are globally unique by the CbO
+    generation-tree argument, so compaction is the whole merge)."""
+    valid = _block_valid(counts, gc_blocks.shape[1])
+    n, gc, gens = _compact(
+        valid,
+        gc_blocks.reshape(-1, gc_blocks.shape[-1]),
+        gen_blocks.reshape(-1),
+    )
+    return gc, gens, n
 
 
 def filter_canonical(closures, parents, gens, n_valid, LOW):
@@ -254,6 +318,44 @@ class DeviceFrontier:
                 n, gc, gens = _compact(ok, gc, gens)
                 return gc, gens, n
 
+            # Candidate-axis (2-D) posts: the same filters made
+            # *block-local* — each candidate shard filters its own block of
+            # the chunk right after the object-axis reduce, using its block
+            # index to reconstruct row validity from the replicated valid
+            # count.  Survivors are all-gathered along ``cand`` only after
+            # these run (the merge_blocks_* stages above finish the job).
+            def _bvalid(idx, Bc, n_valid):
+                return (jnp.arange(Bc) + idx * Bc) < n_valid
+
+            def post2d_unique(idx, gc, n_valid):
+                n, gc = _sort_unique(gc, _bvalid(idx, gc.shape[0], n_valid))
+                return gc, n
+
+            def post2d_iceberg(idx, gc, gs, n_valid, min_sup):
+                keep = _bvalid(idx, gc.shape[0], n_valid) & (gs >= min_sup)
+                n, gc = _compact(keep, gc)
+                return gc, n
+
+            def post2d_iceberg_unique(idx, gc, gs, n_valid, min_sup):
+                keep = _bvalid(idx, gc.shape[0], n_valid) & (gs >= min_sup)
+                n, gc = _sort_unique(gc, keep)
+                return gc, n
+
+            def post2d_cbo(idx, gc, parents, gens, n_valid):
+                ok = lectic.feasible_jnp(gc, parents, gens, jnp.asarray(t.LOW))
+                ok = ok & _bvalid(idx, gc.shape[0], n_valid)
+                n, gc, gens = _compact(ok, gc, gens)
+                return gc, gens, n
+
+            def post2d_cbo_iceberg(
+                idx, gc, gs, parents, gens, n_valid, min_sup
+            ):
+                ok = lectic.feasible_jnp(gc, parents, gens, jnp.asarray(t.LOW))
+                ok = ok & _bvalid(idx, gc.shape[0], n_valid)
+                ok = ok & (gs >= min_sup)
+                n, gc, gens = _compact(ok, gc, gens)
+                return gc, gens, n
+
             def post_ganter_iceberg(gc, gs, Y, valid, min_sup):
                 # Alg.-5 scan restricted to *frequent* successors: the next
                 # frequent closure in lectic order is Y ⊕ a for the largest
@@ -298,6 +400,33 @@ class DeviceFrontier:
                     "ganter_iceberg": lambda: engine.spmd_step(
                         post_ganter_iceberg, with_supports=True, n_extra=3
                     ),
+                    # 2-D (candidate × object) variants: one plan round per
+                    # chunk of cand_parts blocks — map + object-axis reduce
+                    # per block, block-local filter, cand-axis survivor
+                    # gather, merge.  Built only when a driver runs on a
+                    # cand-sharded plan.
+                    "plain2d": lambda: engine.spmd_step_cand(
+                        None, merge_blocks_plain
+                    ),
+                    "unique2d": lambda: engine.spmd_step_cand(
+                        post2d_unique, merge_blocks_unique, n_post_rep=1
+                    ),
+                    "iceberg2d": lambda: engine.spmd_step_cand(
+                        post2d_iceberg, merge_blocks_compact,
+                        with_supports=True, n_post_rep=2,
+                    ),
+                    "iceberg_unique2d": lambda: engine.spmd_step_cand(
+                        post2d_iceberg_unique, merge_blocks_unique,
+                        with_supports=True, n_post_rep=2,
+                    ),
+                    "cbo2d": lambda: engine.spmd_step_cand(
+                        post2d_cbo, merge_blocks_cbo,
+                        n_cand=3, n_post_rep=1,
+                    ),
+                    "cbo_iceberg2d": lambda: engine.spmd_step_cand(
+                        post2d_cbo_iceberg, merge_blocks_cbo,
+                        with_supports=True, n_cand=3, n_post_rep=2,
+                    ),
                 },
             }
             engine._frontier_cache = cache
@@ -338,7 +467,22 @@ class DeviceFrontier:
         self._n = n
 
     def _adopt(self, frontier_dev, gens_dev, n: int):
-        """Keep device survivors as the next frontier (no host round-trip)."""
+        """Keep device survivors as the next frontier (no host round-trip).
+
+        ``slice_pad`` here only ever *grows* the buffer to the next bucket:
+        the guard makes dropping live rows a loud error instead of a silent
+        truncation.  Frontier size itself is unbounded — per-round device
+        footprint is bounded by the chunk loops (``max_batch`` per chunk,
+        × ``cand_parts`` blocks on a 2-D plan), never by this buffer.
+        """
+        if n > frontier_dev.shape[0]:
+            raise RuntimeError(
+                f"_adopt: {n} surviving frontier rows but only "
+                f"{frontier_dev.shape[0]} device rows were materialized — "
+                "adopting would silently drop concepts.  Raise max_batch or "
+                "shard the frontier axis (ShardPlan cand_parts / "
+                "--cand-shards)."
+            )
         cap = bucket_size(max(1, n))
         self._frontier = slice_pad(frontier_dev, 0, cap)
         self._gens = None if gens_dev is None else slice_pad(gens_dev, 0, cap)
@@ -350,6 +494,28 @@ class DeviceFrontier:
         st.d2h_transfers += 1
         st.d2h_bytes += out.nbytes
         return out
+
+    # -- chunk geometry ----------------------------------------------------
+
+    @property
+    def cand_parts(self) -> int:
+        return self.plan.cand_parts
+
+    @property
+    def round_budget(self) -> int:
+        """Candidates one closure round absorbs.  The driver picks chunking
+        vs candidate-sharding from plan geometry: a 1-D plan chunks the
+        stream at ``max_batch``; a cand-sharded plan runs ``cand_parts``
+        blocks of up to ``max_batch`` each in ONE round, so the per-round
+        budget multiplies while each device's block stays bounded."""
+        return self.engine.max_batch * self.cand_parts
+
+    def _block_cap(self, b: int) -> int:
+        """Bucketed per-block capacity for a chunk of ``b`` candidates
+        spread over the plan's candidate blocks."""
+        return bucket_size(
+            -(-b // self.cand_parts), minimum=self.engine.min_bucket
+        )
 
     # -- fused per-iteration steps ----------------------------------------
 
@@ -379,26 +545,42 @@ class DeviceFrontier:
             return np.zeros((0, self.W), np.uint32)
         uniq_parts = []
         first = True
-        for lo in range(0, n_seeds, eng.max_batch):
-            b = min(eng.max_batch, n_seeds - lo)
-            cap = bucket_size(b, minimum=eng.min_bucket)
+        two_d = self.cand_parts > 1
+        for lo in range(0, n_seeds, self.round_budget):
+            b = min(self.round_budget, n_seeds - lo)
+            if two_d:
+                blk = self._block_cap(b)
+                cap = blk * self.cand_parts
+            else:
+                cap = blk = bucket_size(b, minimum=eng.min_bucket)
             chunk = slice_pad(seeds, lo, cap)
+
+            def charge():
+                if two_d:
+                    eng.charge_round_cand(blk, b, count_round=first)
+                else:
+                    eng.charge_round(cap, b, count_round=first)
+
             if min_support is not None:
                 name = "iceberg_unique" if self.dedupe_closures else "iceberg"
+                if two_d:
+                    name += "2d"
                 cl, k_dev = self._step_fn(name)(
                     eng.rows, chunk, jnp.int32(b), jnp.int32(min_support)
                 )
-                eng.charge_round(cap, b, count_round=first)
+                charge()
                 uniq_parts.append(self._download(cl, int(k_dev)))
             elif self.dedupe_closures:
-                cl_u, k_dev = self._step_fn("unique")(
+                cl_u, k_dev = self._step_fn("unique2d" if two_d else "unique")(
                     eng.rows, chunk, jnp.int32(b)
                 )
-                eng.charge_round(cap, b, count_round=first)
+                charge()
                 uniq_parts.append(self._download(cl_u, int(k_dev)))
             else:
-                closures = self._step_fn("plain")(eng.rows, chunk)
-                eng.charge_round(cap, b, count_round=first)
+                closures = self._step_fn("plain2d" if two_d else "plain")(
+                    eng.rows, chunk
+                )
+                charge()
                 uniq_parts.append(self._download(closures, b))
             first = False
         return np.concatenate(uniq_parts, axis=0)
@@ -427,9 +609,14 @@ class DeviceFrontier:
             return np.zeros((0, self.W), np.uint32), 0, 0
         surv_z, surv_g, counts = [], [], []
         first = True
-        for lo in range(0, n_seeds, eng.max_batch):
-            b = min(eng.max_batch, n_seeds - lo)
-            cap = bucket_size(b, minimum=eng.min_bucket)
+        two_d = self.cand_parts > 1
+        for lo in range(0, n_seeds, self.round_budget):
+            b = min(self.round_budget, n_seeds - lo)
+            if two_d:
+                blk = self._block_cap(b)
+                cap = blk * self.cand_parts
+            else:
+                cap = blk = bucket_size(b, minimum=eng.min_bucket)
             args = (
                 eng.rows,
                 slice_pad(seeds, lo, cap),
@@ -438,12 +625,16 @@ class DeviceFrontier:
                 jnp.int32(b),
             )
             if min_support is not None:
-                z, g, k_dev = self._step_fn("cbo_iceberg")(
+                name = "cbo_iceberg2d" if two_d else "cbo_iceberg"
+                z, g, k_dev = self._step_fn(name)(
                     *args, jnp.int32(min_support)
                 )
             else:
-                z, g, k_dev = self._step_fn("cbo")(*args)
-            eng.charge_round(cap, b, count_round=first)
+                z, g, k_dev = self._step_fn("cbo2d" if two_d else "cbo")(*args)
+            if two_d:
+                eng.charge_round_cand(blk, b, count_round=first)
+            else:
+                eng.charge_round(cap, b, count_round=first)
             first = False
             k = int(k_dev)
             if k:
@@ -472,7 +663,14 @@ class DeviceFrontier:
         "no frequent successor exists" — when True, the returned intent is
         garbage the caller must NOT emit (the full-lattice contract emits
         ⊤ and reports done in the same step; the iceberg walk only learns
-        it is done from an empty scan)."""
+        it is done from an empty scan).
+
+        Always runs the 1-D step, even on a cand-sharded plan: the MRGanter
+        frontier is a single intent whose ≤ n_attrs seeds fit any block
+        budget, and the Alg.-5 argmax-select needs every seed's closure in
+        one place anyway (a cand split would immediately re-gather).  The
+        1-D region is candidate-axis-invariant, so on a 2-D mesh it simply
+        replicates over the cand axis."""
         eng = self.engine
         Y = self._frontier[0]
         seeds, valid = lectic.oplus_seeds_jnp(

@@ -15,7 +15,11 @@ Two frontier substrates (``pipeline=``):
     :mod:`repro.core.frontier`: seed expansion, dedupe/canonicity and
     feasibility all run as jitted bucket-shaped device ops; the host loop
     is convergence control plus the global registry.  O(1) bulk transfers
-    per iteration.
+    per iteration.  The chunk geometry follows the plan: a 1-D plan
+    chunks the candidate stream at ``max_batch``; a cand-sharded plan
+    (``ShardPlan.cand_parts > 1``) absorbs ``cand_parts × max_batch``
+    candidates per round by blocking each chunk over the candidate axis
+    (MRGanter+/MRCbo; MRGanter's single-intent frontier stays 1-D).
   * ``"host"`` — the paper-literal host loop (per-intent Python seed
     building, per-row hash inserts).  Kept as the equivalence oracle and
     the baseline for EXPERIMENTS.md §Perf.

@@ -20,7 +20,16 @@ behind one abstraction that owns
     allgather-vs-rsag per round by minimizing the α-β cost model
     (wire volume + ring-step latency) for that round's padded batch.
 
-``spmd(body, n_rep)`` is the single execution primitive: ``body`` receives
+The plan is 2-D capable: besides the object axes it can block the
+*candidate/frontier* axis over ``cand_parts`` devices (a ``"cand"`` mesh
+axis) or simulated lanes — the Spark FCA reproduction's row-block ×
+column-block decomposition.  ``spmd_cand`` is the 2-D execution
+primitive: candidate operands are blocked along ``cand``, the
+AND-allreduce runs over the object axes only (inside each block, at the
+block batch size), driver filters run block-locally, and only the
+filtered survivors are all-gathered along ``cand``.
+
+``spmd(body, n_rep)`` is the 1-D execution primitive: ``body`` receives
 the local context shard plus replicated operands and may call collectives
 over ``plan.reduce_axes``.  On a mesh plan it lowers through
 ``shard_map``; on a simulated plan the *same body* runs under ``jax.vmap``
@@ -51,6 +60,14 @@ from repro.dist.partition import object_axes
 # shard body reference ``plan.reduce_axes`` and never this name directly.
 SIM_AXIS = "objpart"
 
+# vmap axis name carrying the simulated *candidate* partition (the frontier
+# axis of the 2-D decomposition).  On a mesh the candidate axis is the mesh
+# axis named "cand"; bodies reference ``plan.cand_axes``.
+SIM_CAND_AXIS = "candpart"
+
+# Mesh axis name carrying the candidate partition on real meshes.
+CAND_AXIS = "cand"
+
 # Schedules the autotuner arbitrates between. ``pmin`` is excluded: its
 # unpacked-lane volume is strictly dominated for every batch size.
 AUTO_IMPLS = ("allgather", "rsag")
@@ -66,6 +83,14 @@ class ShardPlan:
     reduce_impl: str = "rsag"
     block_n: int = 256
     max_batch: int = 8192
+    # 2-D decomposition: the candidate/frontier axis is blocked over
+    # ``cand_parts`` devices (mesh axes ``cand_axis_names``) or simulated
+    # lanes.  Objects stay sharded over ``axis_names`` as before; the
+    # AND-allreduce runs inside each candidate block (over the object axes
+    # only) and survivors are all-gathered along ``cand`` after the fused
+    # post-reduce filters — see :meth:`spmd_cand`.
+    cand_parts: int = 1
+    cand_axis_names: tuple[str, ...] = ()
     # latency term of the "auto" schedule model: bandwidth-equivalent byte
     # cost of one ring step per device (collectives.modeled_cost_bytes).
     # The 4096 B default is replaced by a measured value when the plan is
@@ -84,6 +109,19 @@ class ShardPlan:
             )
         if self.n_parts < 1:
             raise ValueError(f"n_parts must be >= 1, got {self.n_parts}")
+        if self.cand_parts < 1:
+            raise ValueError(
+                f"cand_parts must be >= 1, got {self.cand_parts}"
+            )
+        if self.mesh is not None and self.cand_parts > 1:
+            k = 1
+            for a in self.cand_axis_names:
+                k *= self.mesh.shape[a]
+            if k != self.cand_parts:
+                raise ValueError(
+                    f"cand_parts ({self.cand_parts}) does not match the "
+                    f"mesh's candidate axes {self.cand_axis_names} ({k})"
+                )
 
     # -- constructors ------------------------------------------------------
 
@@ -92,12 +130,14 @@ class ShardPlan:
         cls,
         n_parts: int = 1,
         *,
+        cand_parts: int = 1,
         reduce_impl: str = "rsag",
         block_n: int = 256,
         max_batch: int = 8192,
         calibrate_hops: bool = False,
     ) -> "ShardPlan":
-        """``n_parts`` object shards on one device (reshape + named vmap)."""
+        """``n_parts`` object shards on one device (reshape + named vmap);
+        ``cand_parts`` > 1 adds simulated candidate-axis lanes."""
         plan = cls(
             mesh=None,
             axis_names=(SIM_AXIS,),
@@ -105,6 +145,8 @@ class ShardPlan:
             reduce_impl=reduce_impl,
             block_n=block_n,
             max_batch=max_batch,
+            cand_parts=cand_parts,
+            cand_axis_names=(SIM_CAND_AXIS,) if cand_parts > 1 else (),
         )
         return plan.calibrate_hops() if calibrate_hops else plan
 
@@ -114,15 +156,21 @@ class ShardPlan:
         mesh: Mesh,
         *,
         axis_names: tuple[str, ...] | None = None,
+        cand_axis_names: tuple[str, ...] | None = None,
         reduce_impl: str = "rsag",
         block_n: int = 256,
         max_batch: int = 8192,
         calibrate_hops: bool = False,
     ) -> "ShardPlan":
         """Real SPMD over ``mesh``; object rows sharded over ``axis_names``
-        (default: whichever of the pod×data axes the mesh carries)."""
+        (default: whichever of the pod×data axes the mesh carries).  A mesh
+        axis named ``"cand"`` (or explicit ``cand_axis_names``) blocks the
+        candidate/frontier axis across devices — the 2-D decomposition."""
+        if cand_axis_names is None:
+            cand_axis_names = (CAND_AXIS,) if CAND_AXIS in mesh.shape else ()
         if axis_names is None:
             axis_names = object_axes(mesh)
+        axis_names = tuple(a for a in axis_names if a not in cand_axis_names)
         if not axis_names:
             raise ValueError(
                 f"mesh {dict(mesh.shape)} has none of the object axes"
@@ -130,6 +178,9 @@ class ShardPlan:
         k = 1
         for a in axis_names:
             k *= mesh.shape[a]
+        c = 1
+        for a in cand_axis_names:
+            c *= mesh.shape[a]
         plan = cls(
             mesh=mesh,
             axis_names=tuple(axis_names),
@@ -137,6 +188,8 @@ class ShardPlan:
             reduce_impl=reduce_impl,
             block_n=block_n,
             max_batch=max_batch,
+            cand_parts=c,
+            cand_axis_names=tuple(cand_axis_names) if c > 1 else (),
         )
         return plan.calibrate_hops() if calibrate_hops else plan
 
@@ -182,6 +235,19 @@ class ShardPlan:
         return self.axis_names if len(self.axis_names) > 1 else self.axis_names[0]
 
     @property
+    def cand_axes(self):
+        """Axis name(s) carrying the candidate partition (2-D plans only)."""
+        if self.cand_parts <= 1:
+            return None
+        if self.mesh is None:
+            return SIM_CAND_AXIS
+        return (
+            self.cand_axis_names
+            if len(self.cand_axis_names) > 1
+            else self.cand_axis_names[0]
+        )
+
+    @property
     def row_alignment(self) -> int:
         """Context rows must pad to a multiple of this (shards block-align)."""
         return self.n_parts * self.block_n
@@ -199,6 +265,21 @@ class ShardPlan:
             return lax.axis_index(SIM_AXIS)
         idx = lax.axis_index(self.axis_names[0])
         for a in self.axis_names[1:]:
+            idx = idx * self.mesh.shape[a] + lax.axis_index(a)
+        return idx
+
+    def cand_index(self):
+        """This shard's position along the candidate partition, traced.
+
+        Only meaningful inside an ``spmd_cand`` body; 0 on 1-D plans.
+        Folds multi-axis candidate meshes major-to-minor exactly as
+        ``shard_index`` folds the object axes."""
+        if self.cand_parts <= 1:
+            return jnp.int32(0)
+        if self.mesh is None:
+            return lax.axis_index(SIM_CAND_AXIS)
+        idx = lax.axis_index(self.cand_axis_names[0])
+        for a in self.cand_axis_names[1:]:
             idx = idx * self.mesh.shape[a] + lax.axis_index(a)
         return idx
 
@@ -322,6 +403,136 @@ class ShardPlan:
 
         return run
 
+    def spmd_cand(
+        self,
+        body,
+        *,
+        n_cand: int = 1,
+        n_rep: int = 0,
+        post=None,
+        n_post_rep: int = 0,
+        merge=None,
+        n_merge_rep: int = 0,
+    ):
+        """2-D (candidate × object) twin of :meth:`spmd`.
+
+        The returned callable takes ``(rows, *cand_ops, *replicated,
+        *post_replicated, *merge_replicated)``.  The first ``n_cand``
+        operands after ``rows`` are *candidate-sharded*: their leading axis
+        (a multiple of ``cand_parts``) is blocked over the candidate axis,
+        so each device materializes only its ``1/cand_parts`` block of the
+        frontier chunk.  ``body(rows_local, *cand_blocks, *replicated)``
+        computes the per-(object-shard × candidate-block) map and may call
+        collectives over ``reduce_axes`` — the AND-allreduce runs *inside*
+        each candidate block, over the object axes only, at the block's
+        batch size.
+
+        ``post(cand_idx, *body_outputs, *post_replicated)`` is the fused
+        block-local filter (canonicity / dedupe / iceberg cut): its inputs
+        are object-shard-invariant but *differ per candidate block*, so it
+        runs once per block (every object shard of a block computes it
+        redundantly on a mesh — the same placement rule as ``spmd``'s
+        post).  ``cand_idx`` is the block's position, letting the filter
+        reconstruct global row validity from a replicated scalar count.
+
+        Only after ``post`` are the blocks' survivors all-gathered along
+        the candidate axis — pruned candidates never replicate across
+        ``cand`` — giving every output a leading ``[cand_parts, ...]``
+        block axis.  ``merge(*gathered, *merge_replicated)`` (optional)
+        consumes the gathered stacks; its inputs are fully shard-invariant
+        so the plan places it exactly like ``spmd``'s post: in-region on a
+        mesh, once past the vmaps on a simulated plan.
+
+        Degenerates gracefully at ``cand_parts == 1``: one block, the
+        gather is a length-1 stack, and the arithmetic is bit-identical to
+        the 1-D path (asserted in tests/test_cand_sharding.py).
+        """
+        cp = self.cand_parts
+        split = n_cand + n_rep
+        split_post = split + n_post_rep
+
+        def _tup(x):
+            return x if isinstance(x, tuple) else (x,)
+
+        if self.mesh is not None:
+            cand_axes = self.cand_axes
+
+            def fused(rows_local, *ops):
+                out = _tup(body(rows_local, *ops[:split]))
+                if post is not None:
+                    out = _tup(
+                        post(self.cand_index(), *out, *ops[split:split_post])
+                    )
+                if cp > 1:
+                    gathered = tuple(
+                        lax.all_gather(o, cand_axes) for o in out
+                    )
+                else:
+                    gathered = tuple(o[None] for o in out)
+                if merge is None:
+                    return gathered
+                return merge(*gathered, *ops[split_post:])
+
+            def run(rows, *ops):
+                cand_specs = tuple(
+                    P(self.cand_axis_names or None, *([None] * (op.ndim - 1)))
+                    if cp > 1
+                    else P()
+                    for op in ops[:n_cand]
+                )
+                in_specs = (
+                    (P(self.axis_names, None),)
+                    + cand_specs
+                    + (P(),) * (len(ops) - n_cand)
+                )
+                return compat.shard_map(
+                    fused,
+                    mesh=self.mesh,
+                    in_specs=in_specs,
+                    out_specs=P(),
+                    check_vma=False,
+                )(rows, *ops)
+
+            return run
+
+        # Simulated plan: nested named-axis vmaps — inner over the object
+        # partition (collectives in ``body`` reduce over it), outer over
+        # the candidate blocks.  The cand "all-gather" is free: after the
+        # outer vmap the block axis IS a real array axis.
+        inner = jax.vmap(
+            body,
+            in_axes=(0,) + (None,) * split,
+            out_axes=0,
+            axis_name=SIM_AXIS,
+        )
+        outer = jax.vmap(
+            inner,
+            in_axes=(None,) + (0,) * n_cand + (None,) * n_rep,
+            out_axes=0,
+            axis_name=SIM_CAND_AXIS,
+        )
+
+        def run(rows, *ops):
+            blocks = tuple(
+                op.reshape(cp, op.shape[0] // cp, *op.shape[1:])
+                for op in ops[:n_cand]
+            )
+            outs = _tup(outer(rows, *blocks, *ops[n_cand:split]))
+            # [cand, obj, ...] — object-shard-invariant, keep obj lane 0
+            outs = tuple(o[:, 0] for o in outs)
+            if post is not None:
+                post_rep = ops[split:split_post]
+                outs = _tup(
+                    jax.vmap(lambda idx, *o: _tup(post(idx, *o, *post_rep)))(
+                        jnp.arange(cp, dtype=jnp.int32), *outs
+                    )
+                )
+            if merge is None:
+                return outs
+            return merge(*outs, *ops[split_post:])
+
+        return run
+
     # -- accounting --------------------------------------------------------
 
     def resolve_impl(
@@ -355,12 +566,44 @@ class ShardPlan:
             self.resolve_impl(batch, W, n_attrs), self.n_parts, batch, W, n_attrs
         )
 
+    def modeled_round_bytes_cand(
+        self, block_batch: int, W: int, n_attrs: int | None = None
+    ) -> int:
+        """Analytic wire bytes for one 2-D round of ``cand_parts`` blocks
+        of ``block_batch`` candidates each.
+
+        Two terms: the AND-allreduce runs in ``cand_parts`` independent
+        object-axis rings, each at the *block* batch size (this is the 2-D
+        win — the reduce a device participates in is sized by its block,
+        not the full chunk), plus the survivor all-gather along the
+        candidate axis (``n_parts`` rings of ``cand_parts`` devices, one
+        allgather pass over the block-sized survivor buffer each).
+        """
+        obj = self.cand_parts * collectives.modeled_comm_bytes(
+            self.resolve_impl(block_batch, W, n_attrs),
+            self.n_parts,
+            block_batch,
+            W,
+            n_attrs,
+        )
+        gather = (
+            self.n_parts
+            * self.cand_parts
+            * (self.cand_parts - 1)
+            * block_batch
+            * W
+            * 4
+        )
+        return obj + gather
+
     def describe(self) -> dict:
         """JSON-friendly summary for launcher output and benchmark records."""
         return {
             "mode": "simulated" if self.mesh is None else "mesh",
             "n_parts": self.n_parts,
             "axes": list(self.axis_names),
+            "cand_parts": self.cand_parts,
+            "cand_axes": list(self.cand_axis_names),
             "mesh_shape": None if self.mesh is None else dict(self.mesh.shape),
             "reduce_impl": self.reduce_impl,
             "block_n": self.block_n,
@@ -374,11 +617,35 @@ class ShardPlan:
 # interconnect probe (auto_hop_bytes calibration)
 # ---------------------------------------------------------------------------
 
-# One-shot per interconnect: plans over the same devices with the same shard
-# count share a measurement (the probe is geometry-, not schedule-, shaped).
-# Values are (hop_bytes, measured) — measured=False marks a noise-floor
-# fallback to the default.
+# One-shot per *plan geometry*: plans over the same devices with the same
+# axis structure (object shard count + mesh axis shape + candidate blocks)
+# share a measurement (the probe is geometry-, not schedule-, shaped).
+# Keying on the full geometry — not just the interconnect — matters: an
+# 8-shard ring pays different per-step latency than a 2-shard one, a
+# pod×data mesh hops differently than a flat data mesh over the same
+# devices, and a 2-D plan's object rings span a subset of the mesh; a
+# calibrated value must never leak between them.  Values are
+# (hop_bytes, measured) — measured=False marks a noise-floor fallback to
+# the default.
 _HOP_PROBE_CACHE: dict[tuple, tuple[int, bool]] = {}
+
+
+def _probe_cache_key(plan: ShardPlan) -> tuple:
+    """Cache key covering the plan geometry the probe actually measures."""
+    if plan.mesh is None:
+        mesh_axes = None
+        devices = None
+    else:
+        mesh_axes = tuple((a, plan.mesh.shape[a]) for a in plan.mesh.shape)
+        devices = tuple(str(d) for d in plan.mesh.devices.flat)
+    return (
+        plan.n_parts,
+        plan.axis_names,
+        plan.cand_parts,
+        plan.cand_axis_names,
+        mesh_axes,
+        devices,
+    )
 
 _PROBE_W = 4  # packed words per probe row — scale-free, cancels in the ratio
 
@@ -394,15 +661,11 @@ def probe_hop_bytes(plan: ShardPlan) -> tuple[int, bool]:
     bytes for allgather, so the bandwidth-equivalent hop cost is
     ``hop_bytes = (α/β) · W · 4`` — independent of the probe's row width.
     Best-of-3 timings; returns ``(hop_bytes, measured)`` and caches it per
-    device set × shard count.  ``measured=False`` means the probe saw no
+    plan geometry (:func:`_probe_cache_key` — device set × axis structure
+    × shard counts on both axes).  ``measured=False`` means the probe saw no
     per-byte slope (noise floor) and fell back to the 4096 B default.
     """
-    key = (
-        plan.n_parts,
-        None
-        if plan.mesh is None
-        else tuple(str(d) for d in plan.mesh.devices.flat),
-    )
+    key = _probe_cache_key(plan)
     cached = _HOP_PROBE_CACHE.get(key)
     if cached is not None:
         return cached

@@ -47,15 +47,19 @@ from repro.dist.shardplan import ShardPlan
 def build_plan(args) -> ShardPlan:
     """The run's ShardPlan from CLI geometry flags."""
     calibrate = getattr(args, "calibrate_hops", False)
+    cand = getattr(args, "cand_shards", 1)
     if args.mesh:
         from repro.launch.mesh import make_local_mesh
 
-        mesh = make_local_mesh(model=1, pod=args.pod)
+        mesh = make_local_mesh(model=1, pod=args.pod, cand=cand)
         return ShardPlan.over_mesh(
             mesh, reduce_impl=args.reduce, calibrate_hops=calibrate
         )
     return ShardPlan.simulated(
-        args.parts, reduce_impl=args.reduce, calibrate_hops=calibrate
+        args.parts,
+        cand_parts=cand,
+        reduce_impl=args.reduce,
+        calibrate_hops=calibrate,
     )
 
 
@@ -273,6 +277,12 @@ def main(argv=None):
     p.add_argument("--algorithm", default="mrganter+",
                    choices=["mrganter", "mrganter+", "mrcbo"])
     p.add_argument("--parts", type=int, default=8)
+    p.add_argument("--cand-shards", type=int, default=1,
+                   help="2-D decomposition: block the candidate/frontier "
+                        "axis over this many devices (--mesh: a 'cand' mesh "
+                        "axis) or simulated lanes; one round then absorbs "
+                        "cand-shards × max_batch candidates at the same "
+                        "per-device footprint")
     p.add_argument("--reduce", default="rsag",
                    choices=list(IMPLS) + ["auto"],
                    help="AND-allreduce schedule the plan's reduce phase "

@@ -20,14 +20,25 @@ def make_production_mesh(*, multi_pod: bool = False):
     return compat.make_mesh(shape, axes)
 
 
-def make_local_mesh(data: int | None = None, model: int = 1, pod: int = 1):
-    """Mesh over whatever devices exist (CPU tests: 1 or 8 fake devices)."""
+def make_local_mesh(
+    data: int | None = None, model: int = 1, pod: int = 1, cand: int = 1
+):
+    """Mesh over whatever devices exist (CPU tests: 1 or 8 fake devices).
+
+    ``cand > 1`` prepends a candidate axis (the FCA ShardPlan's 2-D
+    frontier-axis decomposition picks it up by name)."""
     n = len(jax.devices())
     if data is None:
-        data = n // (model * pod)
-    shape = (pod, data, model) if pod > 1 else (data, model)
-    axes = ("pod", "data", "model") if pod > 1 else ("data", "model")
-    return compat.make_mesh(shape, axes)
+        data = n // (model * pod * cand)
+    dims = []
+    if cand > 1:
+        dims.append(("cand", cand))
+    if pod > 1:
+        dims.append(("pod", pod))
+    dims += [("data", data), ("model", model)]
+    return compat.make_mesh(
+        tuple(s for _, s in dims), tuple(a for a, _ in dims)
+    )
 
 
 def data_axes(mesh) -> tuple[str, ...]:

@@ -389,7 +389,7 @@ class QueryEngine:
         step = self._rules_steps.get(k)
         if step is None:
 
-            def run(prem, added, conf, metric, n_rules, queries, min_conf):
+            def run(prem, added, conf, metric, rid, n_rules, queries, min_conf):
                 R = prem.shape[0]
                 # applicable[b, r]: premise_r ⊆ query attrset b
                 app = jnp.all(
@@ -407,20 +407,29 @@ class QueryEngine:
                     lambda a, b: a | b,
                     (1,),
                 )
-                # top-k by the rank metric — the k unrolled argmax passes of
-                # the concept top-k (same order as lax.top_k, ~100× faster
-                # on XLA CPU)
+                # top-k by the rank metric — k unrolled max passes (same
+                # order as lax.top_k, ~100× faster on XLA CPU).  Ties on
+                # the metric break by *rule id* (lowest wins), never by
+                # table-slot position: the returned ranking is then
+                # invariant to query-batch padding, index cap, and any
+                # future rule-table layout (shard/permutation), and two
+                # runs of the same query always agree.
                 score = jnp.where(ok, metric[None, :], jnp.float32(-1.0))
                 rows_arange = jnp.arange(score.shape[0])
                 ids, vals = [], []
                 for _ in range(k):
-                    idx = jnp.argmax(score, axis=1)
-                    val = jnp.take_along_axis(score, idx[:, None], axis=1)[
-                        :, 0
-                    ]
-                    ids.append(idx.astype(jnp.int32))
-                    vals.append(val)
-                    score = score.at[rows_arange, idx].set(-2.0)
+                    best = jnp.max(score, axis=1)
+                    is_best = score == best[:, None]
+                    sel = jnp.min(
+                        jnp.where(is_best, rid[None, :], jnp.int32(0x7FFFFFFF)),
+                        axis=1,
+                    )
+                    pos = jnp.argmax(
+                        is_best & (rid[None, :] == sel[:, None]), axis=1
+                    )
+                    ids.append(sel)
+                    vals.append(best)
+                    score = score.at[rows_arange, pos].set(-2.0)
                 vals = jnp.stack(vals, axis=1)
                 idx = jnp.stack(ids, axis=1)
                 idx = jnp.where(vals >= 0, idx, -1)
@@ -468,7 +477,7 @@ class QueryEngine:
         for lo, b, chunk in self._chunks(attrsets):
             idx, vals, union = step(
                 index.premise, index.added, index.confidence, metric,
-                jnp.int32(index.n_rules), jnp.asarray(chunk),
+                index.rule_id, jnp.int32(index.n_rules), jnp.asarray(chunk),
                 jnp.float32(min_conf),
             )
             out_i[lo : lo + b] = np.asarray(idx)[:b]

@@ -30,6 +30,11 @@ class RuleIndex:
     support: jax.Array  # [cap] int32
     confidence: jax.Array  # [cap] float32 (pads -1)
     lift: jax.Array  # [cap] float32 (pads -1)
+    # canonical rule identity, the deterministic tie-break key for ranked
+    # queries: position in the combined basis (implications first, then the
+    # Luxenburger rules in canonical order).  Pads get INT32_MAX so a pad
+    # can never win a tie against a real rule.
+    rule_id: jax.Array  # [cap] int32
     # host copies (oracles, answer detail expansion)
     premise_np: np.ndarray
     added_np: np.ndarray
@@ -53,6 +58,8 @@ class RuleIndex:
         sup[:R] = combined.support
         conf[:R] = combined.confidence
         lift[:R] = combined.lift
+        rid = np.full((cap,), np.iinfo(np.int32).max, np.int32)
+        rid[:R] = np.arange(R, dtype=np.int32)
         place = plan.replicate if plan is not None else jnp.asarray
         return cls(
             n_rules=R,
@@ -63,6 +70,7 @@ class RuleIndex:
             support=place(sup),
             confidence=place(conf),
             lift=place(lift),
+            rule_id=place(rid),
             premise_np=prem[:R],
             added_np=added[:R],
             support_np=sup[:R],

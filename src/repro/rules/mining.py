@@ -26,12 +26,27 @@ def resolve_min_support(value, n_objects: int) -> int:
     Fractions in (0, 1) resolve to ``ceil(value · n_objects)`` (≥ 1);
     values ≥ 1 must be whole counts.  The resolved count is what the
     miners, store filters and CLI stats all speak.
+
+    The ceiling snaps to the nearest integer when the product sits within
+    floating-point noise of it: a fraction that lands *exactly* on an
+    integer support must resolve to that integer, but binary floating
+    point can nudge the product just above (e.g. ``0.07 * 100 ==
+    7.000000000000001``) and a naive ``ceil`` would then silently drop
+    every concept sitting exactly on the threshold boundary.  "Support ≥
+    7" and "support ≥ 0.07·|O|" have to mean the same thing.  The snap
+    tolerance is relative (1e-12 ≈ 4000 ulp — far above the few-ulp error
+    of one divide+multiply, far below any meaningful fractional part), so
+    genuinely fractional targets still round up at any |O|.
     """
     v = float(value)
     if not math.isfinite(v) or v <= 0:
         raise ValueError(f"min_support must be positive, got {value!r}")
     if v < 1:
-        return max(1, math.ceil(v * n_objects))
+        target = v * n_objects
+        nearest = round(target)
+        if nearest >= 1 and abs(target - nearest) <= 1e-12 * max(1.0, target):
+            return int(nearest)
+        return max(1, math.ceil(target))
     if v != int(v):
         raise ValueError(
             f"min_support ≥ 1 must be a whole object count, got {value!r}"

@@ -1,0 +1,368 @@
+"""Frontier-axis sharding — the 2-D candidate × object decomposition.
+
+Covers the ShardPlan ``cand_parts`` geometry, the ``spmd_cand`` primitive,
+driver equivalence across candidate shard counts (every 2-D plan must mine
+the exact host-oracle concept set), the headline regression — a frontier
+larger than one device's ``max_batch`` budget mining correctly instead of
+being silently truncated — and the 2-D wire accounting.  The real-mesh
+twin of these assertions lives in tests/test_distributed_8dev.py.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    ClosureEngine,
+    all_closures_batched,
+    bitset,
+    mrcbo,
+    mrganter,
+    mrganter_plus,
+)
+from repro.core.context import FormalContext
+from repro.core.frontier import DeviceFrontier
+from repro.dist.shardplan import SIM_CAND_AXIS, ShardPlan
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:  # deterministic seeded fallback (repro.testing)
+    from repro.testing import given, settings, st
+
+settings.register_profile("cand", deadline=None, max_examples=8)
+settings.load_profile("cand")
+
+
+def _keys(intents):
+    return {bitset.key_bytes(y) for y in intents}
+
+
+@pytest.fixture(scope="module")
+def ctx():
+    return FormalContext.synthetic(90, 21, 0.25, seed=4)
+
+
+@pytest.fixture(scope="module")
+def ref(ctx):
+    return _keys(all_closures_batched(ctx))
+
+
+# -- geometry ----------------------------------------------------------------
+
+
+def test_cand_geometry_simulated():
+    plan = ShardPlan.simulated(4, cand_parts=3, block_n=64)
+    assert plan.cand_parts == 3
+    assert plan.cand_axes == SIM_CAND_AXIS
+    assert plan.cand_axis_names == (SIM_CAND_AXIS,)
+    d = plan.describe()
+    assert d["cand_parts"] == 3 and d["cand_axes"] == [SIM_CAND_AXIS]
+    # 1-D plans advertise no candidate axis
+    one = ShardPlan.simulated(4)
+    assert one.cand_parts == 1 and one.cand_axes is None
+    assert one.describe()["cand_parts"] == 1
+
+
+def test_cand_geometry_validation():
+    with pytest.raises(ValueError, match="cand_parts"):
+        ShardPlan.simulated(2, cand_parts=0)
+
+
+def test_round_budget_scales_with_cand_parts(ctx):
+    e1 = ClosureEngine(
+        ctx, plan=ShardPlan.simulated(2, block_n=64, max_batch=128),
+        backend="jnp",
+    )
+    e2 = ClosureEngine(
+        ctx,
+        plan=ShardPlan.simulated(2, cand_parts=4, block_n=64, max_batch=128),
+        backend="jnp",
+    )
+    assert DeviceFrontier(e1).round_budget == 128
+    assert DeviceFrontier(e2).round_budget == 4 * 128
+
+
+# -- spmd_cand: the primitive ------------------------------------------------
+
+
+def test_spmd_cand_blocks_and_gathers():
+    """Candidate operands are blocked, the object reduce runs per block,
+    and outputs come back as [cand_parts, ...] stacks ready to merge."""
+    plan = ShardPlan.simulated(2, cand_parts=3, block_n=4)
+    rng = np.random.default_rng(0)
+    rows = rng.integers(0, 1 << 32, size=(16, 3), dtype=np.uint32)
+    cands = rng.integers(0, 1 << 32, size=(12, 3), dtype=np.uint32)
+    placed = plan.place_rows(rows)
+
+    from repro.dist import collectives
+
+    def body(rows_local, cb):
+        return collectives.and_allreduce(
+            rows_local[:1] & cb, plan.reduce_axes, impl="rsag"
+        )
+
+    def post(idx, gc, n_valid):
+        valid = (jnp.arange(gc.shape[0]) + idx * gc.shape[0]) < n_valid
+        return jnp.where(valid[:, None], gc, 0), valid.sum(dtype=jnp.int32)
+
+    fn = jax.jit(plan.spmd_cand(body, n_cand=1, post=post, n_post_rep=1))
+    gcs, counts = fn(placed, jnp.asarray(cands), jnp.int32(10))
+    assert gcs.shape == (3, 4, 3) and counts.shape == (3,)
+    ref = (rows[0] & cands) & (rows[8] & cands)
+    ref[10:] = 0
+    np.testing.assert_array_equal(np.asarray(gcs).reshape(12, 3), ref)
+    np.testing.assert_array_equal(np.asarray(counts), [4, 4, 2])
+
+
+def test_spmd_cand_degenerates_at_one_block():
+    """cand_parts == 1 runs the degenerate branch of both spmd_cand paths
+    (length-1 gather stack on a mesh, single outer vmap lane simulated)
+    and must be bit-identical to the multi-block result."""
+    rng = np.random.default_rng(3)
+    rows = rng.integers(0, 1 << 32, size=(16, 3), dtype=np.uint32)
+    cands = rng.integers(0, 1 << 32, size=(12, 3), dtype=np.uint32)
+    mesh = jax.sharding.Mesh(np.asarray(jax.devices()[:1]), ("data",))
+
+    from repro.dist import collectives
+
+    def post(idx, gc, n_valid):
+        valid = (jnp.arange(gc.shape[0]) + idx * gc.shape[0]) < n_valid
+        return jnp.where(valid[:, None], gc, 0), valid.sum(dtype=jnp.int32)
+
+    outs = []
+    for plan in (
+        ShardPlan.simulated(2, cand_parts=1, block_n=4),
+        ShardPlan.over_mesh(mesh, block_n=4),  # mesh degenerate: cp == 1
+        ShardPlan.simulated(2, cand_parts=3, block_n=4),
+    ):
+        assert (plan.cand_parts == 1) == (plan.cand_axes is None)
+
+        def body(rows_local, cb, plan=plan):
+            return collectives.and_allreduce(
+                rows_local[:1] & cb, plan.reduce_axes, impl="rsag"
+            )
+
+        fn = jax.jit(plan.spmd_cand(body, n_cand=1, post=post, n_post_rep=1))
+        gcs, counts = fn(
+            plan.place_rows(rows), jnp.asarray(cands), jnp.int32(10)
+        )
+        assert gcs.shape[0] == plan.cand_parts
+        assert int(np.asarray(counts).sum()) == 10
+        outs.append(np.asarray(gcs).reshape(12, 3))
+    np.testing.assert_array_equal(outs[0], outs[2])  # sim cp=1 ≡ cp=3
+    # mesh plan has 1 object shard: rows[0] only (sim-2 ANDs rows[0]&rows[8])
+    ref = rows[0] & cands
+    ref[10:] = 0
+    np.testing.assert_array_equal(outs[1], ref)
+
+
+@pytest.mark.parametrize("cand_parts", [1, 2, 4])
+def test_mesh_one_device_matches_simulated(ctx, cand_parts):
+    """A 1-D one-device mesh (the only mesh the main pytest process can
+    build) against simulated plans of every cand_parts: the mining result
+    must be bit-identical regardless of the decomposition (the real
+    cand×data mesh runs in tests/test_distributed_8dev.py)."""
+    e_sim = ClosureEngine(
+        ctx,
+        plan=ShardPlan.simulated(1, cand_parts=cand_parts, block_n=64),
+        backend="jnp",
+    )
+    mesh = jax.sharding.Mesh(np.asarray(jax.devices()[:1]), ("data",))
+    e_mesh = ClosureEngine(
+        ctx, plan=ShardPlan.over_mesh(mesh, block_n=64), backend="jnp"
+    )
+    r_sim = mrganter_plus(ctx, e_sim, local_prune=True)
+    r_mesh = mrganter_plus(ctx, e_mesh, local_prune=True)
+    assert sorted(y.tobytes() for y in r_sim.intents) == sorted(
+        y.tobytes() for y in r_mesh.intents
+    )
+
+
+# -- driver equivalence across candidate shard counts ------------------------
+
+
+@pytest.mark.parametrize("cand_parts", [2, 3, 4])
+def test_mrganter_plus_cand_sharded_matches_oracle(ctx, ref, cand_parts):
+    plan = ShardPlan.simulated(
+        3, cand_parts=cand_parts, block_n=64, max_batch=64
+    )
+    eng = ClosureEngine(ctx, plan=plan, backend="jnp")
+    res = mrganter_plus(ctx, eng, local_prune=True)
+    assert _keys(res.intents) == ref
+
+
+@pytest.mark.parametrize("dedupe_closures", [False, True])
+def test_mrganter_plus_cand_sharded_dedupe_modes(ctx, ref, dedupe_closures):
+    plan = ShardPlan.simulated(2, cand_parts=2, block_n=64, max_batch=64)
+    eng = ClosureEngine(ctx, plan=plan, backend="jnp")
+    res = mrganter_plus(ctx, eng, dedupe_closures=dedupe_closures)
+    assert _keys(res.intents) == ref
+
+
+def test_mrcbo_cand_sharded_matches_oracle(ctx, ref):
+    plan = ShardPlan.simulated(3, cand_parts=2, block_n=64, max_batch=64)
+    eng = ClosureEngine(ctx, plan=plan, backend="jnp")
+    res = mrcbo(ctx, eng)
+    assert _keys(res.intents) == ref
+
+
+def test_mrganter_cand_sharded_preserves_lectic_order(ctx):
+    """MRGanter runs the 1-D step regardless (single-intent frontier); a
+    cand-sharded plan must not disturb exact lectic emission order."""
+    e1 = ClosureEngine(ctx, plan=ShardPlan.simulated(2, block_n=64),
+                       backend="jnp")
+    e2 = ClosureEngine(
+        ctx, plan=ShardPlan.simulated(2, cand_parts=2, block_n=64),
+        backend="jnp",
+    )
+    r1 = mrganter(ctx, e1, max_iterations=40)
+    r2 = mrganter(ctx, e2, max_iterations=40)
+    assert len(r1.intents) == len(r2.intents)
+    for a, b in zip(r1.intents, r2.intents):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_iceberg_cand_sharded_matches_posthoc(ctx):
+    from repro.query.store import host_supports
+
+    full = np.stack(all_closures_batched(ctx))
+    sups = host_supports(ctx, full)
+    s = 8
+    want = _keys(full[sups >= s])
+    for driver in (mrganter_plus, mrcbo):
+        plan = ShardPlan.simulated(2, cand_parts=2, block_n=64, max_batch=64)
+        eng = ClosureEngine(ctx, plan=plan, backend="jnp")
+        res = driver(ctx, eng, min_support=s)
+        assert _keys(res.intents) == want, driver.__name__
+
+
+# -- the headline regression: frontier > max_batch ---------------------------
+
+
+def test_frontier_exceeding_max_batch_mines_completely(ctx, ref):
+    """The bug this sweep headlines: a frontier bigger than one device's
+    ``max_batch`` chunk budget must mine the complete concept set — no
+    silent truncation anywhere in the adopt/chunk path.  max_batch=16 is
+    far below this context's peak frontier (hundreds of candidates)."""
+    for cand_parts in (1, 2, 4):
+        plan = ShardPlan.simulated(
+            2, cand_parts=cand_parts, block_n=64, max_batch=16
+        )
+        eng = ClosureEngine(ctx, plan=plan, backend="jnp")
+        res = mrganter_plus(ctx, eng, local_prune=True)
+        assert _keys(res.intents) == ref, cand_parts
+        eng2 = ClosureEngine(ctx, plan=plan, backend="jnp")
+        res2 = mrcbo(ctx, eng2)
+        assert _keys(res2.intents) == ref, cand_parts
+        # the peak adopted frontier really did exceed the per-chunk budget
+        assert res2.n_concepts > 16
+
+
+def test_adopt_refuses_to_drop_rows(ctx):
+    """_adopt raises instead of silently truncating live frontier rows."""
+    eng = ClosureEngine(ctx, plan=ShardPlan.simulated(1), backend="jnp")
+    fr = DeviceFrontier(eng)
+    with pytest.raises(RuntimeError, match="cand-shards"):
+        fr._adopt(jnp.zeros((4, ctx.W), jnp.uint32), None, 9)
+
+
+# -- wire accounting ---------------------------------------------------------
+
+
+def test_cand_round_bytes_model():
+    from repro.dist import collectives
+
+    plan = ShardPlan.simulated(4, cand_parts=2, reduce_impl="rsag")
+    blk, W, m = 128, 3, 70
+    obj = 2 * collectives.modeled_comm_bytes("rsag", 4, blk, W, m)
+    gather = 4 * 2 * 1 * blk * W * 4
+    assert plan.modeled_round_bytes_cand(blk, W, m) == obj + gather
+    # 1-D degenerate: no cand gather, identical to the 1-D model
+    one = ShardPlan.simulated(4, reduce_impl="rsag")
+    assert one.modeled_round_bytes_cand(blk, W, m) == one.modeled_reduce_bytes(
+        blk, W, m
+    )
+
+
+def test_cand_sharding_reduces_modeled_bytes_per_round(ctx, ref):
+    """At equal total devices (8 = 8×1 vs 4×2), splitting the mesh between
+    objects and candidates cuts the modeled reduce traffic: the object
+    rings shrink and each runs at the block batch size."""
+    e1 = ClosureEngine(
+        ctx, plan=ShardPlan.simulated(8, block_n=8, max_batch=256),
+        backend="jnp",
+    )
+    e2 = ClosureEngine(
+        ctx,
+        plan=ShardPlan.simulated(4, cand_parts=2, block_n=8, max_batch=128),
+        backend="jnp",
+    )
+    r1 = mrganter_plus(ctx, e1, local_prune=True)
+    r2 = mrganter_plus(ctx, e2, local_prune=True)
+    assert _keys(r1.intents) == _keys(r2.intents) == ref
+    assert e2.stats.modeled_comm_bytes < e1.stats.modeled_comm_bytes
+    # every 2-D dispatch recorded a schedule choice
+    assert sum(e2.stats.reduce_rounds.values()) == e2.stats.closure_calls
+
+
+def test_auto_schedule_resolves_per_block(ctx, ref):
+    plan = ShardPlan.simulated(
+        4, cand_parts=2, reduce_impl="auto", block_n=64, max_batch=64
+    )
+    eng = ClosureEngine(ctx, plan=plan, backend="jnp")
+    res = mrganter_plus(ctx, eng, local_prune=True)
+    assert _keys(res.intents) == ref
+    assert set(eng.stats.reduce_rounds) <= {"allgather", "rsag"}
+
+
+# -- hop-probe cache keys on the full plan geometry --------------------------
+
+
+def test_hop_probe_cache_keys_on_cand_geometry():
+    """A calibrated hop value must not leak between plans of different
+    geometry: same object shard count but different candidate blocking
+    gets a fresh probe (the old cache keyed on (n_parts, devices) only)."""
+    from repro.dist import shardplan as sp
+
+    sp._HOP_PROBE_CACHE.clear()
+    try:
+        ShardPlan.simulated(4, calibrate_hops=True)
+        assert len(sp._HOP_PROBE_CACHE) == 1
+        key = next(iter(sp._HOP_PROBE_CACHE))
+        sp._HOP_PROBE_CACHE[key] = (999_999, True)  # poison the 4×1 entry
+        plan2 = ShardPlan.simulated(4, cand_parts=2, calibrate_hops=True)
+        # the 4×2 plan must NOT have read the poisoned 4×1 measurement
+        assert plan2.auto_hop_bytes != 999_999
+        assert len(sp._HOP_PROBE_CACHE) == 2
+        # ... while the same geometry still hits its cache
+        plan3 = ShardPlan.simulated(4, calibrate_hops=True)
+        assert plan3.auto_hop_bytes == 999_999
+    finally:
+        sp._HOP_PROBE_CACHE.clear()
+
+
+# -- randomized property sweep ----------------------------------------------
+
+
+@given(
+    st.integers(8, 50), st.integers(3, 18), st.floats(0.15, 0.5),
+    st.integers(0, 10_000), st.integers(1, 3), st.integers(1, 3),
+)
+def test_property_cand_sharded_equals_host(n, m, density, seed, n_parts, cp):
+    ctx = FormalContext.synthetic(n, m, density, seed=seed)
+    plan = ShardPlan.simulated(
+        n_parts, cand_parts=cp, block_n=64, max_batch=32
+    )
+    eh = ClosureEngine(ctx, n_parts=n_parts, block_n=64, backend="jnp")
+    ed = ClosureEngine(ctx, plan=plan, backend="jnp")
+    rh = mrganter_plus(ctx, eh, pipeline="host", dedupe_candidates=True)
+    rd = mrganter_plus(ctx, ed, pipeline="device", dedupe_candidates=True)
+    assert _keys(rh.intents) == _keys(rd.intents)
+    eh2 = ClosureEngine(ctx, n_parts=n_parts, block_n=64, backend="jnp")
+    ed2 = ClosureEngine(ctx, plan=plan, backend="jnp")
+    assert _keys(mrcbo(ctx, eh2, pipeline="host").intents) == _keys(
+        mrcbo(ctx, ed2, pipeline="device").intents
+    )

@@ -24,7 +24,9 @@ from repro.query import ConceptStore, QueryEngine
 from repro.query.engine import QueryConfig
 from repro.query.store import host_supports
 from repro.rules import (
+    RuleBasis,
     RuleIndex,
+    RuleSet,
     dg_basis,
     dg_basis_host,
     extract_bases,
@@ -383,3 +385,115 @@ def test_extract_bases_on_iceberg_store_consistent():
         assert bitset.is_subset((p | a)[None, :], ctx.rows).sum() == sp
     s = resolve_min_support(0.15, ctx.n_objects)
     assert np.all(basis.partial.support >= s)
+
+
+# -- fraction→count boundary (the ceil-vs-floor off-by-one sweep) ------------
+
+
+def test_resolve_min_support_exact_fraction_boundary():
+    """A fraction that lands exactly on an integer support must resolve to
+    that integer.  ``0.07 * 100 == 7.000000000000001`` in binary floating
+    point, so a naive ceil resolved to 8 and silently dropped every
+    concept with support exactly 7."""
+    assert resolve_min_support(0.07, 100) == 7
+    # exhaustive small grid: k/n · n == k for every representable pair
+    for n in range(1, 60):
+        for k in range(1, n):
+            assert resolve_min_support(k / n, n) == k, (k, n)
+    # non-boundary fractions still round UP (ceil semantics intact)
+    assert resolve_min_support(0.071, 100) == 8
+    assert resolve_min_support(0.55, 10) == 6
+
+
+@given(
+    st.integers(10, 36), st.integers(4, 10), st.floats(0.2, 0.5),
+    st.integers(0, 10_000), st.integers(0, 2),
+)
+def test_fraction_equals_preresolved_count_across_drivers(
+    n, m, density, seed, di
+):
+    """Mining with a fractional threshold ≡ mining with its pre-resolved
+    absolute count, including fractions sitting exactly on a support
+    boundary (k/n), for every driver."""
+    ctx = FormalContext.synthetic(n, m, density, seed=seed)
+    k = max(1, n // 3)
+    frac = k / n  # exact boundary: resolves to k, never k+1
+    s = resolve_min_support(frac, ctx.n_objects)
+    assert s == k
+    driver = DRIVERS[di]
+    e_frac = ClosureEngine(ctx, plan=ShardPlan.simulated(2, block_n=8),
+                           backend="jnp")
+    r_frac = mine_iceberg(ctx, e_frac, min_support=frac,
+                          algorithm=("mrganter", "mrganter+", "mrcbo")[di])
+    e_abs = ClosureEngine(ctx, plan=ShardPlan.simulated(2, block_n=8),
+                          backend="jnp")
+    r_abs = driver(ctx, e_abs, min_support=s)
+    assert _keys(r_frac.intents) == _keys(r_abs.intents)
+    assert r_frac.min_support == s
+    # and the boundary concepts are really kept: ≡ post-hoc filter at k
+    assert _keys(r_abs.intents) == _posthoc_ref(ctx, k)
+
+
+# -- rule-ranking determinism (tie-break by rule id) -------------------------
+
+
+def _tied_index(plan=None):
+    """A tiny hand-built index where ranks tie on purpose: three rules
+    with identical confidence/lift firing on the same query."""
+    W = 1
+    prem = np.zeros((3, W), np.uint32)  # ∅ premise: fires everywhere
+    added = np.array([[1], [2], [4]], np.uint32)
+    rs = RuleSet(
+        premise=prem,
+        added=added,
+        support=np.full((3,), 5, np.int32),
+        confidence=np.full((3,), 0.5, np.float32),
+        lift=np.full((3,), 1.25, np.float32),
+    )
+    basis = RuleBasis(
+        n_objects=10, n_attrs=3, min_conf=0.0,
+        implications=RuleSet.empty(W), partial=rs,
+    )
+    return RuleIndex.build(basis, plan=plan)
+
+
+def test_rules_batch_breaks_ties_by_rule_id(served_rules):
+    ctx, _, _, qe = served_rules
+    assert ctx.W == 1  # the hand-built index shares the packed width
+    index = _tied_index()
+    q = np.zeros((1, ctx.W), np.uint32)
+    ids, scores, _ = qe.rules_batch(index, q, k=3, min_conf=0.0,
+                                    rank_by="lift")
+    # all three tie on lift 1.25 → deterministic ascending rule id
+    assert list(ids[0]) == [0, 1, 2]
+    assert np.all(scores[0] == np.float32(1.25))
+
+
+def test_rules_batch_invariant_to_slot_padding_and_plan(served_rules):
+    """The ranked answer must not depend on the micro-batch slot width
+    (query padding) or on the plan the index tables were placed through."""
+    ctx, basis, _, _ = served_rules
+    rng = np.random.default_rng(7)
+    qs = ctx.rows[rng.integers(0, ctx.n_objects, 13)] & bitset.pack_bool(
+        rng.random((13, ctx.n_attrs)) < 0.5, ctx.W
+    )
+    results = []
+    for slots, plan in (
+        (4, ShardPlan.simulated(1)),
+        (13, ShardPlan.simulated(2, cand_parts=2)),
+        (64, ShardPlan.simulated(4, reduce_impl="allgather")),
+    ):
+        store = ConceptStore.build(
+            ctx, all_closures_batched(ctx),
+            plan=ShardPlan.simulated(2, block_n=8),
+        )
+        index = RuleIndex.build(basis, plan=plan)
+        qe = QueryEngine(store, QueryConfig(slots=slots))
+        ids, scores, cons = qe.rules_batch(
+            index, qs, k=5, min_conf=0.2, rank_by="lift"
+        )
+        results.append((ids, scores, cons))
+    for ids, scores, cons in results[1:]:
+        np.testing.assert_array_equal(ids, results[0][0])
+        np.testing.assert_array_equal(scores, results[0][1])
+        np.testing.assert_array_equal(cons, results[0][2])
