@@ -42,7 +42,9 @@ def make_engine(ctx: FormalContext, n_parts: int, reduce_impl: str = "rsag",
                 use_kernel: bool = False) -> ClosureEngine:
     # use_kernel=False: Pallas interpret mode is a correctness tool (it
     # executes the kernel body per grid cell on CPU) — wall-time benches
-    # use the fused-jnp path; kernel_bench.py covers the kernel itself.
+    # use the fused-jnp path.  Kernel correctness is asserted separately:
+    # kernel_bench.run_equivalence() and the fused_ab record both check the
+    # Pallas paths (standalone + fused frontier step) bit-for-bit.
     return ClosureEngine(
         ctx, n_parts=n_parts, reduce_impl=reduce_impl,
         use_kernel=use_kernel, block_n=64,

@@ -47,13 +47,60 @@ def run(shapes=((2048, 128, 256), (8192, 512, 64))) -> list[str]:
         f_k()
         _, t_k = timed(f_k)
 
-        work = B * N * ops.bucket_size(1)  # word-ops order of magnitude
+        # work census in word-ops: one AND-accumulate sweep touches every
+        # (candidate, row, word) cell, so the real packed width
+        # bitset.n_words(m) = ceil(m/32) is the third factor — pricing
+        # every shape at bucket_size(1) = 8 words misstated BNW for any m
+        # outside (224, 256].
+        W = max(1, (m + 31) // 32)
+        work = B * N * W
         out.append(row(
             f"kernel/closure/N={N},m={m},B={B}/jnp_ref", 1e6 * t_ref,
             f"numpy_us={1e6 * t_np:.0f}|pallas_interpret_us={1e6 * t_k:.0f}"
-            f"|BNW={B * N * (m // 32 + 1)}",
+            f"|BNW={work}",
         ))
+
+    out.extend(run_equivalence())
     return out
+
+
+def run_equivalence(N: int = 160, m: int = 40, B: int = 16) -> list[str]:
+    """Small-shape interpret-mode equivalence pass: the Pallas closure
+    kernel AND the fused frontier-step kernels must agree bit-for-bit with
+    their oracles.  Asserted here so the tier-1 benchmark smoke actually
+    exercises the kernel path (wall-time records keep ``use_kernel=False``
+    — interpret mode is a correctness tool, not a TPU projection)."""
+    from repro.core.closure import batched_closure_np as np_oracle
+    from repro.kernels import frontier as fkern
+
+    ctx = FormalContext.synthetic(N, m, 0.3, seed=5)
+    cands = FormalContext.synthetic(B, m, 0.08, seed=6).rows
+    rows_p, n_pad = ctx.padded_rows(64)
+    rows_j, cands_j = jnp.asarray(rows_p), jnp.asarray(cands)
+
+    def check():
+        kc, ks = ops.batched_closure(
+            rows_j, cands_j, m, n_valid_rows=N, block_n=64, use_kernel=True
+        )
+        oc, os_ = np_oracle(ctx.rows, cands, ctx.attr_mask())
+        np.testing.assert_array_equal(np.asarray(kc), oc)
+        np.testing.assert_array_equal(np.asarray(ks), os_)
+        # fused frontier step: closure → support → iceberg filter, one pass
+        gc, sup, keep = fkern.fused_closure_call(
+            rows_j, cands_j, jnp.asarray(ctx.attr_mask()[None, :]),
+            fkern.pack_scalars(B, 3, n_pad, 0), iceberg=True, block_n=64,
+        )
+        np.testing.assert_array_equal(np.asarray(gc), oc)
+        np.testing.assert_array_equal(np.asarray(sup), os_)
+        np.testing.assert_array_equal(np.asarray(keep), os_ >= 3)
+        return True
+
+    check()
+    _, t = timed(check)
+    return [row(
+        f"kernel/equivalence/N={N},m={m},B={B}", 1e6 * t,
+        "paths=closure_pallas,fused_iceberg|bit_identical=asserted",
+    )]
 
 
 # ---------------------------------------------------------------------------
@@ -62,9 +109,16 @@ def run(shapes=((2048, 128, 256), (8192, 512, 64))) -> list[str]:
 
 
 def _timed_driver(ctx, algo, *, n_parts, backend, pipeline, **kw):
+    rec, _ = _timed_driver_res(
+        ctx, algo, n_parts=n_parts, backend=backend, pipeline=pipeline, **kw
+    )
+    return rec
+
+
+def _timed_driver_res(ctx, algo, *, n_parts, backend, pipeline, **kw):
     """Warm-run protocol: build the engine, run once to populate every jit
     cache (the engine's sharded step is per-instance), reset the stats
-    ledger, then time the steady-state run."""
+    ledger, then time the steady-state run.  Returns (record, result)."""
     eng = ClosureEngine(ctx, n_parts=n_parts, backend=backend)
     algo(ctx, eng, pipeline=pipeline, **kw)
     eng.stats = EngineStats()
@@ -87,7 +141,12 @@ def _timed_driver(ctx, algo, *, n_parts, backend, pipeline, **kw):
         "h2d_bytes": st.h2d_bytes,
         "d2h_bytes": st.d2h_bytes,
         "modeled_comm_bytes": st.modeled_comm_bytes,
-    }
+    }, res
+
+
+def _canon_intents(intents):
+    arr = np.stack([np.asarray(y, dtype=np.uint32) for y in intents])
+    return arr[np.lexsort(arr.T[::-1])]
 
 
 def run_frontier(
@@ -135,6 +194,51 @@ def run_frontier(
             )
         )
 
+    # fused-vs-unfused A/B: backend="kernel" routes the device pipeline's
+    # frontier steps through the fused Pallas kernels (interpret mode on
+    # CPU, so wall times are a correctness A/B, not a TPU projection).
+    # Concept-set identity is asserted; the roofline entry prices one
+    # average closure round under the VPU-aware model for both paths.
+    from benchmarks import roofline
+
+    ab = {}
+    for backend in ("kernel", "jnp"):
+        ab[backend] = _timed_driver_res(
+            ctx_s, mrganter_plus, n_parts=1, backend=backend,
+            pipeline="device", dedupe_candidates=True,
+        )
+    k_rec, k_res = ab["kernel"]
+    j_rec, j_res = ab["jnp"]
+    assert k_rec["n_concepts"] == j_rec["n_concepts"]
+    np.testing.assert_array_equal(
+        _canon_intents(k_res.intents), _canon_intents(j_res.intents)
+    )
+    rounds = max(1, k_rec["n_iterations"] - 1)
+    B_round = max(8, k_rec["closures_computed"] // rounds)
+    N_round = ctx_s.n_objects + (-ctx_s.n_objects % 256)
+    fused_terms = roofline.closure_path_terms(
+        B_round, N_round, ctx_s.W, path="fused"
+    )
+    unfused_terms = roofline.closure_path_terms(
+        B_round, N_round, ctx_s.W, path="unfused"
+    )
+    fused_ab = {
+        "dataset": dataclasses.asdict(spec_s),
+        "note": (
+            "interpret-mode wall times — correctness A/B, not a TPU "
+            "projection; roofline terms model one average closure round"
+        ),
+        "records": [k_rec, j_rec],
+        "concepts_identical": True,
+        "roofline": {
+            "B": B_round,
+            "N": N_round,
+            "W": ctx_s.W,
+            "fused": fused_terms,
+            "unfused": unfused_terms,
+        },
+    }
+
     base = next(
         r for r in records
         if r["pipeline"] == "host" and r["algorithm"] == "mrganter+"
@@ -154,6 +258,7 @@ def run_frontier(
             "dataset": dataclasses.asdict(spec_s),
             "records": sweep,
         },
+        "fused_ab": fused_ab,
         "headline": {
             "baseline": "mrganter+ host-loop (paper-faithful)",
             "candidate": "mrganter+ device pipeline",
@@ -181,5 +286,11 @@ def run_frontier(
     out.append(row(
         "frontier/headline_speedup", speedup,
         f"devices_beat_host_x{speedup:.2f}|json={out_path}",
+    ))
+    out.append(row(
+        "frontier/fused_ab", 1e6 * k_rec["wall_time_s"],
+        f"concepts_identical=True|jnp_us={1e6 * j_rec['wall_time_s']:.0f}"
+        f"|fused_frac={fused_terms['achieved_fraction']:.3f}"
+        f"|unfused_frac={unfused_terms['achieved_fraction']:.3f}",
     ))
     return out

@@ -8,6 +8,18 @@ Hardware model: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
 FLOPs/bytes come from the while-aware HLO analyzer (repro.launch.hlo_analysis);
 ``model_flops`` is the analytic 6·N·D (train) / 2·N·D (inference) with
 N = active params.  See EXPERIMENTS.md for conventions and caveats.
+
+The FCA closure kernels are *bitwise VPU* work — zero MXU FLOPs — so an
+MXU-only model prices them at 0% of roofline no matter how good they are.
+``PEAK_VPU_OPS`` adds the integer/bitwise term: v5e's VPU is an (8, 128)
+lane grid with 4 independent ALU slots per lane at ~940 MHz, ≈ 3.85e12
+32-bit word-ops/s/chip.  ``closure_path_terms`` prices one frontier
+closure round (closure → support → driver filter) under that peak for the
+fused single-pass Pallas path vs the unfused op chain, whose stage
+boundaries re-stream the [B, W] closure block through HBM.  Reported per
+path as ``achieved_fraction`` — the fraction of the binding resource's
+roofline the path sustains — in BENCH_frontier.json (§Roofline table in
+EXPERIMENTS.md).
 """
 
 from __future__ import annotations
@@ -17,8 +29,50 @@ import json
 PEAK_FLOPS = 197e12  # bf16 / chip
 HBM_BW = 819e9  # bytes/s / chip
 ICI_BW = 50e9  # bytes/s / link
+# v5e VPU integer peak: 8·128 lanes × 4 ALU slots × ~0.94 GHz ≈ 3.85e12
+# 32-bit word-ops/s.  Documented assumption, not a measured number — see
+# EXPERIMENTS §Roofline.
+PEAK_VPU_OPS = 3.85e12
 
 TERMS = ("compute", "memory", "collective")
+
+
+def closure_path_terms(
+    B: int, N: int, W: int, *, path: str = "fused"
+) -> dict:
+    """VPU-aware roofline terms for ONE closure round of B candidates
+    against N context rows of W packed words.
+
+    Word-op census (per candidate·row·word): AND + compare for the subset
+    test, the select, and the AND-accumulate ≈ 4 ops, plus the match
+    reduction (≈ B·N) and the fused filter tail (≈ 3·B·W for mask, pad
+    correction, canonicity/iceberg compare).  HBM traffic: both paths
+    stream rows + candidates in and closures/supports/keep out; the
+    *unfused* op chain additionally round-trips the [B, W] closure block
+    at each stage boundary (closure → mask → filter: 3 write+read pairs),
+    which is exactly what the fused kernel's VMEM residency deletes.
+    """
+    if path not in ("fused", "unfused"):
+        raise ValueError(f"unknown closure path {path!r}")
+    word_ops = 4 * B * N * W + B * N + 3 * B * W
+    hbm = (N * W + B * W) * 4  # rows + candidates in
+    hbm += B * W * 4 + B * 4 + B * 4  # closures + supports + keep out
+    if path == "unfused":
+        hbm += 3 * 2 * B * W * 4  # stage-boundary round-trips of [B, W]
+    compute_s = word_ops / PEAK_VPU_OPS
+    memory_s = hbm / HBM_BW
+    bound_s = max(compute_s, memory_s)
+    return {
+        "path": path,
+        "word_ops": word_ops,
+        "hbm_bytes": hbm,
+        "compute_s": compute_s,
+        "memory_s": memory_s,
+        "dominant": "compute" if compute_s >= memory_s else "memory",
+        # useful-compute time over binding-resource time: 1.0 when the VPU
+        # is the bound, < 1 when HBM streaming caps the achievable rate
+        "achieved_fraction": compute_s / bound_s if bound_s > 0 else 0.0,
+    }
 
 
 def roofline_terms(rec: dict) -> dict:

@@ -39,6 +39,7 @@ from repro.core import bitset
 from repro.core.context import FormalContext
 from repro.dist import collectives
 from repro.dist.shardplan import AUTO_IMPLS, ShardPlan
+from repro.kernels import frontier as fkern
 from repro.kernels import ops
 
 
@@ -281,6 +282,341 @@ class ClosureEngine:
         if plan.reduce_impl != "auto":
             return make(plan.reduce_impl)
 
+        steps = {impl: make(impl) for impl in AUTO_IMPLS}
+
+        def dispatch(rows, cands, *extras):
+            block = cands.shape[0] // plan.cand_parts
+            impl = plan.resolve_impl(block, ctx.W, ctx.n_attrs)
+            return steps[impl](rows, cands, *extras)
+
+        return dispatch
+
+    # -- fused-kernel step builders (backend="kernel") ----------------------
+    #
+    # Twin builders for the frontier pipeline's step variants that replace
+    # the jnp closure→mask→filter op chain with the fused Pallas kernels in
+    # repro.kernels.frontier.  Two placements, chosen by plan geometry:
+    #
+    #   n_parts == 1 — the local closure IS the global closure, so ONE
+    #     ``fused_closure_call`` computes closure → support → driver filter
+    #     without the block ever leaving VMEM; no collective runs (the
+    #     size-1 AND-allreduce is the identity).
+    #   n_parts > 1 — the filter needs the *global* closure, which only
+    #     exists after the AND-allreduce, so the round is map kernel (the
+    #     attr mask folded in-kernel: AND distributes over the mask, so
+    #     masked locals allreduce to the masked global) → collectives →
+    #     fused filter kernel (pad correction + iceberg cut + canonicity in
+    #     one pass).
+    #
+    # Survivor *compaction* stays jnp in both placements: the argsort
+    # permutation is XLA's job and consumes only the kernel's keep mask —
+    # identical masks in, identical order out, which is what makes the
+    # fused steps bit-identical to the jnp builders (tests/
+    # test_fused_frontier.py).  Call signatures match the jnp builders
+    # exactly, so DeviceFrontier routes by name alone.
+
+    def _fused_ctx(self, LOW):
+        from repro.core.frontier import _compact, _sort_unique
+
+        return (
+            jnp.asarray(self._mask_np[None, :]),
+            jnp.asarray(LOW),
+            self.n_pad_rows,
+            dict(block_n=self.plan.block_n, interpret=self.interpret),
+            _compact,
+            _sort_unique,
+        )
+
+    def spmd_step_fused(self, variant: str, LOW):
+        """Fused-kernel 1-D step for ``variant`` ∈ ``fkern.VARIANTS``."""
+        iceberg, cbo, unique = fkern.VARIANTS[variant]
+        plan, ctx = self.plan, self.ctx
+        mask, LOW_c, n_pad, kw, _compact, _sort_unique = self._fused_ctx(LOW)
+        axes = plan.reduce_axes
+
+        def compact_out(keep, gc):
+            n, gc = _sort_unique(gc, keep) if unique else _compact(keep, gc)
+            return gc, n
+
+        if plan.n_parts == 1:
+            if variant == "plain":
+
+                def body(rows_local, cands):
+                    gc, _, _ = fkern.fused_closure_call(
+                        rows_local, cands, mask,
+                        fkern.pack_scalars(0, 0, n_pad, 0), **kw,
+                    )
+                    return gc
+
+                return jax.jit(plan.spmd(body, n_rep=1))
+
+            if cbo:
+
+                def body(rows_local, cands, parents, gens, n_valid, *ms):
+                    sc = fkern.pack_scalars(
+                        n_valid, ms[0] if iceberg else 0, n_pad, 0
+                    )
+                    gc, _, keep = fkern.fused_closure_call(
+                        rows_local, cands, mask, sc,
+                        parent=parents, lowrow=LOW_c[gens],
+                        iceberg=iceberg, cbo=True, **kw,
+                    )
+                    return gc, keep, gens
+
+                def post(gc, keep, gens):
+                    n, gc, gens = _compact(keep, gc, gens)
+                    return gc, gens, n
+
+                return jax.jit(
+                    plan.spmd(body, n_rep=5 if iceberg else 4, post=post)
+                )
+
+            def body(rows_local, cands, n_valid, *ms):
+                sc = fkern.pack_scalars(
+                    n_valid, ms[0] if iceberg else 0, n_pad, 0
+                )
+                gc, _, keep = fkern.fused_closure_call(
+                    rows_local, cands, mask, sc, iceberg=iceberg, **kw,
+                )
+                return gc, keep
+
+            return jax.jit(
+                plan.spmd(
+                    body,
+                    n_rep=3 if iceberg else 2,
+                    post=lambda gc, keep: compact_out(keep, gc),
+                )
+            )
+
+        # multi-shard: map kernel → collectives → fused filter kernel
+        interp = self.interpret
+        with_sup = iceberg
+
+        def make(impl):
+            def body(rows_local, cands):
+                lc, ls = fkern.map_closure_call(rows_local, cands, mask, **kw)
+                gc = collectives.and_allreduce(
+                    lc, axes, impl=impl, n_attrs=ctx.n_attrs
+                )
+                if with_sup:
+                    return gc, lax.psum(ls, axes) - n_pad
+                return gc
+
+            if variant == "plain":
+                return jax.jit(plan.spmd(body, n_rep=1))
+
+            if cbo:
+                if iceberg:
+
+                    def post(gc, gs, parents, gens, n_valid, min_sup):
+                        _, keep = fkern.filter_call(
+                            gc, gs,
+                            fkern.pack_scalars(n_valid, min_sup, 0, 0),
+                            parent=parents, lowrow=LOW_c[gens],
+                            iceberg=True, cbo=True, interpret=interp,
+                        )
+                        n, gc, gens = _compact(keep, gc, gens)
+                        return gc, gens, n
+
+                    n_extra = 4
+                else:
+
+                    def post(gc, parents, gens, n_valid):
+                        _, keep = fkern.filter_call(
+                            gc, jnp.zeros(gc.shape[0], jnp.int32),
+                            fkern.pack_scalars(n_valid, 0, 0, 0),
+                            parent=parents, lowrow=LOW_c[gens],
+                            cbo=True, interpret=interp,
+                        )
+                        n, gc, gens = _compact(keep, gc, gens)
+                        return gc, gens, n
+
+                    n_extra = 3
+            elif iceberg:
+
+                def post(gc, gs, n_valid, min_sup):
+                    _, keep = fkern.filter_call(
+                        gc, gs, fkern.pack_scalars(n_valid, min_sup, 0, 0),
+                        iceberg=True, interpret=interp,
+                    )
+                    return compact_out(keep, gc)
+
+                n_extra = 2
+            else:  # unique — validity-only mask needs no filter kernel
+
+                def post(gc, n_valid):
+                    keep = jnp.arange(gc.shape[0]) < n_valid
+                    return compact_out(keep, gc)
+
+                n_extra = 1
+
+            return jax.jit(
+                plan.spmd(body, n_rep=1, post=post, n_post_rep=n_extra)
+            )
+
+        if plan.reduce_impl != "auto":
+            return make(plan.reduce_impl)
+        steps = {impl: make(impl) for impl in AUTO_IMPLS}
+
+        def dispatch(rows, cands, *extras):
+            impl = plan.resolve_impl(cands.shape[0], ctx.W, ctx.n_attrs)
+            return steps[impl](rows, cands, *extras)
+
+        return dispatch
+
+    def spmd_step_cand_fused(self, variant: str, LOW, merge, *, n_merge_rep=0):
+        """Fused-kernel 2-D twin: ``variant`` per candidate block, filters
+        block-local (``row_off = cand_index · Bc`` rides the kernels'
+        scalar operand), survivors gathered along ``cand`` into ``merge``.
+        """
+        iceberg, cbo, unique = fkern.VARIANTS[variant]
+        plan, ctx = self.plan, self.ctx
+        mask, LOW_c, n_pad, kw, _compact, _sort_unique = self._fused_ctx(LOW)
+        axes = plan.reduce_axes
+
+        def compact_out(keep, gc):
+            n, gc = _sort_unique(gc, keep) if unique else _compact(keep, gc)
+            return gc, n
+
+        if plan.n_parts == 1:
+            if variant == "plain":
+
+                def body(rows_local, cands):
+                    gc, _, _ = fkern.fused_closure_call(
+                        rows_local, cands, mask,
+                        fkern.pack_scalars(0, 0, n_pad, 0), **kw,
+                    )
+                    return gc
+
+                return jax.jit(
+                    plan.spmd_cand(body, n_cand=1, merge=merge)
+                )
+
+            if cbo:
+
+                def body(rows_local, cands, parents, gens, n_valid, *ms):
+                    sc = fkern.pack_scalars(
+                        n_valid, ms[0] if iceberg else 0, n_pad,
+                        plan.cand_index() * cands.shape[0],
+                    )
+                    gc, _, keep = fkern.fused_closure_call(
+                        rows_local, cands, mask, sc,
+                        parent=parents, lowrow=LOW_c[gens],
+                        iceberg=iceberg, cbo=True, **kw,
+                    )
+                    return gc, keep, gens
+
+                def post(idx, gc, keep, gens):
+                    n, gc, gens = _compact(keep, gc, gens)
+                    return gc, gens, n
+
+                return jax.jit(
+                    plan.spmd_cand(
+                        body, n_cand=3, n_rep=2 if iceberg else 1,
+                        post=post, merge=merge, n_merge_rep=n_merge_rep,
+                    )
+                )
+
+            def body(rows_local, cands, n_valid, *ms):
+                sc = fkern.pack_scalars(
+                    n_valid, ms[0] if iceberg else 0, n_pad,
+                    plan.cand_index() * cands.shape[0],
+                )
+                gc, _, keep = fkern.fused_closure_call(
+                    rows_local, cands, mask, sc, iceberg=iceberg, **kw,
+                )
+                return gc, keep
+
+            return jax.jit(
+                plan.spmd_cand(
+                    body, n_cand=1, n_rep=2 if iceberg else 1,
+                    post=lambda idx, gc, keep: compact_out(keep, gc),
+                    merge=merge, n_merge_rep=n_merge_rep,
+                )
+            )
+
+        interp = self.interpret
+        with_sup = iceberg
+
+        def make(impl):
+            def body(rows_local, *cand_ops):
+                lc, ls = fkern.map_closure_call(
+                    rows_local, cand_ops[0], mask, **kw
+                )
+                gc = collectives.and_allreduce(
+                    lc, axes, impl=impl, n_attrs=ctx.n_attrs
+                )
+                if with_sup:
+                    return (gc, lax.psum(ls, axes) - n_pad, *cand_ops[1:])
+                return (gc, *cand_ops[1:])
+
+            if variant == "plain":
+                return jax.jit(plan.spmd_cand(body, n_cand=1, merge=merge))
+
+            if cbo:
+                if iceberg:
+
+                    def post(idx, gc, gs, parents, gens, n_valid, min_sup):
+                        sc = fkern.pack_scalars(
+                            n_valid, min_sup, 0, idx * gc.shape[0]
+                        )
+                        _, keep = fkern.filter_call(
+                            gc, gs, sc, parent=parents, lowrow=LOW_c[gens],
+                            iceberg=True, cbo=True, interpret=interp,
+                        )
+                        n, gc, gens = _compact(keep, gc, gens)
+                        return gc, gens, n
+
+                    n_extra = 2
+                else:
+
+                    def post(idx, gc, parents, gens, n_valid):
+                        sc = fkern.pack_scalars(n_valid, 0, 0, idx * gc.shape[0])
+                        _, keep = fkern.filter_call(
+                            gc, jnp.zeros(gc.shape[0], jnp.int32), sc,
+                            parent=parents, lowrow=LOW_c[gens],
+                            cbo=True, interpret=interp,
+                        )
+                        n, gc, gens = _compact(keep, gc, gens)
+                        return gc, gens, n
+
+                    n_extra = 1
+                return jax.jit(
+                    plan.spmd_cand(
+                        body, n_cand=3, post=post, n_post_rep=n_extra,
+                        merge=merge, n_merge_rep=n_merge_rep,
+                    )
+                )
+
+            if iceberg:
+
+                def post(idx, gc, gs, n_valid, min_sup):
+                    sc = fkern.pack_scalars(
+                        n_valid, min_sup, 0, idx * gc.shape[0]
+                    )
+                    _, keep = fkern.filter_call(
+                        gc, gs, sc, iceberg=True, interpret=interp
+                    )
+                    return compact_out(keep, gc)
+
+                n_extra = 2
+            else:  # unique — validity-only mask needs no filter kernel
+
+                def post(idx, gc, n_valid):
+                    keep = (jnp.arange(gc.shape[0]) + idx * gc.shape[0]) < n_valid
+                    return compact_out(keep, gc)
+
+                n_extra = 1
+
+            return jax.jit(
+                plan.spmd_cand(
+                    body, n_cand=1, post=post, n_post_rep=n_extra,
+                    merge=merge, n_merge_rep=n_merge_rep,
+                )
+            )
+
+        if plan.reduce_impl != "auto":
+            return make(plan.reduce_impl)
         steps = {impl: make(impl) for impl in AUTO_IMPLS}
 
         def dispatch(rows, cands, *extras):

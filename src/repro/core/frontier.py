@@ -57,6 +57,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import lectic
+from repro.kernels import frontier as fkern
 from repro.kernels.ops import bucket_size
 
 
@@ -429,6 +430,35 @@ class DeviceFrontier:
                     ),
                 },
             }
+            # backend="kernel": route every step variant above (except the
+            # single-intent ganter walks, whose map already runs the Pallas
+            # closure kernel and whose argmax-select has no batch filter to
+            # fuse) to the fused Pallas kernels — closure → support → driver
+            # filter in one VMEM-resident pass (repro.kernels.frontier).
+            # Same names, same call signatures, bit-identical outputs; the
+            # jnp builders above remain the oracles the kernels are
+            # property-tested against (tests/test_fused_frontier.py).
+            if fkern.supports_fused(engine.backend, engine.ctx.W):
+                LOWt = t.LOW
+                fused = {
+                    v: (lambda v=v: engine.spmd_step_fused(v, LOWt))
+                    for v in fkern.VARIANTS
+                }
+                merges = {
+                    "plain": merge_blocks_plain,
+                    "unique": merge_blocks_unique,
+                    "iceberg": merge_blocks_compact,
+                    "iceberg_unique": merge_blocks_unique,
+                    "cbo": merge_blocks_cbo,
+                    "cbo_iceberg": merge_blocks_cbo,
+                }
+                for v, mg in merges.items():
+                    fused[v + "2d"] = (
+                        lambda v=v, mg=mg: engine.spmd_step_cand_fused(
+                            v, LOWt, mg
+                        )
+                    )
+                cache["builders"].update(fused)
             engine._frontier_cache = cache
         self._cache = cache
         self.LOW = cache["LOW"]

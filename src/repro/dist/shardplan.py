@@ -349,6 +349,13 @@ class ShardPlan:
         device.  Bit-identical either way.  The returned callable takes
         ``(rows, *replicated, *post_replicated)``; callers normally wrap
         it in ``jax.jit``.
+
+        ``body`` may itself be a Pallas kernel call — the fused frontier
+        steps (``repro.kernels.frontier``) run their ``pallas_call``
+        inside this region: on a single-part plan the whole step (closure
+        → support → filter) is one kernel; on multi-part plans the map
+        kernel runs per shard here and the filter kernel rides in
+        ``post`` after the cross-shard AND-allreduce.
         """
         if out_shard is not None and post is not None:
             raise ValueError("out_shard= and post= are mutually exclusive")

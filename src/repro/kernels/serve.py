@@ -1,0 +1,272 @@
+"""Fused serving kernels — the QueryEngine's subset test → mask → top-k
+as one VMEM-resident Pallas pass (ISSUE 6 tentpole, serving side).
+
+``QueryEngine.topk_batch`` and ``rules_batch`` both run the same shape of
+computation over a replicated table: a bitwise subset test per (query,
+table-row) pair, a validity/threshold mask, then k unrolled selection
+passes.  As jnp ops the ``[slots, rows]`` score matrix and the
+``[slots, rows, W]`` subset intermediate round-trip through HBM between
+stages; these kernels keep the query block and the whole table VMEM-
+resident from the subset test to the packed top-k result.
+
+``contains_topk_call``
+    ``topk_batch``'s post stage: concepts whose intent ⊇ the (closed)
+    query == subconcepts of closure(attrset), masked top-k by support.
+
+``rules_topk_call``
+    ``rules_batch``: premise ⊆ query test, confidence/validity mask, the
+    firing rules' consequent union, and metric top-k with the rule-id
+    tie-break.
+
+Both mirror the jnp steps in :mod:`repro.query.engine` bit-for-bit (the
+unrolled argmax/max passes use the identical mask-and-repeat recurrence;
+the in-kernel ``where(iota == pos)`` scatter equals ``.at[rows, pos].set``
+because ``pos`` is unique per row).  Oversized tables fall back to the jnp
+step — see :func:`supports_serve`.  Interpret-mode equivalence is asserted
+in tests/test_fused_frontier.py.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+from repro import compat
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.closure import MAX_W
+
+# Queries per grid step (the slot axis is blocked; tables ride whole).
+DEFAULT_S_BLK = 8
+
+# Table-size ceiling for the VMEM-resident path: rows × words of the
+# replicated table a single grid step holds.  ~16 MiB of uint32 at the
+# cap — beyond it the jnp step is the right tool (its score matrix tiles
+# naturally under XLA), so callers fall back rather than thrash VMEM.
+MAX_TABLE_CELLS = 1 << 22
+
+
+def supports_serve(backend: str, n_rows: int, W: int, slots: int) -> bool:
+    """Whether the fused serving kernels can serve this table/batch shape."""
+    return (
+        backend == "kernel"
+        and W <= MAX_W
+        and n_rows * max(W, 1) <= MAX_TABLE_CELLS
+        and slots % DEFAULT_S_BLK == 0
+    )
+
+
+def _topk_int(scores, k):
+    """k unrolled argmax passes over int scores [S, C] → (idx, vals).
+
+    Same order as lax.top_k (desc value, asc index on ties); the repeat
+    recurrence masks the taken cell with -2 < every live score ≥ -1.
+    """
+    C = scores.shape[1]
+    col = lax.broadcasted_iota(jnp.int32, scores.shape, 1)
+    ids, vals = [], []
+    for _ in range(k):
+        idx = jnp.argmax(scores, axis=1).astype(jnp.int32)
+        val = jnp.max(scores, axis=1)  # == scores[row, argmax] by definition
+        ids.append(idx)
+        vals.append(val)
+        scores = jnp.where(col == idx[:, None], jnp.int32(-2), scores)
+    vals = jnp.stack(vals, axis=1)
+    idx = jnp.stack(ids, axis=1)
+    idx = jnp.where(vals >= 0, idx, -1)
+    return idx, jnp.maximum(vals, -1)
+
+
+def _contains_topk_kernel(k, s_ref, gc_ref, int_ref, sup_ref,
+                          out_i_ref, out_v_ref):
+    gc = gc_ref[...]  # [bs, W]
+    intents = int_ref[...]  # [C, W]
+    C = intents.shape[0]
+    contains = jnp.all((gc[:, None, :] & ~intents[None, :, :]) == 0, axis=-1)
+    valid = lax.broadcasted_iota(jnp.int32, (1, C), 1) < s_ref[0]
+    scores = jnp.where(contains & valid, sup_ref[...], jnp.int32(-1))
+    idx, vals = _topk_int(scores, k)
+    out_i_ref[...] = idx
+    out_v_ref[...] = vals
+
+
+@functools.partial(
+    jax.jit, static_argnames=("k", "block_s", "interpret")
+)
+def contains_topk_call(
+    gc: jax.Array,
+    intents: jax.Array,
+    supports: jax.Array,
+    n_concepts: jax.Array,
+    *,
+    k: int,
+    block_s: int = DEFAULT_S_BLK,
+    interpret: bool = True,
+) -> tuple[jax.Array, jax.Array]:
+    """Fused top-k-by-support over concepts containing each closed query.
+
+    gc [S, W] closed queries, intents [C, W] + supports [C] the snapshot
+    tables, n_concepts the live row count (traced).  Returns
+    (ids [S, k], supports [S, k]) with -1 pads, bit-identical to the jnp
+    post in ``QueryEngine._topk_step``.
+    """
+    S, W = gc.shape
+    C = intents.shape[0]
+    if S % block_s:
+        raise ValueError(f"slots S={S} not a multiple of block_s={block_s}")
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(S // block_s,),
+        in_specs=[
+            pl.BlockSpec((block_s, W), lambda b, s: (b, 0)),
+            pl.BlockSpec((C, W), lambda b, s: (0, 0)),
+            pl.BlockSpec((1, C), lambda b, s: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_s, k), lambda b, s: (b, 0)),
+            pl.BlockSpec((block_s, k), lambda b, s: (b, 0)),
+        ],
+    )
+    out_i, out_v = pl.pallas_call(
+        functools.partial(_contains_topk_kernel, k),
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((S, k), jnp.int32),
+            jax.ShapeDtypeStruct((S, k), jnp.int32),
+        ],
+        compiler_params=compat.tpu_compiler_params(
+            dimension_semantics=("parallel",)
+        ),
+        interpret=interpret,
+    )(
+        jnp.asarray(n_concepts, jnp.int32)[None],
+        gc,
+        intents,
+        supports.astype(jnp.int32)[None, :],
+    )
+    return out_i, out_v
+
+
+def _tree_or(x: jax.Array, axis: int) -> jax.Array:
+    """Bitwise-OR reduce along ``axis`` via a log2 tree (static shapes)."""
+    x = jnp.moveaxis(x, axis, 0)
+    n = x.shape[0]
+    while n > 1:
+        half = n // 2
+        paired = x[: 2 * half]
+        x = jnp.concatenate([paired[0::2] | paired[1::2], x[2 * half :]], axis=0)
+        n = x.shape[0]
+    return x[0]
+
+
+def _rules_topk_kernel(k, s_ref, q_ref, prem_ref, add_ref, conf_ref,
+                       met_ref, rid_ref, minc_ref,
+                       out_i_ref, out_v_ref, out_u_ref):
+    queries = q_ref[...]  # [bs, W]
+    prem = prem_ref[...]  # [R, W]
+    added = add_ref[...]  # [R, W]
+    R = prem.shape[0]
+    rid = rid_ref[...]  # [1, R]
+    app = jnp.all((prem[None, :, :] & ~queries[:, None, :]) == 0, axis=-1)
+    live = lax.broadcasted_iota(jnp.int32, (1, R), 1) < s_ref[0]
+    ok = app & (conf_ref[...] >= minc_ref[...]) & live  # [bs, R]
+    # premise→consequent closure: OR-union of every firing conclusion
+    fired = jnp.where(ok[:, :, None], added[None], jnp.uint32(0))
+    out_u_ref[...] = _tree_or(fired, axis=1)
+    # metric top-k with rule-id tie-break (lowest id wins), mirroring
+    # QueryEngine._rules_step: the where(iota == pos) scatter equals
+    # .at[rows, pos].set(-2.0) because pos is unique per row.
+    score = jnp.where(ok, met_ref[...], jnp.float32(-1.0))
+    col = lax.broadcasted_iota(jnp.int32, score.shape, 1)
+    ids, vals = [], []
+    for _ in range(k):
+        best = jnp.max(score, axis=1)
+        is_best = score == best[:, None]
+        sel = jnp.min(
+            jnp.where(is_best, rid, jnp.int32(0x7FFFFFFF)), axis=1
+        )
+        pos = jnp.argmax(is_best & (rid == sel[:, None]), axis=1)
+        ids.append(sel)
+        vals.append(best)
+        score = jnp.where(col == pos[:, None], jnp.float32(-2.0), score)
+    vals = jnp.stack(vals, axis=1)
+    idx = jnp.stack(ids, axis=1)
+    out_i_ref[...] = jnp.where(vals >= 0, idx, -1)
+    out_v_ref[...] = jnp.maximum(vals, -1.0)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("k", "block_s", "interpret")
+)
+def rules_topk_call(
+    prem: jax.Array,
+    added: jax.Array,
+    conf: jax.Array,
+    metric: jax.Array,
+    rid: jax.Array,
+    n_rules: jax.Array,
+    queries: jax.Array,
+    min_conf: jax.Array,
+    *,
+    k: int,
+    block_s: int = DEFAULT_S_BLK,
+    interpret: bool = True,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Fused rule lookup: premise ⊆ query → conf/validity mask → consequent
+    union → metric top-k with rule-id tie-break, one pass per query block.
+
+    Operand order matches ``QueryEngine._rules_step``'s jnp ``run`` so the
+    engine can route by backend without reshuffling: rule tables
+    prem/added [R, W], conf/metric [R] f32, rid [R] i32, traced n_rules,
+    queries [S, W], traced min_conf.  Returns (rule ids [S, k] (-1 pads),
+    scores [S, k], consequent unions [S, W]).
+    """
+    S, W = queries.shape
+    R = prem.shape[0]
+    if S % block_s:
+        raise ValueError(f"slots S={S} not a multiple of block_s={block_s}")
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(S // block_s,),
+        in_specs=[
+            pl.BlockSpec((block_s, W), lambda b, s: (b, 0)),
+            pl.BlockSpec((R, W), lambda b, s: (0, 0)),
+            pl.BlockSpec((R, W), lambda b, s: (0, 0)),
+            pl.BlockSpec((1, R), lambda b, s: (0, 0)),
+            pl.BlockSpec((1, R), lambda b, s: (0, 0)),
+            pl.BlockSpec((1, R), lambda b, s: (0, 0)),
+            pl.BlockSpec((1, 1), lambda b, s: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_s, k), lambda b, s: (b, 0)),
+            pl.BlockSpec((block_s, k), lambda b, s: (b, 0)),
+            pl.BlockSpec((block_s, W), lambda b, s: (b, 0)),
+        ],
+    )
+    out_i, out_v, out_u = pl.pallas_call(
+        functools.partial(_rules_topk_kernel, k),
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((S, k), jnp.int32),
+            jax.ShapeDtypeStruct((S, k), jnp.float32),
+            jax.ShapeDtypeStruct((S, W), jnp.uint32),
+        ],
+        compiler_params=compat.tpu_compiler_params(
+            dimension_semantics=("parallel",)
+        ),
+        interpret=interpret,
+    )(
+        jnp.asarray(n_rules, jnp.int32)[None],
+        queries,
+        prem,
+        added,
+        conf.astype(jnp.float32)[None, :],
+        metric.astype(jnp.float32)[None, :],
+        rid.astype(jnp.int32)[None, :],
+        jnp.asarray(min_conf, jnp.float32)[None, None],
+    )
+    return out_i, out_v, out_u

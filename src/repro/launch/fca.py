@@ -293,7 +293,10 @@ def main(argv=None):
     p.add_argument("--pod", type=int, default=1,
                    help="pod axis size for --mesh (>1 builds a pod×data mesh)")
     p.add_argument("--backend", default=None, choices=list(BACKENDS),
-                   help="closure map backend (default: kernel)")
+                   help="closure map backend (default: kernel — fused "
+                        "Pallas frontier steps: closure, support and "
+                        "driver filter in one VMEM-resident pass; "
+                        "serving kernels route with it)")
     p.add_argument("--no-kernel", action="store_true",
                    help="deprecated: use --backend jnp")
     p.add_argument("--pipeline", default="device", choices=list(PIPELINES),

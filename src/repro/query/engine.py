@@ -37,6 +37,7 @@ from jax import lax
 from repro.core import bitset
 from repro.dist import collectives
 from repro.kernels import ops
+from repro.kernels import serve as skern
 from repro.query.store import (
     ConceptStore,
     lookup_ids_jnp,
@@ -149,8 +150,24 @@ class QueryEngine:
     def _topk_step(self, impl: str, k: int):
         step = self._topk_steps.get((impl, k))
         if step is None:
+            cfg = self.cfg
 
             def post(gc, gs, intents, supports, n_concepts):
+                # backend="kernel": the whole post — subset test, validity
+                # mask, k selection passes — runs as ONE fused Pallas pass
+                # with the query block and intent table VMEM-resident
+                # (repro.kernels.serve).  Bit-identical to the jnp stage
+                # below, which remains its tested oracle; oversized tables
+                # fall back (the shapes are static at trace time).
+                if skern.supports_serve(
+                    cfg.backend, intents.shape[0], intents.shape[1],
+                    gc.shape[0],
+                ):
+                    idx, vals = skern.contains_topk_call(
+                        gc, intents, supports, n_concepts,
+                        k=k, interpret=cfg.interpret,
+                    )
+                    return gc, gs, idx, vals
                 # concepts whose intent ⊇ the query attrset == subconcepts
                 # of closure(attrset); masked top-k by support.  Extracted
                 # with k unrolled argmax passes — same order as lax.top_k
@@ -388,8 +405,21 @@ class QueryEngine:
         # so confidence- and lift-ranked queries share one compiled step
         step = self._rules_steps.get(k)
         if step is None:
+            cfg = self.cfg
 
             def run(prem, added, conf, metric, rid, n_rules, queries, min_conf):
+                # backend="kernel": premise-subset test → conf mask →
+                # consequent union → metric top-k as one fused VMEM pass
+                # (repro.kernels.serve.rules_topk_call), bit-identical to
+                # the jnp stage below (its property-tested oracle).
+                if skern.supports_serve(
+                    cfg.backend, prem.shape[0], prem.shape[1],
+                    queries.shape[0],
+                ):
+                    return skern.rules_topk_call(
+                        prem, added, conf, metric, rid, n_rules,
+                        queries, min_conf, k=k, interpret=cfg.interpret,
+                    )
                 R = prem.shape[0]
                 # applicable[b, r]: premise_r ⊆ query attrset b
                 app = jnp.all(

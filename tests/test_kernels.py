@@ -96,6 +96,39 @@ def test_wide_context_falls_back_to_ref():
     np.testing.assert_array_equal(np.asarray(ks), os_)
 
 
+@pytest.mark.parametrize("W", [ops.MAX_W, ops.MAX_W + 1])
+def test_max_w_boundary_matches_oracle(W):
+    """Both sides of the silent W > MAX_W fallback agree with the numpy
+    oracle — same closures AND identically-corrected supports.  W = MAX_W
+    takes the Pallas kernel; W = MAX_W + 1 takes the jnp reference path;
+    a caller cannot tell them apart."""
+    m = W * 32 - 5  # exactly W packed words (bitset.n_words(m) == W)
+    ctx = FormalContext.synthetic(10, m, 0.02, seed=W)
+    cands = bitset.pack_bool(
+        np.random.default_rng(W).random((2, m)) < 0.01
+    )
+    assert ctx.W == W
+    rows_p, _ = ctx.padded_rows(64)
+    kc, ks = ops.batched_closure(
+        jnp.asarray(rows_p), jnp.asarray(cands), m,
+        n_valid_rows=ctx.n_objects, block_n=64,
+    )
+    oc, os_ = batched_closure_np(ctx.rows, cands, ctx.attr_mask())
+    np.testing.assert_array_equal(np.asarray(kc), oc)
+    np.testing.assert_array_equal(np.asarray(ks), os_)
+
+
+def test_pad_correction_exact_block_multiple():
+    """N already an exact block_n multiple → zero all-ones pad rows are
+    added, and the support correction must be exactly the external pad
+    count (here 0), not an off-by-block constant."""
+    for N, block_n in ((128, 64), (256, 256), (64, 64)):
+        ctx, cands = _case(N, 40, 8, 0.4, 0.15, seed=N)
+        rows_p, n_pad = ctx.padded_rows(block_n)
+        assert n_pad == 0 and rows_p.shape[0] % block_n == 0
+        _check(ctx, cands, block_n=block_n)
+
+
 @given(
     st.integers(1, 300), st.integers(1, 130), st.integers(1, 12),
     st.floats(0.05, 0.9), st.integers(0, 10_000),
