@@ -17,9 +17,14 @@ tests/test_distributed_8dev.py):
     {8×1, 4×2, 2×4} at a fixed per-device chunk budget: the frontier-axis
     decomposition's reduce-bytes/round against the 1-D plan, with the
     concept sets asserted identical before any timing.
+  * **async A/B** — every driver × plans {4×1, 8×1, 2×4} under
+    ``rounds="sync"`` vs the speculative double-buffered ``"async"``
+    scheduler: per-round host-blocked vs dispatch latency split,
+    concept sets asserted identical per pair before timing.
 
-Writes BENCH_dist.json; headlines are the pruning byte ratio and the
-1-D vs 2-D reduce-bytes ratio under the production rsag schedule.
+Writes BENCH_dist.json; headlines are the pruning byte ratio, the
+1-D vs 2-D reduce-bytes ratio under the production rsag schedule, and
+the best per-round host-blocked-time reduction from async rounds.
 """
 
 from __future__ import annotations
@@ -29,11 +34,13 @@ import json
 import time
 
 from benchmarks.common import row
-from repro.core import ClosureEngine, mrganter_plus
+from repro.core import ClosureEngine, mrcbo, mrganter, mrganter_plus
 from repro.core.engine import EngineStats
 from repro.data import fca_datasets
 from repro.dist.collectives import IMPLS
 from repro.dist.shardplan import ShardPlan
+
+ALGOS = {"mrganter+": mrganter_plus, "mrcbo": mrcbo, "mrganter": mrganter}
 
 
 def _timed_run(ctx, plan: ShardPlan, *, local_prune: bool, keys_out=None) -> dict:
@@ -63,6 +70,93 @@ def _timed_run(ctx, plan: ShardPlan, *, local_prune: bool, keys_out=None) -> dic
         "reduce_bytes_total": st.modeled_comm_bytes,
         "reduce_bytes_per_round": st.modeled_comm_bytes // rounds,
     }
+
+
+def _timed_rounds_run(ctx, algo: str, plan: ShardPlan, *, rounds: str,
+                      keys_out=None, **kw) -> dict:
+    """Warm-run A/B cell for the sync-vs-async round scheduler.
+
+    Same protocol as :func:`_timed_run` but parameterised over driver and
+    ``rounds`` mode, and reporting the host-blocked/dispatch latency split
+    the speculative scheduler is built to move."""
+    fn = ALGOS[algo]
+    eng = ClosureEngine(ctx, plan=plan, backend="jnp")
+    fn(ctx, eng, pipeline="device", rounds=rounds, **kw)
+    eng.stats = EngineStats()
+    t0 = time.perf_counter()
+    res = fn(ctx, eng, pipeline="device", rounds=rounds, **kw)
+    wall = time.perf_counter() - t0
+    if keys_out is not None:
+        from repro.core import bitset
+
+        keys_out.append({bitset.key_bytes(y) for y in res.intents})
+    st = eng.stats
+    nr = max(1, st.rounds)
+    return {
+        "algorithm": algo,
+        "plan": plan.describe(),
+        "rounds_mode": rounds,
+        "wall_time_s": round(wall, 4),
+        "n_concepts": res.n_concepts,
+        "n_iterations": res.n_iterations,
+        "rounds": nr,
+        "host_blocked_s_per_round": round(st.host_blocked_s / nr, 6),
+        "dispatch_s_per_round": round(st.dispatch_s / nr, 6),
+        "d2h_transfers_per_round": round(st.d2h_transfers / nr, 2),
+        "modeled_dispatch_bytes_per_round": st.modeled_dispatch_bytes // nr,
+        "modeled_collective_bytes_per_round": st.modeled_collective_bytes // nr,
+        "spec_rounds": st.spec_rounds,
+        "spec_fallbacks": st.spec_fallbacks,
+        "spec_discarded": st.spec_discarded,
+    }
+
+
+def run_async_ab(ctx, *, mrganter_cap: int = 40) -> tuple[list[dict], dict]:
+    """sync-vs-async A/B over drivers × shard plans (§Async).
+
+    Concept-set identity is asserted per cell pair BEFORE timing is
+    reported; MRGanter (one concept per round) is capped so the lectic
+    chain doesn't dominate the sweep — both arms get the same cap, so the
+    identity check still binds."""
+    grid = [
+        ("mrganter+", dict(local_prune=True), None),
+        ("mrcbo", {}, None),
+        ("mrganter", {}, mrganter_cap),
+    ]
+    plans = ((4, 1), (8, 1), (2, 4))
+    records, best = [], 0.0
+    for algo, kw, cap in grid:
+        for n_obj, n_cand in plans:
+            plan_kw = dict(reduce_impl="rsag")
+            if n_cand > 1:
+                plan_kw["max_batch"] = 1024
+            pair, keys = [], []
+            for mode in ("sync", "async"):
+                plan = ShardPlan.simulated(
+                    n_obj, cand_parts=n_cand, **plan_kw
+                )
+                pair.append(_timed_rounds_run(
+                    ctx, algo, plan, rounds=mode, keys_out=keys,
+                    max_iterations=cap, **kw,
+                ))
+            if keys[0] != keys[1]:
+                raise RuntimeError(
+                    f"async concept set diverged: {algo} {n_obj}x{n_cand}"
+                )
+            sync_hb = pair[0]["host_blocked_s_per_round"]
+            async_hb = pair[1]["host_blocked_s_per_round"]
+            reduction = 1.0 - async_hb / max(sync_hb, 1e-12)
+            for r in pair:
+                r["concept_sets_identical"] = True
+                r["host_blocked_reduction"] = round(reduction, 4)
+            best = max(best, reduction)
+            records.extend(pair)
+    headline = {
+        "grid": "3 drivers x {4x1, 8x1, 2x4} obj x cand, rsag",
+        "host_blocked_reduction_best": round(best, 4),
+        "concept_sets_identical": True,  # every pair checked pre-timing
+    }
+    return records, headline
 
 
 def run(
@@ -102,6 +196,8 @@ def run(
     if not cand_identical:
         raise RuntimeError("1-D vs 2-D concept sets diverged")
 
+    async_ab, async_headline = run_async_ab(ctx)
+
     def _ab(impl: str) -> tuple[dict, dict]:
         off, on = (
             r for r in pruning if r["plan"]["reduce_impl"] == impl
@@ -117,6 +213,8 @@ def run(
         "scaling": scaling,
         "pruning_ab": pruning,
         "cand2d_ab": cand2d,
+        "async_ab": async_ab,
+        "headline_async": async_headline,
         "headline": {
             "plan": f"simulated {prune_ab_parts}-shard, rsag schedule",
             "reduce_bytes_per_round_no_prune": off["reduce_bytes_per_round"],
@@ -179,5 +277,21 @@ def run(
         "dist/headline_2d_bytes_ratio",
         payload["headline_2d"]["reduce_bytes_ratio_1d_over_2d"],
         f"rsag_8dev_1d_vs_2d|json={out_path}",
+    ))
+    for r in async_ab:
+        p = r["plan"]
+        out.append(row(
+            f"dist/async_ab/{r['algorithm']}/"
+            f"obj={p['n_parts']}xcand={p['cand_parts']}/{r['rounds_mode']}",
+            1e6 * r["wall_time_s"],
+            f"host_blocked_s_per_round={r['host_blocked_s_per_round']}"
+            f"|dispatch_s_per_round={r['dispatch_s_per_round']}"
+            f"|d2h_per_round={r['d2h_transfers_per_round']}"
+            f"|spec_fb={r['spec_fallbacks']}",
+        ))
+    out.append(row(
+        "dist/headline_async_host_blocked_reduction",
+        async_headline["host_blocked_reduction_best"],
+        f"best_cell_sync_vs_async|json={out_path}",
     ))
     return out

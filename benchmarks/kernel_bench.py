@@ -239,6 +239,30 @@ def run_frontier(
         },
     }
 
+    # async transfer-batching A/B: the speculative scheduler packs each
+    # round's scalar count + survivor payload into ONE device array and
+    # starts the D2H copy at dispatch, vs the sync path's separate scalar
+    # readback + payload download.  Concept sets asserted identical.
+    tb = {}
+    for mode in ("sync", "async"):
+        tb[mode] = _timed_driver_res(
+            ctx, mrganter_plus, n_parts=n_parts, backend="jnp",
+            pipeline="device", rounds=mode, dedupe_candidates=True,
+            dedupe_closures=True,
+        )
+    s_rec, s_res = tb["sync"]
+    a_rec, a_res = tb["async"]
+    np.testing.assert_array_equal(
+        _canon_intents(s_res.intents), _canon_intents(a_res.intents)
+    )
+    async_tb = {
+        "records": [s_rec, a_rec],
+        "concepts_identical": True,
+        "d2h_transfers_per_iter_sync": s_rec["d2h_transfers_per_iter"],
+        "d2h_transfers_per_iter_async": a_rec["d2h_transfers_per_iter"],
+        "d2h_bytes_delta": a_rec["d2h_bytes"] - s_rec["d2h_bytes"],
+    }
+
     base = next(
         r for r in records
         if r["pipeline"] == "host" and r["algorithm"] == "mrganter+"
@@ -259,6 +283,7 @@ def run_frontier(
             "records": sweep,
         },
         "fused_ab": fused_ab,
+        "async_transfer_batching": async_tb,
         "headline": {
             "baseline": "mrganter+ host-loop (paper-faithful)",
             "candidate": "mrganter+ device pipeline",
@@ -286,6 +311,13 @@ def run_frontier(
     out.append(row(
         "frontier/headline_speedup", speedup,
         f"devices_beat_host_x{speedup:.2f}|json={out_path}",
+    ))
+    out.append(row(
+        "frontier/async_transfer_batching", 1e6 * a_rec["wall_time_s"],
+        f"concepts_identical=True"
+        f"|d2h_per_iter_sync={s_rec['d2h_transfers_per_iter']}"
+        f"|d2h_per_iter_async={a_rec['d2h_transfers_per_iter']}"
+        f"|d2h_B_delta={async_tb['d2h_bytes_delta']}",
     ))
     out.append(row(
         "frontier/fused_ab", 1e6 * k_rec["wall_time_s"],

@@ -64,6 +64,18 @@ class EngineStats:
     # the plan's "auto" latency term (measured when hop_calibrated)
     auto_hop_bytes: int = 0
     hop_calibrated: bool = False
+    # async speculative-round ledger (wall seconds the host spent enqueueing
+    # device work vs blocked waiting on device results, the α/β split of the
+    # modeled reduce cost, and the speculation outcome census).  The timing
+    # fields are populated by the sync paths too, so sync-vs-async A/Bs
+    # compare like with like.
+    dispatch_s: float = 0.0
+    host_blocked_s: float = 0.0
+    modeled_dispatch_bytes: int = 0
+    modeled_collective_bytes: int = 0
+    spec_rounds: int = 0
+    spec_fallbacks: int = 0
+    spec_discarded: int = 0
 
 
 class ClosureEngine:
@@ -634,9 +646,12 @@ class ClosureEngine:
         if count_round:
             self.stats.rounds += 1
         self.stats.closures_computed += n_valid
-        self.stats.modeled_comm_bytes += self.plan.modeled_reduce_bytes(
+        hops, vol = self.plan.modeled_latency_split(
             cap, self.ctx.W, self.ctx.n_attrs
         )
+        self.stats.modeled_comm_bytes += vol
+        self.stats.modeled_dispatch_bytes += hops
+        self.stats.modeled_collective_bytes += vol
         impl = self.plan.resolve_impl(cap, self.ctx.W, self.ctx.n_attrs)
         self.stats.reduce_rounds[impl] = self.stats.reduce_rounds.get(impl, 0) + 1
 
@@ -650,9 +665,12 @@ class ClosureEngine:
         if count_round:
             self.stats.rounds += 1
         self.stats.closures_computed += n_valid
-        self.stats.modeled_comm_bytes += self.plan.modeled_round_bytes_cand(
+        hops, vol = self.plan.modeled_latency_split_cand(
             block_cap, self.ctx.W, self.ctx.n_attrs
         )
+        self.stats.modeled_comm_bytes += vol
+        self.stats.modeled_dispatch_bytes += hops
+        self.stats.modeled_collective_bytes += vol
         impl = self.plan.resolve_impl(block_cap, self.ctx.W, self.ctx.n_attrs)
         self.stats.reduce_rounds[impl] = self.stats.reduce_rounds.get(impl, 0) + 1
 

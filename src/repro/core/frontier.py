@@ -50,7 +50,9 @@ drivers is asserted in tests/test_frontier_pipeline.py and, on a real
 
 from __future__ import annotations
 
+import dataclasses
 import functools
+import time
 
 import jax
 import jax.numpy as jnp
@@ -232,14 +234,88 @@ def filter_canonical(closures, parents, gens, n_valid, LOW):
 
 def ganter_select(closures, Y, valid, LOW, mask, *, n_attrs: int):
     """NextClosure's Alg.-5 scan as one device op: feasibility for every
-    generator attribute, then the *largest* feasible one wins."""
+    generator attribute, then the *largest* feasible one wins (the shared
+    argmax + dynamic-slice gather in ``lectic.select_lectic``)."""
     gens = jnp.arange(n_attrs, dtype=jnp.int32)
     ok = lectic.feasible_jnp(closures[:n_attrs], Y[None, :], gens, LOW)
     ok = ok & valid
-    score = jnp.where(ok, gens, -1)
-    idx = jnp.argmax(score)
-    Y_next = closures[idx]
+    Y_next, _ = lectic.select_lectic(closures[:n_attrs], ok)
     return Y_next, jnp.all(Y_next == mask)
+
+
+# ---------------------------------------------------------------------------
+# speculative round state (async scheduler)
+# ---------------------------------------------------------------------------
+
+
+@jax.jit
+def _pack_round(a, b, payload):
+    """Pack a round's scalar outcomes + payload into ONE uint32 D2H buffer.
+
+    Layout ``[a, b, payload.ravel()]`` — the drivers' per-round readback
+    (surviving-seed count, survivor count, and the survivor rows that used
+    to cross as separate ``np.asarray`` calls) collapses to a single
+    transfer whose copy is started asynchronously at dispatch time.
+    """
+    head = jnp.stack([a.astype(jnp.uint32), b.astype(jnp.uint32)])
+    return jnp.concatenate([head, payload.reshape(-1).astype(jnp.uint32)])
+
+
+def _start_d2h(arr) -> None:
+    """Begin the device→host copy without blocking (overlaps the next
+    dispatch); purely an optimization — the later ``np.asarray`` is what
+    the reconcile actually waits on."""
+    try:
+        arr.copy_to_host_async()
+    except Exception:  # pragma: no cover — optional fast path only
+        pass
+
+
+@dataclasses.dataclass
+class SpecRound:
+    """One in-flight speculative round: the second frontier slot.
+
+    Holds the expansion buffers round r was dispatched from (so an under-
+    covered speculation can re-chunk them synchronously), the survivor
+    buffers the *next* round was speculatively chained on, and the packed
+    readback already copying to the host.  ``cap`` is the speculative
+    chunk's padded coverage — reconciliation compares it against the true
+    seed count to decide whether speculation covered the round.  ``slot``
+    is how many survivor rows the adopted slot kept (the next round's
+    expansion input); a true survivor count past it means the in-flight
+    speculation chained on a truncated frontier and must be discarded.
+    """
+
+    kind: str  # "oplus" | "cbo" | "ganter"
+    packed: jax.Array
+    cap: int
+    blk: int
+    two_d: bool
+    seeds: jax.Array | None = None
+    parents: jax.Array | None = None
+    gen: jax.Array | None = None
+    surv_z: jax.Array | None = None
+    surv_g: jax.Array | None = None
+    slot: int = 0
+
+
+@dataclasses.dataclass
+class OplusRound:
+    """Reconciled MRGanter+ round: true seed count + the round's closures."""
+
+    n_seeds: int
+    closures: np.ndarray
+    under_covered: bool
+
+
+@dataclasses.dataclass
+class CboRound:
+    """Reconciled MRCbo round: true seed count + canonical survivors."""
+
+    n_seeds: int
+    new_intents: np.ndarray
+    n_new: int
+    under_covered: bool
 
 
 # ---------------------------------------------------------------------------
@@ -270,6 +346,17 @@ class DeviceFrontier:
         self._frontier = None  # [Fb, W] plan-replicated
         self._gens = None  # [Fb] plan-replicated (CbO lineage)
         self._n = 0
+        # Second frontier slot (async rounds): when a speculative round is
+        # adopted before its counts are reconciled, ``_n`` is None and the
+        # survivor count lives on device in ``_n_dev`` — round r+1 chains
+        # on the device scalar without any host readback.
+        self._n_dev = None
+        # Last reconciled TRUE seed / survivor counts — size the next
+        # speculative chunk and its adopted slot (see _spec_caps /
+        # _slot_rows).  Hints only: too small merely triggers the
+        # under-coverage fallback, never an incorrect result.
+        self._seed_hint = None
+        self._k_hint = None
 
         # Everything frontier-static is memoized on the ENGINE, not this
         # object: a driver builds a fresh DeviceFrontier per run, and
@@ -368,9 +455,8 @@ class DeviceFrontier:
                     gc[:n_attrs], Y[None, :], gens, jnp.asarray(t.LOW)
                 )
                 ok = ok & valid & (gs[:n_attrs] >= min_sup)
-                score = jnp.where(ok, gens, -1)
-                Y_next = gc[jnp.argmax(score)]
-                return Y_next, ~jnp.any(ok)
+                Y_next, found = lectic.select_lectic(gc[:n_attrs], ok)
+                return Y_next, ~found
 
             cache = {
                 # plan-replicated so expansion runs on every partition
@@ -476,6 +562,11 @@ class DeviceFrontier:
     # -- frontier state ----------------------------------------------------
 
     def __len__(self) -> int:
+        if self._n is None:
+            raise RuntimeError(
+                "frontier count is speculative — reconcile the in-flight "
+                "round before asking for len()"
+            )
         return self._n
 
     def set_frontier(self, intents: np.ndarray, gens: np.ndarray | None = None):
@@ -495,6 +586,11 @@ class DeviceFrontier:
             st.h2d_transfers += 1
             st.h2d_bytes += gbuf.nbytes
         self._n = n
+        self._n_dev = None
+        # NOT a _k_hint update: frontier row count is a poor estimate of
+        # the next round's survivor count (root uploads are 1 row, round-1
+        # survivors up to n_attrs) — and with _n known the next spec's cap
+        # is already exact, so an untruncated slot costs nothing extra.
 
     def _adopt(self, frontier_dev, gens_dev, n: int):
         """Keep device survivors as the next frontier (no host round-trip).
@@ -517,13 +613,29 @@ class DeviceFrontier:
         self._frontier = slice_pad(frontier_dev, 0, cap)
         self._gens = None if gens_dev is None else slice_pad(gens_dev, 0, cap)
         self._n = n
+        self._n_dev = None
+        self._k_hint = max(1, n)
 
     def _download(self, arr_dev, n: int) -> np.ndarray:
-        out = np.asarray(arr_dev[:n])
         st = self.engine.stats
+        t0 = time.perf_counter()
+        out = np.asarray(arr_dev[:n])
+        st.host_blocked_s += time.perf_counter() - t0
         st.d2h_transfers += 1
         st.d2h_bytes += out.nbytes
         return out
+
+    def _block_scalar(self, x_dev) -> int:
+        """Host-blocking scalar readback, ledgered as such: a 4-byte D2H
+        transfer plus the wall time the host spent waiting on it (the
+        per-round coordination cost async rounds exist to remove)."""
+        st = self.engine.stats
+        t0 = time.perf_counter()
+        v = int(x_dev)
+        st.host_blocked_s += time.perf_counter() - t0
+        st.d2h_transfers += 1
+        st.d2h_bytes += 4
+        return v
 
     # -- chunk geometry ----------------------------------------------------
 
@@ -565,55 +677,88 @@ class DeviceFrontier:
         the caller re-expands only what it receives) never size a later
         round's reduce.
         """
-        eng = self.engine
+        t0 = time.perf_counter()
         seeds, n_dev = expand_oplus(
-            self._frontier, self._n, self.LOW, self.BIT,
+            self._frontier, jnp.int32(self._n), self.LOW, self.BIT,
             n_attrs=self.n_attrs, dedupe=dedupe,
         )
-        n_seeds = int(n_dev)  # scalar sync — sizes the reduce to the prune
+        self.engine.stats.dispatch_s += time.perf_counter() - t0
+        # scalar sync — sizes the reduce to the prune
+        n_seeds = self._block_scalar(n_dev)
         if n_seeds == 0:
             return np.zeros((0, self.W), np.uint32)
-        uniq_parts = []
-        first = True
+        self._seed_hint = n_seeds
+        return np.concatenate(
+            self._oplus_chunks(
+                seeds, n_seeds, 0, min_support=min_support, first=True
+            ),
+            axis=0,
+        )
+
+    def _charge(self, two_d: bool, blk: int, cap: int, b: int, count: bool):
+        if two_d:
+            self.engine.charge_round_cand(blk, b, count_round=count)
+        else:
+            self.engine.charge_round(cap, b, count_round=count)
+
+    def _chunk_caps(self, b: int) -> tuple[int, int]:
+        """(padded chunk capacity, per-block capacity) for ``b`` seeds."""
+        if self.cand_parts > 1:
+            blk = self._block_cap(b)
+            return blk * self.cand_parts, blk
+        cap = bucket_size(b, minimum=self.engine.min_bucket)
+        return cap, cap
+
+    def _oplus_chunks(
+        self,
+        seeds,
+        n_seeds: int,
+        lo0: int,
+        *,
+        min_support: int | None,
+        first: bool,
+        force_unique: bool = False,
+    ) -> list[np.ndarray]:
+        """Close seeds ``[lo0, n_seeds)`` in round_budget chunks, one fused
+        SPMD dispatch each, downloading every chunk's survivors.  Shared by
+        the sync step and the async under-coverage fallback (every filter
+        is row-wise, so chunk boundaries never change the surviving rows —
+        only how many dispatches produce them)."""
+        eng = self.engine
         two_d = self.cand_parts > 1
-        for lo in range(0, n_seeds, self.round_budget):
+        unique = self.dedupe_closures or force_unique
+        parts = []
+        for lo in range(lo0, n_seeds, self.round_budget):
             b = min(self.round_budget, n_seeds - lo)
-            if two_d:
-                blk = self._block_cap(b)
-                cap = blk * self.cand_parts
-            else:
-                cap = blk = bucket_size(b, minimum=eng.min_bucket)
+            cap, blk = self._chunk_caps(b)
             chunk = slice_pad(seeds, lo, cap)
-
-            def charge():
-                if two_d:
-                    eng.charge_round_cand(blk, b, count_round=first)
-                else:
-                    eng.charge_round(cap, b, count_round=first)
-
+            t0 = time.perf_counter()
             if min_support is not None:
-                name = "iceberg_unique" if self.dedupe_closures else "iceberg"
+                name = "iceberg_unique" if unique else "iceberg"
                 if two_d:
                     name += "2d"
                 cl, k_dev = self._step_fn(name)(
                     eng.rows, chunk, jnp.int32(b), jnp.int32(min_support)
                 )
-                charge()
-                uniq_parts.append(self._download(cl, int(k_dev)))
-            elif self.dedupe_closures:
+                eng.stats.dispatch_s += time.perf_counter() - t0
+                self._charge(two_d, blk, cap, b, first)
+                parts.append(self._download(cl, self._block_scalar(k_dev)))
+            elif unique:
                 cl_u, k_dev = self._step_fn("unique2d" if two_d else "unique")(
                     eng.rows, chunk, jnp.int32(b)
                 )
-                charge()
-                uniq_parts.append(self._download(cl_u, int(k_dev)))
+                eng.stats.dispatch_s += time.perf_counter() - t0
+                self._charge(two_d, blk, cap, b, first)
+                parts.append(self._download(cl_u, self._block_scalar(k_dev)))
             else:
                 closures = self._step_fn("plain2d" if two_d else "plain")(
                     eng.rows, chunk
                 )
-                charge()
-                uniq_parts.append(self._download(closures, b))
+                eng.stats.dispatch_s += time.perf_counter() - t0
+                self._charge(two_d, blk, cap, b, first)
+                parts.append(self._download(closures, b))
             first = False
-        return np.concatenate(uniq_parts, axis=0)
+        return parts
 
     def step_cbo(
         self, *, min_support: int | None = None
@@ -629,48 +774,21 @@ class DeviceFrontier:
         Returns ``(new_intents, n_seeds, n_new)`` — ``n_seeds`` is 0
         when the frontier was already exhausted (no closure round ran).
         """
-        eng = self.engine
+        t0 = time.perf_counter()
         seeds, parents, gen, n_dev = expand_cbo(
-            self._frontier, self._gens, self._n, self.BIT, n_attrs=self.n_attrs
+            self._frontier, self._gens, jnp.int32(self._n), self.BIT,
+            n_attrs=self.n_attrs,
         )
-        n_seeds = int(n_dev)
+        self.engine.stats.dispatch_s += time.perf_counter() - t0
+        n_seeds = self._block_scalar(n_dev)
         if n_seeds == 0:
             self._n = 0
             return np.zeros((0, self.W), np.uint32), 0, 0
-        surv_z, surv_g, counts = [], [], []
-        first = True
-        two_d = self.cand_parts > 1
-        for lo in range(0, n_seeds, self.round_budget):
-            b = min(self.round_budget, n_seeds - lo)
-            if two_d:
-                blk = self._block_cap(b)
-                cap = blk * self.cand_parts
-            else:
-                cap = blk = bucket_size(b, minimum=eng.min_bucket)
-            args = (
-                eng.rows,
-                slice_pad(seeds, lo, cap),
-                slice_pad(parents, lo, cap),
-                slice_pad(gen, lo, cap),
-                jnp.int32(b),
-            )
-            if min_support is not None:
-                name = "cbo_iceberg2d" if two_d else "cbo_iceberg"
-                z, g, k_dev = self._step_fn(name)(
-                    *args, jnp.int32(min_support)
-                )
-            else:
-                z, g, k_dev = self._step_fn("cbo2d" if two_d else "cbo")(*args)
-            if two_d:
-                eng.charge_round_cand(blk, b, count_round=first)
-            else:
-                eng.charge_round(cap, b, count_round=first)
-            first = False
-            k = int(k_dev)
-            if k:
-                surv_z.append(z[:k])
-                surv_g.append(g[:k])
-                counts.append(k)
+        self._seed_hint = n_seeds
+        surv_z, surv_g, counts = self._cbo_chunks(
+            seeds, parents, gen, n_seeds, 0,
+            min_support=min_support, first=True,
+        )
         n_new = sum(counts)
         if n_new == 0:
             self._n = 0
@@ -679,6 +797,53 @@ class DeviceFrontier:
         g_all = surv_g[0] if len(surv_g) == 1 else jnp.concatenate(surv_g)
         self._adopt(z_all, g_all, n_new)
         return self._download(self._frontier, n_new), n_seeds, n_new
+
+    def _cbo_chunks(
+        self,
+        seeds,
+        parents,
+        gen,
+        n_seeds: int,
+        lo0: int,
+        *,
+        min_support: int | None,
+        first: bool,
+    ) -> tuple[list, list, list]:
+        """Close+canonicity for CbO seeds ``[lo0, n_seeds)`` in
+        round_budget chunks.  Returns device survivor buffers
+        ``(z_list, g_list, k_list)`` — callers adopt/concatenate.  Shared
+        by the sync step and the async under-coverage fallback (canonicity
+        is row-wise, so chunk boundaries never change the survivors)."""
+        eng = self.engine
+        two_d = self.cand_parts > 1
+        surv_z, surv_g, counts = [], [], []
+        for lo in range(lo0, n_seeds, self.round_budget):
+            b = min(self.round_budget, n_seeds - lo)
+            cap, blk = self._chunk_caps(b)
+            args = (
+                eng.rows,
+                slice_pad(seeds, lo, cap),
+                slice_pad(parents, lo, cap),
+                slice_pad(gen, lo, cap),
+                jnp.int32(b),
+            )
+            t0 = time.perf_counter()
+            if min_support is not None:
+                name = "cbo_iceberg2d" if two_d else "cbo_iceberg"
+                z, g, k_dev = self._step_fn(name)(
+                    *args, jnp.int32(min_support)
+                )
+            else:
+                z, g, k_dev = self._step_fn("cbo2d" if two_d else "cbo")(*args)
+            eng.stats.dispatch_s += time.perf_counter() - t0
+            self._charge(two_d, blk, cap, b, first)
+            first = False
+            k = self._block_scalar(k_dev)
+            if k:
+                surv_z.append(z[:k])
+                surv_g.append(g[:k])
+                counts.append(k)
+        return surv_z, surv_g, counts
 
     def step_ganter(
         self, *, min_support: int | None = None
@@ -702,6 +867,18 @@ class DeviceFrontier:
         1-D region is candidate-axis-invariant, so on a 2-D mesh it simply
         replicates over the cand axis."""
         eng = self.engine
+        Y_next, done, nv_dev, cap = self._dispatch_ganter(min_support)
+        eng.charge_round(cap, self._block_scalar(nv_dev))
+        return self._download(Y_next[None, :], 1)[0], bool(
+            self._block_scalar(done)
+        )
+
+    def _dispatch_ganter(self, min_support):
+        """Enqueue one Alg.-5 step (no host sync): seed expansion, the
+        fused closure→select region, and the on-device frontier swap.
+        Returns ``(Y_next, done, n_valid_seeds, cap)`` — all device."""
+        eng = self.engine
+        t0 = time.perf_counter()
         Y = self._frontier[0]
         seeds, valid = lectic.oplus_seeds_jnp(
             Y[None, :], self.LOW, self.BIT, self.n_attrs
@@ -717,8 +894,305 @@ class DeviceFrontier:
             Y_next, done = self._step_fn("ganter")(
                 eng.rows, slice_pad(seeds, 0, cap), Y, valid[0]
             )
-        eng.charge_round(cap, int(valid[0].sum()))
         cap_f = self._frontier.shape[0]
         self._frontier = jnp.broadcast_to(Y_next, (cap_f, self.W))
         self._n = 1
-        return self._download(Y_next[None, :], 1)[0], bool(done)
+        eng.stats.dispatch_s += time.perf_counter() - t0
+        return Y_next, done, valid[0].sum(dtype=jnp.int32), cap
+
+    # -- speculative rounds (async scheduler) ------------------------------
+    #
+    # The async drivers dispatch round r+1's expansion against round r's
+    # *unreconciled* survivor buffer: every step function already takes the
+    # valid count as a traced operand, so the whole chain — expand → close
+    # → filter → adopt — runs on device scalars and the host never blocks
+    # between rounds.  The one D2H per round is a packed buffer (counts ++
+    # survivors, ``_pack_round``) whose copy starts at dispatch time;
+    # ``reconcile_*`` waits on it only when the driver needs round r's
+    # result, by which time round r+1 is already in flight.
+    #
+    # Speculation is capped at ``round_budget``: the spec chunk covers
+    # min(expansion bound, round_budget) seeds (bucket-padded, so coverage
+    # can exceed the budget for free).  Reconciliation compares the true
+    # seed count against that coverage — over-expanded rows were already
+    # masked out by the traced valid count (reconcile-on-adopt: nothing
+    # re-runs), and only genuine *under*-coverage falls back to synchronous
+    # re-dispatch of the uncovered tail through the shared chunk runners.
+    # Stats are charged at reconcile time, when true counts are known, so
+    # the ledger matches the sync path and discarded speculative rounds
+    # are never charged.
+
+    def _n_arg(self):
+        """The frontier's valid count as a step operand — the host int when
+        reconciled, the device scalar when speculative (never a readback)."""
+        return self._n_dev if self._n is None else jnp.int32(self._n)
+
+    def _adopt_spec(self, frontier_dev, gens_dev, k_dev):
+        """Adopt a speculative survivor buffer whose count is still device-
+        resident.  The buffer is pre-sliced to ``_slot_rows`` — smaller
+        than the chunk cap — so ``_adopt``'s refuse-to-drop guard cannot
+        run here; reconciliation performs the equivalent check against the
+        true count (``k > spec.slot``) once the packed buffer lands."""
+        self._frontier = frontier_dev
+        self._gens = gens_dev
+        self._n = None
+        self._n_dev = k_dev
+
+    def _spec_caps(self, bound: int) -> tuple[int, int]:
+        """Speculative chunk coverage: min(expansion bound, round_budget),
+        bucket-padded.  Returns ``(cap, blk)`` like :meth:`_chunk_caps`.
+
+        The structural bound (slot rows × n_attrs) wildly over-states the
+        post-dedupe seed count, and a speculative round pays compute for
+        its whole padded cap — while an under-covered round only re-runs
+        the *uncovered tail* through the sync chunk runner (the covered
+        part's closures are kept).  Over-sizing is therefore the
+        expensive miss, so when a reconciled round has told us the true
+        count the chunk is sized at 2× that hint (growth allowance); a
+        growth spurt past it under-covers and falls back.  Sizing is a
+        pure latency heuristic, never a correctness input."""
+        if self._seed_hint is not None:
+            bound = min(
+                bound, max(self.engine.min_bucket, 2 * self._seed_hint)
+            )
+        return self._chunk_caps(max(1, min(bound, self.round_budget)))
+
+    def _spec_bound(self) -> int:
+        """Structural expansion bound for the next speculative chunk: the
+        reconciled row count when the host knows it (first spec of a run,
+        or right after an under-coverage re-adoption), the padded slot
+        capacity when the count is still in flight."""
+        rows = self._n if self._n is not None else self._frontier.shape[0]
+        return max(1, rows) * self.n_attrs
+
+    def _slot_rows(self, cap: int) -> int:
+        """Rows the adopted speculative slot keeps.  The slot is the NEXT
+        round's expansion input, and expansion cost (the dedupe sort in
+        particular) scales with slot rows × n_attrs — keeping the whole
+        cap-row chunk buffer makes every speculative expansion pay for the
+        chunk's padding.  The in-flight survivor count is unknown at
+        dispatch, so the slot is sized from the last reconciled survivor
+        count with a 2× growth allowance.  A growth spurt past the slot
+        truncates live in-flight rows — reconciliation detects that
+        (``k > spec.slot``) from the *full* packed buffer and recovers
+        through the driver's ordinary under-coverage reset, so sizing
+        stays a latency heuristic, never a correctness input."""
+        if self._k_hint is None:
+            return cap
+        rows = bucket_size(
+            max(self.engine.min_bucket, 2 * self._k_hint),
+            minimum=self.engine.min_bucket,
+        )
+        return min(cap, rows)
+
+    def discard_spec(self, spec: SpecRound | None) -> None:
+        """Drop a speculative round whose premise turned out wrong (the
+        true frontier emptied, or under-coverage invalidated its input).
+        Nothing to undo and nothing was charged — spec rounds ledger their
+        stats at reconciliation only."""
+        if spec is not None:
+            self.engine.stats.spec_discarded += 1
+
+    def _download_packed(self, packed) -> np.ndarray:
+        """The reconcile's ONE host-blocking wait: the packed round buffer
+        (copy already in flight since dispatch)."""
+        st = self.engine.stats
+        t0 = time.perf_counter()
+        out = np.asarray(packed)
+        st.host_blocked_s += time.perf_counter() - t0
+        st.d2h_transfers += 1
+        st.d2h_bytes += out.nbytes
+        return out
+
+    def spec_oplus(
+        self, *, dedupe: bool, min_support: int | None = None
+    ) -> SpecRound:
+        """Dispatch one speculative MRGanter+ round (no host sync).
+
+        Always routes through the *unique* step variants regardless of
+        ``dedupe_closures``: the adopted spec slot doubles as the next
+        round's expansion input, and deduping it on device bounds the
+        stale-row re-expansion (the host registry still owns novelty).
+        """
+        eng = self.engine
+        t0 = time.perf_counter()
+        seeds, n_dev = expand_oplus(
+            self._frontier, self._n_arg(), self.LOW, self.BIT,
+            n_attrs=self.n_attrs, dedupe=dedupe,
+        )
+        cap, blk = self._spec_caps(self._spec_bound())
+        chunk = slice_pad(seeds, 0, cap)
+        nv = jnp.minimum(n_dev, jnp.int32(cap))
+        two_d = self.cand_parts > 1
+        if min_support is not None:
+            name = "iceberg_unique2d" if two_d else "iceberg_unique"
+            cl, k_dev = self._step_fn(name)(
+                eng.rows, chunk, nv, jnp.int32(min_support)
+            )
+        else:
+            cl, k_dev = self._step_fn("unique2d" if two_d else "unique")(
+                eng.rows, chunk, nv
+            )
+        slot = self._slot_rows(cap)
+        self._adopt_spec(
+            cl if slot == cap else slice_pad(cl, 0, slot), None, k_dev
+        )
+        packed = _pack_round(n_dev, k_dev, cl)  # full buffer: recovery data
+        _start_d2h(packed)
+        eng.stats.dispatch_s += time.perf_counter() - t0
+        eng.stats.spec_rounds += 1
+        return SpecRound(
+            "oplus", packed, cap, blk, two_d, seeds=seeds, slot=slot
+        )
+
+    def reconcile_oplus(
+        self, spec: SpecRound, *, min_support: int | None = None
+    ) -> OplusRound:
+        """Adopt round r's true counts: read the packed buffer, charge the
+        round at its real size, and — only if the speculative chunk under-
+        covered the true seed count — close the uncovered tail through the
+        sync chunk runner."""
+        eng = self.engine
+        host = self._download_packed(spec.packed)
+        n_seeds = int(host[0])
+        k = int(host[1])
+        if n_seeds == 0:
+            # parity with sync: no closure round ran, nothing is charged
+            return OplusRound(0, np.zeros((0, self.W), np.uint32), False)
+        self._seed_hint = n_seeds
+        self._charge(spec.two_d, spec.blk, spec.cap, min(n_seeds, spec.cap), True)
+        closures = host[2:].reshape(spec.cap, self.W)
+        if n_seeds <= spec.cap:
+            self._k_hint = max(1, k)
+            new = np.ascontiguousarray(closures[:k])
+            if k > spec.slot:
+                # the adopted slot truncated the in-flight survivors, so
+                # the round already speculating on it chained on a partial
+                # frontier.  The packed buffer holds the full survivor set
+                # — recovery is the driver's ordinary under-coverage reset
+                # (discard + set_frontier + re-spec), no recompute here.
+                eng.stats.spec_fallbacks += 1
+                return OplusRound(n_seeds, new, True)
+            return OplusRound(n_seeds, new, False)
+        eng.stats.spec_fallbacks += 1
+        parts = [np.ascontiguousarray(closures[:k])]
+        parts += self._oplus_chunks(
+            spec.seeds, n_seeds, spec.cap,
+            min_support=min_support, first=False, force_unique=True,
+        )
+        out = np.concatenate(parts, axis=0)
+        self._k_hint = max(1, out.shape[0])
+        return OplusRound(n_seeds, out, True)
+
+    def spec_cbo(self, *, min_support: int | None = None) -> SpecRound:
+        """Dispatch one speculative MRCbo round (no host sync).  Canonical
+        survivors are adopted as the next frontier with their count still
+        on device — exactly the sync contract, minus the readbacks."""
+        eng = self.engine
+        t0 = time.perf_counter()
+        seeds, parents, gen, n_dev = expand_cbo(
+            self._frontier, self._gens, self._n_arg(), self.BIT,
+            n_attrs=self.n_attrs,
+        )
+        cap, blk = self._spec_caps(self._spec_bound())
+        nv = jnp.minimum(n_dev, jnp.int32(cap))
+        two_d = self.cand_parts > 1
+        args = (
+            eng.rows,
+            slice_pad(seeds, 0, cap),
+            slice_pad(parents, 0, cap),
+            slice_pad(gen, 0, cap),
+            nv,
+        )
+        if min_support is not None:
+            z, g, k_dev = self._step_fn(
+                "cbo_iceberg2d" if two_d else "cbo_iceberg"
+            )(*args, jnp.int32(min_support))
+        else:
+            z, g, k_dev = self._step_fn("cbo2d" if two_d else "cbo")(*args)
+        slot = self._slot_rows(cap)
+        if slot == cap:
+            self._adopt_spec(z, g, k_dev)
+        else:
+            self._adopt_spec(
+                slice_pad(z, 0, slot), slice_pad(g, 0, slot), k_dev
+            )
+        packed = _pack_round(n_dev, k_dev, z)  # full buffer: recovery data
+        _start_d2h(packed)
+        eng.stats.dispatch_s += time.perf_counter() - t0
+        eng.stats.spec_rounds += 1
+        return SpecRound(
+            "cbo", packed, cap, blk, two_d, seeds=seeds, parents=parents,
+            gen=gen, surv_z=z, surv_g=g, slot=slot,
+        )
+
+    def reconcile_cbo(
+        self, spec: SpecRound, *, min_support: int | None = None
+    ) -> CboRound:
+        """Adopt round r's true counts.  When covered, the speculatively
+        adopted slot already IS the true frontier (over-expanded rows were
+        masked by the traced valid count) and the survivors come straight
+        from the packed buffer.  Under-coverage closes the uncovered tail
+        synchronously and re-adopts the full survivor set — restoring
+        exactness before the driver re-speculates."""
+        eng = self.engine
+        host = self._download_packed(spec.packed)
+        n_seeds = int(host[0])
+        k = int(host[1])
+        if n_seeds == 0:
+            # parity with sync: exhausted frontier, no round ran/charged
+            self._n, self._n_dev = 0, None
+            return CboRound(0, np.zeros((0, self.W), np.uint32), 0, False)
+        self._seed_hint = n_seeds
+        self._charge(spec.two_d, spec.blk, spec.cap, min(n_seeds, spec.cap), True)
+        if n_seeds <= spec.cap:
+            new = np.ascontiguousarray(host[2:].reshape(spec.cap, self.W)[:k])
+            if k == 0:
+                self._n, self._n_dev = 0, None
+            elif k > spec.slot:
+                # slot truncated the in-flight survivors — re-adopt the
+                # full survivor buffer (kept in the SpecRound exactly for
+                # this) so the frontier is exact before the driver
+                # discards the mispremised speculation and re-dispatches.
+                eng.stats.spec_fallbacks += 1
+                self._adopt(spec.surv_z, spec.surv_g, k)
+                return CboRound(n_seeds, new, k, True)
+            else:
+                self._k_hint = k
+            return CboRound(n_seeds, new, k, False)
+        eng.stats.spec_fallbacks += 1
+        z_list, g_list, counts = self._cbo_chunks(
+            spec.seeds, spec.parents, spec.gen, n_seeds, spec.cap,
+            min_support=min_support, first=False,
+        )
+        n_new = k + sum(counts)
+        if n_new == 0:
+            self._n, self._n_dev = 0, None
+            return CboRound(n_seeds, np.zeros((0, self.W), np.uint32), 0, True)
+        z_all = jnp.concatenate([spec.surv_z[:k], *z_list])
+        g_all = jnp.concatenate([spec.surv_g[:k], *g_list])
+        self._adopt(z_all, g_all, n_new)
+        return CboRound(
+            n_seeds, self._download(self._frontier, n_new), n_new, True
+        )
+
+    def spec_ganter(self, *, min_support: int | None = None) -> SpecRound:
+        """Dispatch one speculative Alg.-5 step: the fused select's result
+        is broadcast into the frontier slot on device, so the next step
+        chains on it without the intent ever visiting the host."""
+        eng = self.engine
+        Y_next, done, nv_dev, cap = self._dispatch_ganter(min_support)
+        t0 = time.perf_counter()
+        packed = _pack_round(done, nv_dev, Y_next[None, :])
+        _start_d2h(packed)
+        eng.stats.dispatch_s += time.perf_counter() - t0
+        eng.stats.spec_rounds += 1
+        return SpecRound("ganter", packed, cap, cap, False)
+
+    def reconcile_ganter(self, spec: SpecRound) -> tuple[np.ndarray, bool]:
+        """Wait on the packed ``[done/exhausted, n_valid, Y_next]`` buffer
+        and charge the round at its true seed count.  Returns
+        ``(Y_next, flag)`` with the same contract as :meth:`step_ganter`."""
+        host = self._download_packed(spec.packed)
+        self.engine.charge_round(spec.cap, int(host[1]))
+        return host[2:].astype(np.uint32, copy=False), bool(host[0])

@@ -123,6 +123,30 @@ def feasible_jnp(
     return jnp.all(((closures ^ parents) & LOW[gens]) == 0, axis=-1)
 
 
+def select_lectic(
+    closures: jax.Array, ok: jax.Array
+) -> tuple[jax.Array, jax.Array]:
+    """Pick the lectic-max feasible candidate on device (Alg. 5 line 6).
+
+    ``closures [B, W]`` is the per-attribute candidate batch in ascending
+    generator order, ``ok [B]`` the feasibility mask; NextClosure takes the
+    *largest* feasible generator.  An argmax over ``where(ok, arange, -1)``
+    plus a dynamic-slice gather replaces the host-side
+    ``closures[int(idx.max())]`` so the selection never forces a readback.
+    Returns ``(Y_next [W], found [] bool)``; ``Y_next`` is ``closures[0]``
+    garbage when nothing is feasible — gate on ``found``.
+    """
+    score = jnp.where(
+        ok, jnp.arange(ok.shape[0], dtype=jnp.int32), jnp.int32(-1)
+    )
+    idx = jnp.argmax(score)
+    Y_next = jax.lax.dynamic_index_in_dim(closures, idx, keepdims=False)
+    return Y_next, score[idx] >= 0
+
+
+select_lectic_jnp = jax.jit(select_lectic)
+
+
 def lectic_sort_key(row: np.ndarray, n_attrs: int) -> tuple:
     """Sort key producing ascending lectic order for packed sets.
 

@@ -39,6 +39,7 @@ from __future__ import annotations
 import dataclasses
 import time
 
+import jax.numpy as jnp
 import numpy as np
 
 from repro.core import bitset, lectic
@@ -47,6 +48,16 @@ from repro.core.frontier import DeviceFrontier
 from repro.core.hashindex import TwoLevelHash
 
 PIPELINES = ("device", "host")
+
+# Round scheduling for the device pipeline.  ``"sync"`` blocks on every
+# round's survivor count before dispatching the next (the bit-exact
+# oracle); ``"async"`` speculatively dispatches round r+1 against round
+# r's unreconciled survivor buffer while r's reduce is in flight, so the
+# host never blocks between rounds (see DeviceFrontier.spec_*/reconcile_*
+# and EXPERIMENTS.md §Async).  Concept sets and iteration counts are
+# identical in both modes; per-round *stats* may differ (speculative
+# chunks are padded to their coverage cap before the true count is known).
+ROUNDS = ("sync", "async")
 
 
 @dataclasses.dataclass
@@ -73,6 +84,16 @@ def _seeds_for(Y: np.ndarray, tables: lectic.LecticTables) -> np.ndarray:
 def _check_pipeline(pipeline: str):
     if pipeline not in PIPELINES:
         raise ValueError(f"unknown pipeline {pipeline!r}; choose {PIPELINES}")
+
+
+def _check_rounds(rounds: str, pipeline: str):
+    if rounds not in ROUNDS:
+        raise ValueError(f"unknown rounds mode {rounds!r}; choose {ROUNDS}")
+    if rounds == "async" and pipeline != "device":
+        raise ValueError(
+            "rounds='async' requires pipeline='device' — the host loop has "
+            "no device futures to overlap"
+        )
 
 
 def _result(
@@ -114,6 +135,7 @@ def mrganter(
     *,
     pipeline: str = "device",
     min_support: int | None = None,
+    rounds: str = "sync",
 ) -> MRResult:
     """``min_support`` mines the iceberg lattice in strict lectic order:
     the Alg.-5 scan restricts to frequent successors (support psum ≥
@@ -121,8 +143,15 @@ def mrganter(
     after Y is Y ⊕ a for the largest feasible frequent a — any frequent
     closure lectically between would be a subset of Y ⊕ a for the smallest
     differing attribute, hence itself of the form Y ⊕ i — so the jump
-    skips infrequent closures without ever visiting them."""
+    skips infrequent closures without ever visiting them.
+
+    ``rounds="async"`` (device pipeline) chains Alg.-5 steps entirely on
+    device: each step's selected intent is broadcast into the frontier
+    slot at dispatch time, step r+1 is dispatched before step r's packed
+    readback is awaited, and a step dispatched past the true end of the
+    walk is discarded unread.  Emission order stays exactly lectic."""
     _check_pipeline(pipeline)
+    _check_rounds(rounds, pipeline)
     min_support = _check_min_support(min_support)
     t0 = time.perf_counter()
     full = ctx.attr_mask()
@@ -131,6 +160,12 @@ def mrganter(
         return _result(engine, [], 1, t0, "mrganter", min_support)
     intents = [Y]
     n_iter = 1
+
+    if pipeline == "device" and rounds == "async":
+        return _mrganter_async(
+            engine, Y, full, intents, n_iter, t0,
+            max_iterations=max_iterations, min_support=min_support,
+        )
 
     if pipeline == "device":
         fr = DeviceFrontier(engine)
@@ -165,14 +200,61 @@ def mrganter(
         ok = lectic.feasible_batch(closures, Y, tables) & valid
         if min_support is not None:
             ok &= sups >= min_support
-        idx = np.nonzero(ok)[0]
-        if min_support is not None and idx.size == 0:
+        if min_support is not None and not ok.any():
             n_iter += 1  # the exhausting scan
             break
-        assert idx.size, "NextClosure invariant: a feasible successor exists"
-        Y = closures[int(idx.max())]
+        # Alg.-5 selection on device: jitted argmax + dynamic-slice gather
+        # (identical to ``closures[int(np.nonzero(ok)[0].max())]`` — the
+        # lectic-max feasible generator; property-tested in
+        # tests/test_async_rounds.py).
+        Y_dev, found = lectic.select_lectic_jnp(
+            jnp.asarray(closures), jnp.asarray(ok)
+        )
+        assert bool(found), "NextClosure invariant: a feasible successor exists"
+        Y = np.asarray(Y_dev)
         intents.append(Y)
         n_iter += 1
+    return _result(engine, intents, n_iter, t0, "mrganter", min_support)
+
+
+def _mrganter_async(
+    engine, Y, full, intents, n_iter, t0, *, max_iterations, min_support
+):
+    """MRGanter's round loop restructured around futures: reconcile round
+    r only after round r+1 is in flight."""
+    fr = DeviceFrontier(engine)
+    fr.set_frontier(Y[None, :])
+    at_top = np.array_equal(Y, full)
+    capped = max_iterations is not None and n_iter >= max_iterations
+    pending = (
+        None if at_top or capped
+        else fr.spec_ganter(min_support=min_support)
+    )
+    if min_support is None:
+        while pending is not None:
+            speculate = max_iterations is None or n_iter + 1 < max_iterations
+            nxt = fr.spec_ganter() if speculate else None
+            Y, done = fr.reconcile_ganter(pending)
+            intents.append(Y)
+            n_iter += 1
+            if done or nxt is None:
+                fr.discard_spec(nxt)
+                break
+            pending = nxt
+        return _result(engine, intents, n_iter, t0, "mrganter")
+    while pending is not None:
+        speculate = max_iterations is None or n_iter + 1 < max_iterations
+        nxt = fr.spec_ganter(min_support=min_support) if speculate else None
+        Y, exhausted = fr.reconcile_ganter(pending)
+        n_iter += 1  # the exhausting scan is a map/reduce round too
+        if exhausted:
+            fr.discard_spec(nxt)
+            break
+        intents.append(Y)
+        if np.array_equal(Y, full) or nxt is None:
+            fr.discard_spec(nxt)
+            break
+        pending = nxt
     return _result(engine, intents, n_iter, t0, "mrganter", min_support)
 
 
@@ -192,6 +274,7 @@ def mrganter_plus(
     max_iterations: int | None = None,
     pipeline: str = "device",
     min_support: int | None = None,
+    rounds: str = "sync",
 ) -> MRResult:
     """``dedupe_candidates=False`` is the paper-literal map phase (every
     frontier intent emits a candidate for every absent attribute).  ``True``
@@ -213,8 +296,20 @@ def mrganter_plus(
     a frequent (D ⊆ Z) closed proper subset — so the frequent subset of
     the BFS reaches every frequent concept (tests/test_rules.py asserts
     equality with post-hoc filtering, property-tested).
+
+    ``rounds="async"`` (device pipeline) keeps the round-r survivor buffer
+    on device and dispatches round r+1's expansion against it before round
+    r's counts are read back; the host registry reconciles novelty one
+    round behind the device.  The async frontier is the round's *unique
+    closure set* (novel + stale) rather than the novel subset — stale rows
+    only regenerate closures registered in earlier rounds, so the novel
+    set per round, the concept set, and the iteration count are identical
+    to sync (EXPERIMENTS.md §Async has the completeness argument).
+    ``dedupe_closures`` is implied in async mode (the adopted slot must be
+    deduped to bound stale re-expansion).
     """
     _check_pipeline(pipeline)
+    _check_rounds(rounds, pipeline)
     if local_prune is not None:
         dedupe_candidates = local_prune
     min_support = _check_min_support(min_support)
@@ -226,6 +321,13 @@ def mrganter_plus(
     H.add(Y0)
     intents = [Y0]
     n_iter = 1
+
+    if pipeline == "device" and rounds == "async":
+        return _mrganter_plus_async(
+            ctx, engine, H, Y0, intents, n_iter, t0,
+            dedupe_candidates=dedupe_candidates,
+            max_iterations=max_iterations, min_support=min_support,
+        )
 
     if pipeline == "device":
         fr = DeviceFrontier(engine, dedupe_closures=dedupe_closures)
@@ -278,6 +380,64 @@ def mrganter_plus(
     return _result(engine, intents, n_iter, t0, "mrganter+", min_support)
 
 
+def _mrganter_plus_async(
+    ctx, engine, H, Y0, intents, n_iter, t0, *,
+    dedupe_candidates, max_iterations, min_support,
+):
+    """MRGanter+'s round loop restructured around futures.
+
+    Termination mirrors the sync loop exactly: a reconciled round counts
+    iff its true seed count was nonzero (the charge already happened at
+    reconcile), the walk stops when the registry finds no novel closure,
+    and — because the async frontier includes stale rows that the sync
+    frontier would not expand — the one case where sync's *next* expansion
+    would be empty (the sole novel intent is the full attribute set, which
+    has no ⊕-successors) is detected on the host so no extra round is
+    counted."""
+    full = ctx.attr_mask()
+    fr = DeviceFrontier(engine, dedupe_closures=True)
+    fr.set_frontier(Y0[None, :])
+    capped = max_iterations is not None and n_iter >= max_iterations
+    pending = (
+        None if capped
+        else fr.spec_oplus(dedupe=dedupe_candidates, min_support=min_support)
+    )
+    while pending is not None:
+        speculate = max_iterations is None or n_iter + 1 < max_iterations
+        nxt = (
+            fr.spec_oplus(dedupe=dedupe_candidates, min_support=min_support)
+            if speculate else None
+        )
+        rec = fr.reconcile_oplus(pending, min_support=min_support)
+        if rec.n_seeds == 0:  # no closure round ran — uncounted, like sync
+            fr.discard_spec(nxt)
+            break
+        n_iter += 1
+        if rec.closures.shape[0] == 0:
+            # iceberg round pruned every closure — the exhausting
+            # map/reduce round still counts (sync parity)
+            fr.discard_spec(nxt)
+            break
+        new = rec.closures[H.add_batch(rec.closures)]
+        intents.extend(new)
+        sync_would_stop = new.shape[0] == 0 or (
+            new.shape[0] == 1 and np.array_equal(new[0], full)
+        )
+        if sync_would_stop or nxt is None:
+            fr.discard_spec(nxt)
+            break
+        if rec.under_covered:
+            # speculation ran on a partial frontier — discard it, restore
+            # the true (novel) frontier, and re-dispatch synchronously
+            fr.discard_spec(nxt)
+            fr.set_frontier(new)
+            nxt = fr.spec_oplus(
+                dedupe=dedupe_candidates, min_support=min_support
+            )
+        pending = nxt
+    return _result(engine, intents, n_iter, t0, "mrganter+", min_support)
+
+
 # ---------------------------------------------------------------------------
 # MRCbo: distributed CloseByOne under the same engine (paper §5 baseline).
 # ---------------------------------------------------------------------------
@@ -290,12 +450,21 @@ def mrcbo(
     *,
     pipeline: str = "device",
     min_support: int | None = None,
+    rounds: str = "sync",
 ) -> MRResult:
     """``min_support`` prunes the CbO tree at infrequent nodes (support
     filter fused after the psum): intents only grow along the canonical
     generation path, so every frequent concept's ancestors are frequent
-    and pruning is lossless."""
+    and pruning is lossless.
+
+    ``rounds="async"`` (device pipeline) speculatively expands round r's
+    canonical survivors while their count is still on device.  CbO's
+    canonicity filter makes the survivor buffer *exactly* the next
+    frontier (no registry lag), so covered speculation is exact; under-
+    coverage re-closes the uncovered tail synchronously and re-adopts the
+    full survivor set before re-speculating."""
     _check_pipeline(pipeline)
+    _check_rounds(rounds, pipeline)
     min_support = _check_min_support(min_support)
     t0 = time.perf_counter()
     root, s0 = engine.first_closure()
@@ -303,6 +472,12 @@ def mrcbo(
         return _result(engine, [], 1, t0, "mrcbo", min_support)
     intents = [root]
     n_iter = 1
+
+    if pipeline == "device" and rounds == "async":
+        return _mrcbo_async(
+            engine, root, intents, n_iter, t0,
+            max_iterations=max_iterations, min_support=min_support,
+        )
 
     if pipeline == "device":
         fr = DeviceFrontier(engine)
@@ -344,4 +519,33 @@ def mrcbo(
                 intents.append(Z)
                 next_frontier.append((Z, a))
         frontier = next_frontier
+    return _result(engine, intents, n_iter, t0, "mrcbo", min_support)
+
+
+def _mrcbo_async(
+    engine, root, intents, n_iter, t0, *, max_iterations, min_support
+):
+    """MRCbo's round loop restructured around futures (see mrcbo)."""
+    fr = DeviceFrontier(engine)
+    fr.set_frontier(root[None, :], gens=np.array([-1], np.int32))
+    capped = max_iterations is not None and n_iter >= max_iterations
+    pending = None if capped else fr.spec_cbo(min_support=min_support)
+    while pending is not None:
+        speculate = max_iterations is None or n_iter + 1 < max_iterations
+        nxt = fr.spec_cbo(min_support=min_support) if speculate else None
+        rec = fr.reconcile_cbo(pending, min_support=min_support)
+        if rec.n_seeds == 0:  # frontier exhausted before any closure round
+            fr.discard_spec(nxt)
+            break
+        n_iter += 1
+        intents.extend(rec.new_intents)
+        if rec.n_new == 0 or nxt is None:
+            fr.discard_spec(nxt)
+            break
+        if rec.under_covered:
+            # the reconcile re-adopted the full survivor set; speculation
+            # ran on a partial frontier — discard and re-dispatch
+            fr.discard_spec(nxt)
+            nxt = fr.spec_cbo(min_support=min_support)
+        pending = nxt
     return _result(engine, intents, n_iter, t0, "mrcbo", min_support)

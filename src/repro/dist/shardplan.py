@@ -603,6 +603,68 @@ class ShardPlan:
         )
         return obj + gather
 
+    def modeled_latency_split(
+        self, batch: int, W: int, n_attrs: int | None = None
+    ) -> tuple[int, int]:
+        """``(dispatch_bytes, collective_bytes)`` — the α-β split of one
+        reduce round's modeled cost for a 1-D plan.
+
+        The *dispatch* term is the per-hop latency charged in bandwidth-
+        equivalent bytes (``n_parts × ring_steps × auto_hop_bytes`` — what
+        speculative async rounds overlap with the next dispatch), the
+        *collective* term the actual wire volume (what the schedule moves
+        regardless of overlap).  Their sum is exactly
+        ``collectives.modeled_cost_bytes`` for the resolved schedule; the
+        collective term alone is what ``modeled_reduce_bytes`` reports.
+        """
+        impl = self.resolve_impl(batch, W, n_attrs)
+        vol = collectives.modeled_comm_bytes(
+            impl, self.n_parts, batch, W, n_attrs
+        )
+        hops = (
+            self.n_parts
+            * collectives.ring_steps(impl, self.n_parts)
+            * self.auto_hop_bytes
+        )
+        return hops, vol
+
+    def modeled_latency_split_cand(
+        self, block_batch: int, W: int, n_attrs: int | None = None
+    ) -> tuple[int, int]:
+        """``(dispatch_bytes, collective_bytes)`` for one 2-D round.
+
+        Volume terms mirror :meth:`modeled_round_bytes_cand` (per-block
+        object reduces + the cand-axis survivor gather); the hop term adds
+        the two ring schedules' latency steps — ``cand_parts`` independent
+        object rings at the resolved impl plus ``n_parts`` cand-axis
+        allgather rings — priced at ``auto_hop_bytes`` each.
+        """
+        impl = self.resolve_impl(block_batch, W, n_attrs)
+        obj_vol = self.cand_parts * collectives.modeled_comm_bytes(
+            impl, self.n_parts, block_batch, W, n_attrs
+        )
+        gather_vol = (
+            self.n_parts
+            * self.cand_parts
+            * (self.cand_parts - 1)
+            * block_batch
+            * W
+            * 4
+        )
+        obj_hops = (
+            self.cand_parts
+            * self.n_parts
+            * collectives.ring_steps(impl, self.n_parts)
+            * self.auto_hop_bytes
+        )
+        gather_hops = (
+            self.n_parts
+            * self.cand_parts
+            * collectives.ring_steps("allgather", self.cand_parts)
+            * self.auto_hop_bytes
+        )
+        return obj_hops + gather_hops, obj_vol + gather_vol
+
     def describe(self) -> dict:
         """JSON-friendly summary for launcher output and benchmark records."""
         return {

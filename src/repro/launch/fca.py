@@ -38,7 +38,7 @@ import numpy as np
 
 from repro.core import ClosureEngine, bitset, mrcbo, mrganter, mrganter_plus
 from repro.core.engine import BACKENDS
-from repro.core.mr import PIPELINES
+from repro.core.mr import PIPELINES, ROUNDS
 from repro.data import fca_datasets
 from repro.dist.collectives import IMPLS
 from repro.dist.shardplan import ShardPlan
@@ -76,7 +76,11 @@ def _mine(args, ctx, plan, backend, min_support=None):
     algo = {"mrganter": mrganter, "mrganter+": mrganter_plus, "mrcbo": mrcbo}[
         args.algorithm
     ]
-    kw = {"pipeline": args.pipeline, "min_support": min_support}
+    kw = {
+        "pipeline": args.pipeline,
+        "rounds": getattr(args, "rounds", "sync"),
+        "min_support": min_support,
+    }
     if args.algorithm == "mrganter+":
         kw["local_prune"] = args.local_prune
     res = algo(ctx, eng, max_iterations=args.max_iterations, **kw)
@@ -94,13 +98,21 @@ def cmd_mine(args, ctx, spec, plan, backend):
         "plan": plan.describe(),
         "backend": backend,
         "pipeline": args.pipeline,
+        "rounds": args.rounds,
         "algorithm": res.algorithm,
         "min_support_resolved": res.min_support,
         "concepts": res.n_concepts,
         "iterations": res.n_iterations,
         "closures_computed": res.n_closures_computed,
         "modeled_comm_bytes": res.modeled_comm_bytes,
+        "modeled_dispatch_bytes": eng.stats.modeled_dispatch_bytes,
+        "modeled_collective_bytes": eng.stats.modeled_collective_bytes,
         "reduce_rounds": eng.stats.reduce_rounds,
+        "dispatch_s": round(eng.stats.dispatch_s, 4),
+        "host_blocked_s": round(eng.stats.host_blocked_s, 4),
+        "spec_rounds": eng.stats.spec_rounds,
+        "spec_fallbacks": eng.stats.spec_fallbacks,
+        "spec_discarded": eng.stats.spec_discarded,
         "wall_time_s": round(res.wall_time_s, 3),
     }
 
@@ -301,6 +313,9 @@ def main(argv=None):
                    help="deprecated: use --backend jnp")
     p.add_argument("--pipeline", default="device", choices=list(PIPELINES),
                    help="device-resident frontier pipeline vs host oracle loop")
+    p.add_argument("--rounds", default="sync", choices=list(ROUNDS),
+                   help="sync = blocking oracle rounds; async = speculative "
+                        "double-buffered scheduler (device pipeline only)")
     p.add_argument("--local-prune", action="store_true",
                    help="mrganter+: per-partition seed dedupe before the "
                         "reduce (pruned candidates never cross the wire)")

@@ -1,0 +1,285 @@
+"""Speculative double-buffered round scheduler (``rounds="async"``).
+
+The async scheduler dispatches round r+1's expansion against the
+*unreconciled* round-r survivor buffer while round r's AND-allreduce and
+psum are in flight, then reconciles on adoption: over-expanded rows are
+masked, under-coverage falls back to a synchronous re-dispatch of the
+uncovered seed tail.  The sync path stays the bit-exact oracle, so every
+test here is an identity check against it — concept sets AND iteration
+counts — plus the reconciliation edge cases: exact ``round_budget``
+boundaries, an empty true frontier discovered after the speculative
+dispatch, and the ``_adopt`` refuse-to-drop guard under async state.
+The real-mesh twin lives in tests/test_distributed_8dev.py.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    ClosureEngine,
+    all_closures_batched,
+    bitset,
+    lectic,
+    mrcbo,
+    mrganter,
+    mrganter_plus,
+)
+from repro.core.context import FormalContext
+from repro.core.frontier import DeviceFrontier, bucket_size
+from repro.dist.shardplan import ShardPlan
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:  # deterministic seeded fallback (repro.testing)
+    from repro.testing import given, settings, st
+
+settings.register_profile("async", deadline=None, max_examples=16)
+settings.load_profile("async")
+
+DRIVERS = {
+    "mrganter+": (mrganter_plus, {"local_prune": True}),
+    "mrcbo": (mrcbo, {}),
+    "mrganter": (mrganter, {}),
+}
+
+
+def _keys(intents):
+    return {bitset.key_bytes(y) for y in intents}
+
+
+@pytest.fixture(scope="module")
+def ctx():
+    return FormalContext.synthetic(90, 21, 0.25, seed=7)
+
+
+@pytest.fixture(scope="module")
+def ref(ctx):
+    return _keys(all_closures_batched(ctx))
+
+
+@pytest.fixture(scope="module")
+def small_ctx():
+    # small enough for MRGanter's one-concept-per-round chain to finish
+    return FormalContext.synthetic(60, 12, 0.3, seed=3)
+
+
+def _plan(geom, **kw):
+    n_obj, n_cand = geom
+    return ShardPlan.simulated(n_obj, cand_parts=n_cand, block_n=64, **kw)
+
+
+def _pair(ctx, name, plan_kw_pairs, **kw):
+    """Run (sync, async) on fresh engines of identical geometry."""
+    algo, akw = DRIVERS[name]
+    out = []
+    for mode, plan in zip(("sync", "async"), plan_kw_pairs):
+        eng = ClosureEngine(ctx, plan=plan, backend="jnp")
+        out.append((eng, algo(ctx, eng, rounds=mode, **akw, **kw)))
+    return out
+
+
+# -- identity: every driver × plan geometry × iceberg threshold --------------
+
+
+@pytest.mark.parametrize("geom", [(1, 1), (3, 1), (2, 2)])
+@pytest.mark.parametrize("name", list(DRIVERS))
+@pytest.mark.parametrize("min_support", [None, 4])
+def test_async_matches_sync(ctx, name, geom, min_support):
+    # cap MRGanter's one-concept-per-round chain (repo convention)
+    kw = {"max_iterations": 40} if name == "mrganter" else {}
+    (es, rs), (ea, ra) = _pair(
+        ctx, name, (_plan(geom), _plan(geom)), min_support=min_support, **kw
+    )
+    assert _keys(ra.intents) == _keys(rs.intents)
+    assert ra.n_iterations == rs.n_iterations
+    assert ea.stats.spec_rounds > 0
+    if not kw:
+        # an uncapped run's terminal speculative round is always discarded
+        # (capped runs stop speculating one round before the cap instead)
+        assert ea.stats.spec_discarded >= 1
+    assert es.stats.spec_rounds == 0
+
+
+def test_async_mrganter_exact_lectic_order(small_ctx):
+    """MRGanter's async chain must emit the FULL lattice in the identical
+    lectic order, not just the identical set — the chain IS the order."""
+    (_, rs), (_, ra) = _pair(
+        small_ctx, "mrganter", (_plan((2, 1)), _plan((2, 1)))
+    )
+    assert rs.n_concepts == ra.n_concepts
+    np.testing.assert_array_equal(
+        np.stack(rs.intents), np.stack(ra.intents)
+    )
+    assert _keys(ra.intents) == _keys(all_closures_batched(small_ctx))
+
+
+def test_async_full_set_vs_batched_oracle(ctx, ref):
+    for name in ("mrganter+", "mrcbo"):
+        algo, akw = DRIVERS[name]
+        eng = ClosureEngine(ctx, plan=_plan((2, 1)), backend="jnp")
+        res = algo(ctx, eng, rounds="async", **akw)
+        assert _keys(res.intents) == ref, name
+
+
+# -- round_budget boundaries -------------------------------------------------
+
+
+def _first_round_seeds(ctx, plan) -> int:
+    """True (post-dedupe) seed count of the root frontier's expansion."""
+    eng = ClosureEngine(ctx, plan=plan, backend="jnp")
+    fr = DeviceFrontier(eng, dedupe_closures=True)
+    fr.set_frontier(np.zeros((1, ctx.W), np.uint32))
+    rec = fr.reconcile_oplus(fr.spec_oplus(dedupe=True), min_support=None)
+    return rec.n_seeds
+
+
+@pytest.mark.parametrize("cand_parts", [1, 2])
+def test_spec_covered_at_exact_budget_boundary(ctx, cand_parts):
+    """A speculative chunk whose padded cap lands exactly on the true seed
+    count must adopt without a fallback — and its closures must equal the
+    sync step's bit for bit."""
+    n_seeds = _first_round_seeds(ctx, _plan((2, cand_parts), max_batch=4096))
+    budget = bucket_size(n_seeds)  # cap == bucket(n_seeds) ≥ n_seeds
+    plan = _plan((2, cand_parts), max_batch=-(-budget // cand_parts))
+    eng = ClosureEngine(ctx, plan=plan, backend="jnp")
+    fr = DeviceFrontier(eng, dedupe_closures=True)
+    fr.set_frontier(np.zeros((1, ctx.W), np.uint32))
+    rec = fr.reconcile_oplus(fr.spec_oplus(dedupe=True), min_support=None)
+    assert rec.n_seeds == n_seeds
+    assert not rec.under_covered and eng.stats.spec_fallbacks == 0
+
+    e2 = ClosureEngine(ctx, plan=plan, backend="jnp")
+    f2 = DeviceFrontier(e2, dedupe_closures=True)
+    f2.set_frontier(np.zeros((1, ctx.W), np.uint32))
+    sync_cl = f2.step_oplus(dedupe=True)
+    assert _keys(rec.closures) == _keys(sync_cl)
+
+
+@pytest.mark.parametrize("cand_parts", [1, 2])
+def test_spec_over_expansion_falls_back(ctx, cand_parts):
+    """One seed past the budget: the speculative chunk under-covers, the
+    reconcile re-dispatches the tail synchronously, and nothing is lost."""
+    n_seeds = _first_round_seeds(ctx, _plan((2, cand_parts), max_batch=4096))
+    p2 = 1 << ((n_seeds - 1).bit_length() - 1)  # largest power of two < n
+    assert p2 < n_seeds
+    plan = _plan((2, cand_parts), max_batch=max(1, p2 // cand_parts))
+    eng = ClosureEngine(ctx, plan=plan, backend="jnp")
+    fr = DeviceFrontier(eng, dedupe_closures=True)
+    fr.set_frontier(np.zeros((1, ctx.W), np.uint32))
+    rec = fr.reconcile_oplus(fr.spec_oplus(dedupe=True), min_support=None)
+    assert rec.under_covered and eng.stats.spec_fallbacks == 1
+    assert rec.n_seeds == n_seeds
+
+    e2 = ClosureEngine(ctx, plan=plan, backend="jnp")
+    f2 = DeviceFrontier(e2, dedupe_closures=True)
+    f2.set_frontier(np.zeros((1, ctx.W), np.uint32))
+    assert _keys(rec.closures) == _keys(f2.step_oplus(dedupe=True))
+
+
+def test_driver_identity_under_tiny_budget(ctx):
+    """End-to-end: a round budget far below the peak frontier forces the
+    fallback path repeatedly; the mined set must not change."""
+    for geom in ((2, 1), (2, 2)):
+        for name in ("mrganter+", "mrcbo"):
+            (es, rs), (ea, ra) = _pair(
+                ctx, name,
+                (_plan(geom, max_batch=16), _plan(geom, max_batch=16)),
+            )
+            assert _keys(ra.intents) == _keys(rs.intents), (name, geom)
+            assert ra.n_iterations == rs.n_iterations
+            assert ea.stats.spec_fallbacks >= 1, (name, geom)
+
+
+# -- empty true frontier after speculative dispatch --------------------------
+
+
+def test_empty_frontier_after_spec_iceberg(ctx):
+    """An iceberg threshold that prunes an entire round: the in-flight
+    speculative round built on those survivors must be discarded, and the
+    result must match sync."""
+    s = int(0.6 * ctx.n_objects)  # prunes everything below the top layer
+    for name in ("mrganter+", "mrcbo"):
+        (es, rs), (ea, ra) = _pair(
+            ctx, name, (_plan((2, 1)), _plan((2, 1))), min_support=s
+        )
+        assert _keys(ra.intents) == _keys(rs.intents), name
+        assert ra.n_iterations == rs.n_iterations, name
+        assert ea.stats.spec_discarded >= 1, name
+
+
+def test_degenerate_all_ones_context():
+    """|B(ctx)| = 1: the very first speculation is garbage and must be
+    discarded without an extra counted iteration."""
+    fc = FormalContext.synthetic(20, 6, 1.0, seed=0)
+    for name in DRIVERS:
+        algo, akw = DRIVERS[name]
+        es = ClosureEngine(fc, plan=ShardPlan.simulated(2), backend="jnp")
+        ea = ClosureEngine(fc, plan=ShardPlan.simulated(2), backend="jnp")
+        rs = algo(fc, es, rounds="sync", **akw)
+        ra = algo(fc, ea, rounds="async", **akw)
+        assert _keys(ra.intents) == _keys(rs.intents), name
+        assert ra.n_iterations == rs.n_iterations, name
+        assert ra.n_concepts == 1
+
+
+# -- adoption guards under async state ---------------------------------------
+
+
+def test_len_raises_while_speculative(ctx):
+    eng = ClosureEngine(ctx, plan=_plan((2, 1)), backend="jnp")
+    fr = DeviceFrontier(eng)
+    fr.set_frontier(
+        np.zeros((1, ctx.W), np.uint32), gens=np.full(1, -1, np.int32)
+    )
+    fr.spec_cbo()
+    with pytest.raises(RuntimeError, match="speculative"):
+        len(fr)
+
+
+def test_adopt_refuses_to_drop_rows_under_async(ctx):
+    """The PR-5 truncation guard must keep firing when the frontier count
+    lives on device: adopting more rows than the slot holds raises."""
+    eng = ClosureEngine(ctx, plan=_plan((2, 1)), backend="jnp")
+    fr = DeviceFrontier(eng)
+    fr.set_frontier(
+        np.zeros((1, ctx.W), np.uint32), gens=np.full(1, -1, np.int32)
+    )
+    spec = fr.spec_cbo()
+    with pytest.raises(RuntimeError, match="cand-shards"):
+        fr._adopt(jnp.zeros((4, ctx.W), jnp.uint32), None, 9)
+    fr.discard_spec(spec)
+
+
+def test_max_iterations_parity(ctx):
+    for name in DRIVERS:
+        for cap in (1, 2, 4):
+            (_, rs), (_, ra) = _pair(
+                ctx, name, (_plan((2, 1)), _plan((2, 1))),
+                max_iterations=cap,
+            )
+            assert _keys(ra.intents) == _keys(rs.intents), (name, cap)
+            assert ra.n_iterations == rs.n_iterations == cap, (name, cap)
+
+
+# -- on-device lectic selection (Alg. 5 line 6) ------------------------------
+
+
+@given(
+    st.integers(1, 40), st.integers(0, 2**31 - 1), st.floats(0.0, 1.0)
+)
+def test_select_lectic_matches_host_oracle(n_attrs, seed, p_ok):
+    """argmax + dynamic-slice gather ≡ the host's closures[idx.max()]."""
+    rng = np.random.default_rng(seed)
+    W = bitset.n_words(n_attrs)
+    closures = rng.integers(0, 2**32, size=(n_attrs, W), dtype=np.uint32)
+    ok = rng.random(n_attrs) < p_ok
+    Y_dev, found = lectic.select_lectic_jnp(
+        jnp.asarray(closures), jnp.asarray(ok)
+    )
+    if not ok.any():
+        assert not bool(found)
+    else:
+        assert bool(found)
+        want = closures[int(np.nonzero(ok)[0].max())]
+        np.testing.assert_array_equal(np.asarray(Y_dev), want)
