@@ -155,6 +155,8 @@ def run(
                 "collective_rounds": qe.stats.collective_rounds,
                 "reduce_rounds": qe.stats.reduce_rounds,
                 "modeled_comm_bytes": qe.stats.modeled_comm_bytes,
+                # HDR-histogram micro-batch latency view (last timed pass)
+                "latency_percentiles": qe.stats.latency_percentiles,
             })
 
     # bit-identical acceptance check: SPMD results == host loop
@@ -218,6 +220,9 @@ def run(
             "batched_queries_per_s": batched["queries_per_s"],
             "host_queries_per_s": round(base_qps, 1),
             "throughput_ratio": round(batched["queries_per_s"] / base_qps, 1),
+            "micro_batch_latency": batched["latency_percentiles"].get(
+                "micro_batch", {}
+            ),
             "bit_identical": True,
         },
     }

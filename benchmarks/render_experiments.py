@@ -166,6 +166,50 @@ def async_ab_table() -> str:
     return "\n".join(rows)
 
 
+def obs_trace_table() -> str:
+    """§Observability sync-vs-async span table from the committed
+    TRACE_mine_sync.json / TRACE_mine_async.json timelines."""
+    from repro.obs import async_overlaps, span_rollup
+
+    rolls, overlaps = {}, {}
+    for mode in ("sync", "async"):
+        with open(f"{ROOT}/TRACE_mine_{mode}.json") as f:
+            obj = json.load(f)
+        rolls[mode] = span_rollup(obj["traceEvents"])
+        overlaps[mode] = async_overlaps(obj)
+    names = sorted(set(rolls["sync"]) | set(rolls["async"]))
+    rows = [
+        "| span | sync count | sync p50 ms | sync p95 ms "
+        "| async count | async p50 ms | async p95 ms |",
+        "|---|---|---|---|---|---|---|",
+    ]
+    for name in names:
+        cells = []
+        for mode in ("sync", "async"):
+            r = rolls[mode].get(name)
+            if r is None:
+                cells += ["—", "—", "—"]
+            else:
+                cells += [str(r["count"]), f"{r['p50_s'] * 1e3:.2f}",
+                          f"{r['p95_s'] * 1e3:.2f}"]
+        rows.append(f"| `{name}` | " + " | ".join(cells) + " |")
+    n_ov = len(overlaps["async"])
+    n_spec = sum(
+        o["span"].startswith("spec/dispatch") for o in overlaps["async"]
+    )
+    rows.append("")
+    rows.append(
+        f"Overlap census: the sync timeline has "
+        f"**{len(overlaps['sync'])}** spans beginning inside an in-flight "
+        f"round window (a strict staircase), the async timeline has "
+        f"**{n_ov}** — including **{n_spec}** `spec/dispatch[r+1]` spans "
+        f"inside round r's window, the speculative scheduler's signature "
+        f"(`python -m repro.obs TRACE_mine_async.json "
+        f"--expect-async-overlap` asserts it)."
+    )
+    return "\n".join(rows)
+
+
 def inject(md: str, marker: str, content: str) -> str:
     block = f"<!-- {marker} -->\n{content}\n<!-- /{marker} -->"
     if f"<!-- /{marker} -->" in md:
@@ -185,6 +229,7 @@ def main():
         ("ROOFLINE_TABLE", roofline_table),
         ("FUSED_AB_TABLE", fused_ab_table),
         ("ASYNC_AB_TABLE", async_ab_table),
+        ("OBS_TRACE_TABLE", obs_trace_table),
     ):
         try:
             md = inject(md, marker, builder())

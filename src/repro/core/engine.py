@@ -41,13 +41,21 @@ from repro.dist import collectives
 from repro.dist.shardplan import AUTO_IMPLS, ShardPlan
 from repro.kernels import frontier as fkern
 from repro.kernels import ops
+from repro.obs import StatsBase
+from repro.obs import trace as obs
 
 
 BACKENDS = ("kernel", "jnp", "matmul")
 
 
 @dataclasses.dataclass
-class EngineStats:
+class EngineStats(StatsBase):
+    """Per-run mining ledger.  Inherits the schedule census
+    (``reduce_rounds``/``auto_hop_bytes``/``hop_calibrated``) and the
+    latency-percentile view (``latency_percentiles`` + the histogram
+    registry behind it) from :class:`repro.obs.StatsBase`, shared with the
+    serving tier's QueryStats so both record the autotuner identically."""
+
     closure_calls: int = 0
     closures_computed: int = 0
     modeled_comm_bytes: int = 0
@@ -57,13 +65,6 @@ class EngineStats:
     h2d_bytes: int = 0
     d2h_transfers: int = 0
     d2h_bytes: int = 0
-    # per-dispatch schedule census: {impl: dispatch count}.  For a fixed
-    # reduce_impl this has one key; under ``reduce_impl="auto"`` it records
-    # the autotuner's per-round allgather-vs-rsag choices.
-    reduce_rounds: dict = dataclasses.field(default_factory=dict)
-    # the plan's "auto" latency term (measured when hop_calibrated)
-    auto_hop_bytes: int = 0
-    hop_calibrated: bool = False
     # async speculative-round ledger (wall seconds the host spent enqueueing
     # device work vs blocked waiting on device results, the α/β split of the
     # modeled reduce cost, and the speculation outcome census).  The timing
@@ -653,7 +654,7 @@ class ClosureEngine:
         self.stats.modeled_dispatch_bytes += hops
         self.stats.modeled_collective_bytes += vol
         impl = self.plan.resolve_impl(cap, self.ctx.W, self.ctx.n_attrs)
-        self.stats.reduce_rounds[impl] = self.stats.reduce_rounds.get(impl, 0) + 1
+        self.stats.record_reduce(impl)
 
     def charge_round_cand(
         self, block_cap: int, n_valid: int, *, count_round: bool = True
@@ -672,7 +673,7 @@ class ClosureEngine:
         self.stats.modeled_dispatch_bytes += hops
         self.stats.modeled_collective_bytes += vol
         impl = self.plan.resolve_impl(block_cap, self.ctx.W, self.ctx.n_attrs)
-        self.stats.reduce_rounds[impl] = self.stats.reduce_rounds.get(impl, 0) + 1
+        self.stats.record_reduce(impl)
 
     # -- public API ----------------------------------------------------------
 
@@ -691,21 +692,22 @@ class ClosureEngine:
         out_c = np.empty((B, self.ctx.W), np.uint32)
         out_s = np.empty((B,), np.int32)
         self.stats.rounds += 1
-        for lo in range(0, B, self.max_batch):
-            chunk = cands[lo : lo + self.max_batch]
-            b = chunk.shape[0]
-            cap = ops.bucket_size(b, minimum=self.min_bucket)
-            if cap != b:  # pad with all-ones candidates; outputs dropped
-                pad = np.full((cap - b, self.ctx.W), 0xFFFFFFFF, np.uint32)
-                chunk = np.concatenate([chunk, pad], axis=0)
-            gc, gs = self._step(self.rows, jnp.asarray(chunk))
-            out_c[lo : lo + b] = np.asarray(gc)[:b]
-            out_s[lo : lo + b] = np.asarray(gs)[:b]
-            self.charge_round(cap, b, count_round=False)
-            self.stats.h2d_transfers += 1
-            self.stats.h2d_bytes += cap * self.ctx.W * 4
-            self.stats.d2h_transfers += 2
-            self.stats.d2h_bytes += cap * (self.ctx.W + 1) * 4
+        with obs.current().span("engine/closure", batch=B):
+            for lo in range(0, B, self.max_batch):
+                chunk = cands[lo : lo + self.max_batch]
+                b = chunk.shape[0]
+                cap = ops.bucket_size(b, minimum=self.min_bucket)
+                if cap != b:  # pad with all-ones candidates; outputs dropped
+                    pad = np.full((cap - b, self.ctx.W), 0xFFFFFFFF, np.uint32)
+                    chunk = np.concatenate([chunk, pad], axis=0)
+                gc, gs = self._step(self.rows, jnp.asarray(chunk))
+                out_c[lo : lo + b] = np.asarray(gc)[:b]
+                out_s[lo : lo + b] = np.asarray(gs)[:b]
+                self.charge_round(cap, b, count_round=False)
+                self.stats.h2d_transfers += 1
+                self.stats.h2d_bytes += cap * self.ctx.W * 4
+                self.stats.d2h_transfers += 2
+                self.stats.d2h_bytes += cap * (self.ctx.W + 1) * 4
         return out_c, out_s
 
     def closure_dev(

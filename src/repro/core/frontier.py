@@ -61,6 +61,7 @@ import numpy as np
 from repro.core import lectic
 from repro.kernels import frontier as fkern
 from repro.kernels.ops import bucket_size
+from repro.obs import trace as obs
 
 
 # ---------------------------------------------------------------------------
@@ -297,6 +298,10 @@ class SpecRound:
     surv_z: jax.Array | None = None
     surv_g: jax.Array | None = None
     slot: int = 0
+    # observability: the round's sequence number (the async trace span id)
+    # and its dispatch timestamp (per-round latency = reconcile − dispatch)
+    seq: int = 0
+    t_dispatch: float = 0.0
 
 
 @dataclasses.dataclass
@@ -357,6 +362,11 @@ class DeviceFrontier:
         # under-coverage fallback, never an incorrect result.
         self._seed_hint = None
         self._k_hint = None
+        # Round sequence counter + plan-geometry tags for the span tracer
+        # (repro.obs) — the seq numbers the ``mine/round[r]`` spans and ids
+        # the async round tracks, so sync/async timelines line up.
+        self._seq = 0
+        self._tags = engine.plan.trace_tags()
 
         # Everything frontier-static is memoized on the ENGINE, not this
         # object: a driver builds a fresh DeviceFrontier per run, and
@@ -659,6 +669,12 @@ class DeviceFrontier:
             -(-b // self.cand_parts), minimum=self.engine.min_bucket
         )
 
+    def _next_seq(self) -> int:
+        """Monotone round sequence number — span index + async track id."""
+        s = self._seq
+        self._seq = s + 1
+        return s
+
     # -- fused per-iteration steps ----------------------------------------
 
     def step_oplus(
@@ -677,23 +693,36 @@ class DeviceFrontier:
         the caller re-expands only what it receives) never size a later
         round's reduce.
         """
-        t0 = time.perf_counter()
-        seeds, n_dev = expand_oplus(
-            self._frontier, jnp.int32(self._n), self.LOW, self.BIT,
-            n_attrs=self.n_attrs, dedupe=dedupe,
+        tr = obs.current()
+        seq = self._next_seq()
+        t_round = time.perf_counter()
+        with tr.span(
+            f"mine/round[{seq}]", algo="oplus", mode="sync", **self._tags
+        ) as sp:
+            with tr.span(f"mine/round[{seq}]/expand"):
+                t0 = time.perf_counter()
+                seeds, n_dev = expand_oplus(
+                    self._frontier, jnp.int32(self._n), self.LOW, self.BIT,
+                    n_attrs=self.n_attrs, dedupe=dedupe,
+                )
+                self.engine.stats.dispatch_s += time.perf_counter() - t0
+                # scalar sync — sizes the reduce to the prune
+                n_seeds = self._block_scalar(n_dev)
+            if n_seeds == 0:
+                return np.zeros((0, self.W), np.uint32)
+            self._seed_hint = n_seeds
+            out = np.concatenate(
+                self._oplus_chunks(
+                    seeds, n_seeds, 0, min_support=min_support, first=True,
+                    seq=seq,
+                ),
+                axis=0,
+            )
+            sp.set(n_seeds=n_seeds, survivors=int(out.shape[0]))
+        self.engine.stats.observe_latency(
+            "round", time.perf_counter() - t_round
         )
-        self.engine.stats.dispatch_s += time.perf_counter() - t0
-        # scalar sync — sizes the reduce to the prune
-        n_seeds = self._block_scalar(n_dev)
-        if n_seeds == 0:
-            return np.zeros((0, self.W), np.uint32)
-        self._seed_hint = n_seeds
-        return np.concatenate(
-            self._oplus_chunks(
-                seeds, n_seeds, 0, min_support=min_support, first=True
-            ),
-            axis=0,
-        )
+        return out
 
     def _charge(self, two_d: bool, blk: int, cap: int, b: int, count: bool):
         if two_d:
@@ -718,6 +747,7 @@ class DeviceFrontier:
         min_support: int | None,
         first: bool,
         force_unique: bool = False,
+        seq: int = -1,
     ) -> list[np.ndarray]:
         """Close seeds ``[lo0, n_seeds)`` in round_budget chunks, one fused
         SPMD dispatch each, downloading every chunk's survivors.  Shared by
@@ -725,6 +755,8 @@ class DeviceFrontier:
         is row-wise, so chunk boundaries never change the surviving rows —
         only how many dispatches produce them)."""
         eng = self.engine
+        tr = obs.current()
+        pfx = f"mine/round[{seq}]"
         two_d = self.cand_parts > 1
         unique = self.dedupe_closures or force_unique
         parts = []
@@ -737,26 +769,36 @@ class DeviceFrontier:
                 name = "iceberg_unique" if unique else "iceberg"
                 if two_d:
                     name += "2d"
-                cl, k_dev = self._step_fn(name)(
-                    eng.rows, chunk, jnp.int32(b), jnp.int32(min_support)
-                )
-                eng.stats.dispatch_s += time.perf_counter() - t0
+                with tr.span(pfx + "/dispatch", chunk=b, cap=cap):
+                    cl, k_dev = self._step_fn(name)(
+                        eng.rows, chunk, jnp.int32(b), jnp.int32(min_support)
+                    )
+                    eng.stats.dispatch_s += time.perf_counter() - t0
                 self._charge(two_d, blk, cap, b, first)
-                parts.append(self._download(cl, self._block_scalar(k_dev)))
+                with tr.span(pfx + "/allreduce"):
+                    k = self._block_scalar(k_dev)
+                with tr.span(pfx + "/filter", survivors=k):
+                    parts.append(self._download(cl, k))
             elif unique:
-                cl_u, k_dev = self._step_fn("unique2d" if two_d else "unique")(
-                    eng.rows, chunk, jnp.int32(b)
-                )
-                eng.stats.dispatch_s += time.perf_counter() - t0
+                with tr.span(pfx + "/dispatch", chunk=b, cap=cap):
+                    cl_u, k_dev = self._step_fn(
+                        "unique2d" if two_d else "unique"
+                    )(eng.rows, chunk, jnp.int32(b))
+                    eng.stats.dispatch_s += time.perf_counter() - t0
                 self._charge(two_d, blk, cap, b, first)
-                parts.append(self._download(cl_u, self._block_scalar(k_dev)))
+                with tr.span(pfx + "/allreduce"):
+                    k = self._block_scalar(k_dev)
+                with tr.span(pfx + "/filter", survivors=k):
+                    parts.append(self._download(cl_u, k))
             else:
-                closures = self._step_fn("plain2d" if two_d else "plain")(
-                    eng.rows, chunk
-                )
-                eng.stats.dispatch_s += time.perf_counter() - t0
+                with tr.span(pfx + "/dispatch", chunk=b, cap=cap):
+                    closures = self._step_fn("plain2d" if two_d else "plain")(
+                        eng.rows, chunk
+                    )
+                    eng.stats.dispatch_s += time.perf_counter() - t0
                 self._charge(two_d, blk, cap, b, first)
-                parts.append(self._download(closures, b))
+                with tr.span(pfx + "/filter", survivors=b):
+                    parts.append(self._download(closures, b))
             first = False
         return parts
 
@@ -774,29 +816,45 @@ class DeviceFrontier:
         Returns ``(new_intents, n_seeds, n_new)`` — ``n_seeds`` is 0
         when the frontier was already exhausted (no closure round ran).
         """
-        t0 = time.perf_counter()
-        seeds, parents, gen, n_dev = expand_cbo(
-            self._frontier, self._gens, jnp.int32(self._n), self.BIT,
-            n_attrs=self.n_attrs,
+        tr = obs.current()
+        seq = self._next_seq()
+        t_round = time.perf_counter()
+        with tr.span(
+            f"mine/round[{seq}]", algo="cbo", mode="sync", **self._tags
+        ) as sp:
+            with tr.span(f"mine/round[{seq}]/expand"):
+                t0 = time.perf_counter()
+                seeds, parents, gen, n_dev = expand_cbo(
+                    self._frontier, self._gens, jnp.int32(self._n), self.BIT,
+                    n_attrs=self.n_attrs,
+                )
+                self.engine.stats.dispatch_s += time.perf_counter() - t0
+                n_seeds = self._block_scalar(n_dev)
+            if n_seeds == 0:
+                self._n = 0
+                return np.zeros((0, self.W), np.uint32), 0, 0
+            self._seed_hint = n_seeds
+            surv_z, surv_g, counts = self._cbo_chunks(
+                seeds, parents, gen, n_seeds, 0,
+                min_support=min_support, first=True, seq=seq,
+            )
+            n_new = sum(counts)
+            sp.set(n_seeds=n_seeds, survivors=n_new)
+            if n_new == 0:
+                self._n = 0
+                self.engine.stats.observe_latency(
+                    "round", time.perf_counter() - t_round
+                )
+                return np.zeros((0, self.W), np.uint32), n_seeds, 0
+            z_all = surv_z[0] if len(surv_z) == 1 else jnp.concatenate(surv_z)
+            g_all = surv_g[0] if len(surv_g) == 1 else jnp.concatenate(surv_g)
+            self._adopt(z_all, g_all, n_new)
+            with tr.span(f"mine/round[{seq}]/filter", survivors=n_new):
+                out = self._download(self._frontier, n_new)
+        self.engine.stats.observe_latency(
+            "round", time.perf_counter() - t_round
         )
-        self.engine.stats.dispatch_s += time.perf_counter() - t0
-        n_seeds = self._block_scalar(n_dev)
-        if n_seeds == 0:
-            self._n = 0
-            return np.zeros((0, self.W), np.uint32), 0, 0
-        self._seed_hint = n_seeds
-        surv_z, surv_g, counts = self._cbo_chunks(
-            seeds, parents, gen, n_seeds, 0,
-            min_support=min_support, first=True,
-        )
-        n_new = sum(counts)
-        if n_new == 0:
-            self._n = 0
-            return np.zeros((0, self.W), np.uint32), n_seeds, 0
-        z_all = surv_z[0] if len(surv_z) == 1 else jnp.concatenate(surv_z)
-        g_all = surv_g[0] if len(surv_g) == 1 else jnp.concatenate(surv_g)
-        self._adopt(z_all, g_all, n_new)
-        return self._download(self._frontier, n_new), n_seeds, n_new
+        return out, n_seeds, n_new
 
     def _cbo_chunks(
         self,
@@ -808,6 +866,7 @@ class DeviceFrontier:
         *,
         min_support: int | None,
         first: bool,
+        seq: int = -1,
     ) -> tuple[list, list, list]:
         """Close+canonicity for CbO seeds ``[lo0, n_seeds)`` in
         round_budget chunks.  Returns device survivor buffers
@@ -815,6 +874,8 @@ class DeviceFrontier:
         by the sync step and the async under-coverage fallback (canonicity
         is row-wise, so chunk boundaries never change the survivors)."""
         eng = self.engine
+        tr = obs.current()
+        pfx = f"mine/round[{seq}]"
         two_d = self.cand_parts > 1
         surv_z, surv_g, counts = [], [], []
         for lo in range(lo0, n_seeds, self.round_budget):
@@ -828,17 +889,21 @@ class DeviceFrontier:
                 jnp.int32(b),
             )
             t0 = time.perf_counter()
-            if min_support is not None:
-                name = "cbo_iceberg2d" if two_d else "cbo_iceberg"
-                z, g, k_dev = self._step_fn(name)(
-                    *args, jnp.int32(min_support)
-                )
-            else:
-                z, g, k_dev = self._step_fn("cbo2d" if two_d else "cbo")(*args)
-            eng.stats.dispatch_s += time.perf_counter() - t0
+            with tr.span(pfx + "/dispatch", chunk=b, cap=cap):
+                if min_support is not None:
+                    name = "cbo_iceberg2d" if two_d else "cbo_iceberg"
+                    z, g, k_dev = self._step_fn(name)(
+                        *args, jnp.int32(min_support)
+                    )
+                else:
+                    z, g, k_dev = self._step_fn(
+                        "cbo2d" if two_d else "cbo"
+                    )(*args)
+                eng.stats.dispatch_s += time.perf_counter() - t0
             self._charge(two_d, blk, cap, b, first)
             first = False
-            k = self._block_scalar(k_dev)
+            with tr.span(pfx + "/allreduce"):
+                k = self._block_scalar(k_dev)
             if k:
                 surv_z.append(z[:k])
                 surv_g.append(g[:k])
@@ -867,11 +932,21 @@ class DeviceFrontier:
         1-D region is candidate-axis-invariant, so on a 2-D mesh it simply
         replicates over the cand axis."""
         eng = self.engine
-        Y_next, done, nv_dev, cap = self._dispatch_ganter(min_support)
-        eng.charge_round(cap, self._block_scalar(nv_dev))
-        return self._download(Y_next[None, :], 1)[0], bool(
-            self._block_scalar(done)
-        )
+        tr = obs.current()
+        seq = self._next_seq()
+        t_round = time.perf_counter()
+        with tr.span(
+            f"mine/round[{seq}]", algo="ganter", mode="sync", **self._tags
+        ):
+            with tr.span(f"mine/round[{seq}]/dispatch"):
+                Y_next, done, nv_dev, cap = self._dispatch_ganter(min_support)
+            with tr.span(f"mine/round[{seq}]/allreduce"):
+                eng.charge_round(cap, self._block_scalar(nv_dev))
+            with tr.span(f"mine/round[{seq}]/filter"):
+                Y = self._download(Y_next[None, :], 1)[0]
+                flag = bool(self._block_scalar(done))
+        eng.stats.observe_latency("round", time.perf_counter() - t_round)
+        return Y, flag
 
     def _dispatch_ganter(self, min_support):
         """Enqueue one Alg.-5 step (no host sync): seed expansion, the
@@ -988,10 +1063,20 @@ class DeviceFrontier:
     def discard_spec(self, spec: SpecRound | None) -> None:
         """Drop a speculative round whose premise turned out wrong (the
         true frontier emptied, or under-coverage invalidated its input).
-        Nothing to undo and nothing was charged — spec rounds ledger their
-        stats at reconciliation only."""
+        Nothing to undo, and the round's *modeled* cost is never ledgered
+        (spec rounds charge collectives at reconciliation only) — but the
+        packed readback's copy has been in flight since dispatch, so those
+        bytes crossed the boundary whether or not anyone reads them and
+        the transfer census charges them here (sync-vs-async census parity
+        is asserted in tests/test_obs.py)."""
         if spec is not None:
-            self.engine.stats.spec_discarded += 1
+            st = self.engine.stats
+            st.spec_discarded += 1
+            st.d2h_transfers += 1
+            st.d2h_bytes += int(spec.packed.size) * 4
+            tr = obs.current()
+            tr.instant(f"spec/discard[{spec.seq}]")
+            tr.end_async(f"mine/round[{spec.seq}]", spec.seq, outcome="discard")
 
     def _download_packed(self, packed) -> np.ndarray:
         """The reconcile's ONE host-blocking wait: the packed round buffer
@@ -1015,34 +1100,41 @@ class DeviceFrontier:
         stale-row re-expansion (the host registry still owns novelty).
         """
         eng = self.engine
+        tr = obs.current()
+        seq = self._next_seq()
         t0 = time.perf_counter()
-        seeds, n_dev = expand_oplus(
-            self._frontier, self._n_arg(), self.LOW, self.BIT,
-            n_attrs=self.n_attrs, dedupe=dedupe,
+        tr.begin_async(
+            f"mine/round[{seq}]", seq, algo="oplus", mode="async", **self._tags
         )
-        cap, blk = self._spec_caps(self._spec_bound())
-        chunk = slice_pad(seeds, 0, cap)
-        nv = jnp.minimum(n_dev, jnp.int32(cap))
-        two_d = self.cand_parts > 1
-        if min_support is not None:
-            name = "iceberg_unique2d" if two_d else "iceberg_unique"
-            cl, k_dev = self._step_fn(name)(
-                eng.rows, chunk, nv, jnp.int32(min_support)
+        with tr.span(f"spec/dispatch[{seq}]"):
+            seeds, n_dev = expand_oplus(
+                self._frontier, self._n_arg(), self.LOW, self.BIT,
+                n_attrs=self.n_attrs, dedupe=dedupe,
             )
-        else:
-            cl, k_dev = self._step_fn("unique2d" if two_d else "unique")(
-                eng.rows, chunk, nv
+            cap, blk = self._spec_caps(self._spec_bound())
+            chunk = slice_pad(seeds, 0, cap)
+            nv = jnp.minimum(n_dev, jnp.int32(cap))
+            two_d = self.cand_parts > 1
+            if min_support is not None:
+                name = "iceberg_unique2d" if two_d else "iceberg_unique"
+                cl, k_dev = self._step_fn(name)(
+                    eng.rows, chunk, nv, jnp.int32(min_support)
+                )
+            else:
+                cl, k_dev = self._step_fn("unique2d" if two_d else "unique")(
+                    eng.rows, chunk, nv
+                )
+            slot = self._slot_rows(cap)
+            self._adopt_spec(
+                cl if slot == cap else slice_pad(cl, 0, slot), None, k_dev
             )
-        slot = self._slot_rows(cap)
-        self._adopt_spec(
-            cl if slot == cap else slice_pad(cl, 0, slot), None, k_dev
-        )
-        packed = _pack_round(n_dev, k_dev, cl)  # full buffer: recovery data
-        _start_d2h(packed)
-        eng.stats.dispatch_s += time.perf_counter() - t0
-        eng.stats.spec_rounds += 1
+            packed = _pack_round(n_dev, k_dev, cl)  # full buffer: recovery
+            _start_d2h(packed)
+            eng.stats.dispatch_s += time.perf_counter() - t0
+            eng.stats.spec_rounds += 1
         return SpecRound(
-            "oplus", packed, cap, blk, two_d, seeds=seeds, slot=slot
+            "oplus", packed, cap, blk, two_d, seeds=seeds, slot=slot,
+            seq=seq, t_dispatch=t0,
         )
 
     def reconcile_oplus(
@@ -1052,6 +1144,20 @@ class DeviceFrontier:
         round at its real size, and — only if the speculative chunk under-
         covered the true seed count — close the uncovered tail through the
         sync chunk runner."""
+        tr = obs.current()
+        with tr.span(f"spec/reconcile[{spec.seq}]") as sp:
+            rec = self._reconcile_oplus(spec, min_support=min_support)
+            outcome = "fallback" if rec.under_covered else "adopt"
+            sp.set(outcome=outcome, n_seeds=rec.n_seeds)
+        tr.end_async(f"mine/round[{spec.seq}]", spec.seq, outcome=outcome)
+        self.engine.stats.observe_latency(
+            "round", time.perf_counter() - spec.t_dispatch
+        )
+        return rec
+
+    def _reconcile_oplus(
+        self, spec: SpecRound, *, min_support: int | None = None
+    ) -> OplusRound:
         eng = self.engine
         host = self._download_packed(spec.packed)
         n_seeds = int(host[0])
@@ -1079,6 +1185,7 @@ class DeviceFrontier:
         parts += self._oplus_chunks(
             spec.seeds, n_seeds, spec.cap,
             min_support=min_support, first=False, force_unique=True,
+            seq=spec.seq,
         )
         out = np.concatenate(parts, axis=0)
         self._k_hint = max(1, out.shape[0])
@@ -1089,41 +1196,47 @@ class DeviceFrontier:
         survivors are adopted as the next frontier with their count still
         on device — exactly the sync contract, minus the readbacks."""
         eng = self.engine
+        tr = obs.current()
+        seq = self._next_seq()
         t0 = time.perf_counter()
-        seeds, parents, gen, n_dev = expand_cbo(
-            self._frontier, self._gens, self._n_arg(), self.BIT,
-            n_attrs=self.n_attrs,
+        tr.begin_async(
+            f"mine/round[{seq}]", seq, algo="cbo", mode="async", **self._tags
         )
-        cap, blk = self._spec_caps(self._spec_bound())
-        nv = jnp.minimum(n_dev, jnp.int32(cap))
-        two_d = self.cand_parts > 1
-        args = (
-            eng.rows,
-            slice_pad(seeds, 0, cap),
-            slice_pad(parents, 0, cap),
-            slice_pad(gen, 0, cap),
-            nv,
-        )
-        if min_support is not None:
-            z, g, k_dev = self._step_fn(
-                "cbo_iceberg2d" if two_d else "cbo_iceberg"
-            )(*args, jnp.int32(min_support))
-        else:
-            z, g, k_dev = self._step_fn("cbo2d" if two_d else "cbo")(*args)
-        slot = self._slot_rows(cap)
-        if slot == cap:
-            self._adopt_spec(z, g, k_dev)
-        else:
-            self._adopt_spec(
-                slice_pad(z, 0, slot), slice_pad(g, 0, slot), k_dev
+        with tr.span(f"spec/dispatch[{seq}]"):
+            seeds, parents, gen, n_dev = expand_cbo(
+                self._frontier, self._gens, self._n_arg(), self.BIT,
+                n_attrs=self.n_attrs,
             )
-        packed = _pack_round(n_dev, k_dev, z)  # full buffer: recovery data
-        _start_d2h(packed)
-        eng.stats.dispatch_s += time.perf_counter() - t0
-        eng.stats.spec_rounds += 1
+            cap, blk = self._spec_caps(self._spec_bound())
+            nv = jnp.minimum(n_dev, jnp.int32(cap))
+            two_d = self.cand_parts > 1
+            args = (
+                eng.rows,
+                slice_pad(seeds, 0, cap),
+                slice_pad(parents, 0, cap),
+                slice_pad(gen, 0, cap),
+                nv,
+            )
+            if min_support is not None:
+                z, g, k_dev = self._step_fn(
+                    "cbo_iceberg2d" if two_d else "cbo_iceberg"
+                )(*args, jnp.int32(min_support))
+            else:
+                z, g, k_dev = self._step_fn("cbo2d" if two_d else "cbo")(*args)
+            slot = self._slot_rows(cap)
+            if slot == cap:
+                self._adopt_spec(z, g, k_dev)
+            else:
+                self._adopt_spec(
+                    slice_pad(z, 0, slot), slice_pad(g, 0, slot), k_dev
+                )
+            packed = _pack_round(n_dev, k_dev, z)  # full buffer: recovery
+            _start_d2h(packed)
+            eng.stats.dispatch_s += time.perf_counter() - t0
+            eng.stats.spec_rounds += 1
         return SpecRound(
             "cbo", packed, cap, blk, two_d, seeds=seeds, parents=parents,
-            gen=gen, surv_z=z, surv_g=g, slot=slot,
+            gen=gen, surv_z=z, surv_g=g, slot=slot, seq=seq, t_dispatch=t0,
         )
 
     def reconcile_cbo(
@@ -1135,6 +1248,20 @@ class DeviceFrontier:
         from the packed buffer.  Under-coverage closes the uncovered tail
         synchronously and re-adopts the full survivor set — restoring
         exactness before the driver re-speculates."""
+        tr = obs.current()
+        with tr.span(f"spec/reconcile[{spec.seq}]") as sp:
+            rec = self._reconcile_cbo(spec, min_support=min_support)
+            outcome = "fallback" if rec.under_covered else "adopt"
+            sp.set(outcome=outcome, n_seeds=rec.n_seeds)
+        tr.end_async(f"mine/round[{spec.seq}]", spec.seq, outcome=outcome)
+        self.engine.stats.observe_latency(
+            "round", time.perf_counter() - spec.t_dispatch
+        )
+        return rec
+
+    def _reconcile_cbo(
+        self, spec: SpecRound, *, min_support: int | None = None
+    ) -> CboRound:
         eng = self.engine
         host = self._download_packed(spec.packed)
         n_seeds = int(host[0])
@@ -1163,7 +1290,7 @@ class DeviceFrontier:
         eng.stats.spec_fallbacks += 1
         z_list, g_list, counts = self._cbo_chunks(
             spec.seeds, spec.parents, spec.gen, n_seeds, spec.cap,
-            min_support=min_support, first=False,
+            min_support=min_support, first=False, seq=spec.seq,
         )
         n_new = k + sum(counts)
         if n_new == 0:
@@ -1181,18 +1308,35 @@ class DeviceFrontier:
         is broadcast into the frontier slot on device, so the next step
         chains on it without the intent ever visiting the host."""
         eng = self.engine
-        Y_next, done, nv_dev, cap = self._dispatch_ganter(min_support)
-        t0 = time.perf_counter()
-        packed = _pack_round(done, nv_dev, Y_next[None, :])
-        _start_d2h(packed)
-        eng.stats.dispatch_s += time.perf_counter() - t0
-        eng.stats.spec_rounds += 1
-        return SpecRound("ganter", packed, cap, cap, False)
+        tr = obs.current()
+        seq = self._next_seq()
+        t_dispatch = time.perf_counter()
+        tr.begin_async(
+            f"mine/round[{seq}]", seq, algo="ganter", mode="async",
+            **self._tags,
+        )
+        with tr.span(f"spec/dispatch[{seq}]"):
+            Y_next, done, nv_dev, cap = self._dispatch_ganter(min_support)
+            t0 = time.perf_counter()
+            packed = _pack_round(done, nv_dev, Y_next[None, :])
+            _start_d2h(packed)
+            eng.stats.dispatch_s += time.perf_counter() - t0
+            eng.stats.spec_rounds += 1
+        return SpecRound(
+            "ganter", packed, cap, cap, False, seq=seq, t_dispatch=t_dispatch
+        )
 
     def reconcile_ganter(self, spec: SpecRound) -> tuple[np.ndarray, bool]:
         """Wait on the packed ``[done/exhausted, n_valid, Y_next]`` buffer
         and charge the round at its true seed count.  Returns
         ``(Y_next, flag)`` with the same contract as :meth:`step_ganter`."""
-        host = self._download_packed(spec.packed)
-        self.engine.charge_round(spec.cap, int(host[1]))
+        tr = obs.current()
+        with tr.span(f"spec/reconcile[{spec.seq}]") as sp:
+            host = self._download_packed(spec.packed)
+            self.engine.charge_round(spec.cap, int(host[1]))
+            sp.set(outcome="adopt")
+        tr.end_async(f"mine/round[{spec.seq}]", spec.seq, outcome="adopt")
+        self.engine.stats.observe_latency(
+            "round", time.perf_counter() - spec.t_dispatch
+        )
         return host[2:].astype(np.uint32, copy=False), bool(host[0])

@@ -37,6 +37,7 @@ the frontier is exhausted.
 from __future__ import annotations
 
 import dataclasses
+import functools
 import time
 
 import jax.numpy as jnp
@@ -46,6 +47,7 @@ from repro.core import bitset, lectic
 from repro.core.engine import ClosureEngine
 from repro.core.frontier import DeviceFrontier
 from repro.core.hashindex import TwoLevelHash
+from repro.obs import trace as obs
 
 PIPELINES = ("device", "host")
 
@@ -74,6 +76,28 @@ class MRResult:
     @property
     def n_concepts(self) -> int:
         return len(self.intents)
+
+
+def _traced_driver(algo: str):
+    """Wrap a public MR* driver in the run's root trace span.
+
+    The span carries the run configuration (pipeline / rounds mode) so a
+    saved timeline is self-describing; with the no-op tracer installed
+    (the default) the wrapper is one dict construction per *mine*."""
+
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            with obs.current().span(
+                f"mine/{algo}",
+                pipeline=kwargs.get("pipeline", "device"),
+                rounds=kwargs.get("rounds", "sync"),
+            ):
+                return fn(*args, **kwargs)
+
+        return wrapper
+
+    return deco
 
 
 def _seeds_for(Y: np.ndarray, tables: lectic.LecticTables) -> np.ndarray:
@@ -128,6 +152,7 @@ def _check_min_support(min_support: int | None) -> int | None:
 # ---------------------------------------------------------------------------
 
 
+@_traced_driver("mrganter")
 def mrganter(
     ctx,
     engine: ClosureEngine,
@@ -264,6 +289,7 @@ def _mrganter_async(
 # ---------------------------------------------------------------------------
 
 
+@_traced_driver("mrganter_plus")
 def mrganter_plus(
     ctx,
     engine: ClosureEngine,
@@ -443,6 +469,7 @@ def _mrganter_plus_async(
 # ---------------------------------------------------------------------------
 
 
+@_traced_driver("mrcbo")
 def mrcbo(
     ctx,
     engine: ClosureEngine,

@@ -681,6 +681,17 @@ class ShardPlan:
             "hop_calibrated": self.hop_calibrated,
         }
 
+    def trace_tags(self) -> dict:
+        """The geometry tags every round span carries (repro.obs): the
+        subset of :meth:`describe` that identifies the plan in a timeline
+        without bloating per-event args."""
+        return {
+            "plan": "simulated" if self.mesh is None else "mesh",
+            "n_parts": self.n_parts,
+            "cand_parts": self.cand_parts,
+            "reduce_impl": self.reduce_impl,
+        }
+
 
 # ---------------------------------------------------------------------------
 # interconnect probe (auto_hop_bytes calibration)

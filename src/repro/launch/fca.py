@@ -25,6 +25,14 @@ measured batch size (the per-round record lands in the printed stats);
 measured interconnect probe.  ``--min-support`` takes an absolute object
 count (≥ 1) or a fraction of |O| (in (0, 1)); the resolved count is echoed
 in the JSON stats.
+
+Observability (all subcommands): ``--trace out.json`` records every round
+/ speculative dispatch+reconcile / query micro-batch / stream commit as a
+Chrome/Perfetto timeline (open at https://ui.perfetto.dev, validate with
+``python -m repro.obs out.json``) and adds a per-span latency rollup to
+the printed stats; ``--stats-json`` writes those stats to a file.  Query
+stats carry HDR-histogram p50/p95/p99 micro-batch latencies
+(``latency_percentiles``); mining stats carry per-round ones.
 """
 
 from __future__ import annotations
@@ -42,6 +50,13 @@ from repro.core.mr import PIPELINES, ROUNDS
 from repro.data import fca_datasets
 from repro.dist.collectives import IMPLS
 from repro.dist.shardplan import ShardPlan
+from repro.obs import (
+    Tracer,
+    span_rollup,
+    start_device_trace,
+    stop_device_trace,
+    use_tracer,
+)
 
 
 def build_plan(args) -> ShardPlan:
@@ -350,6 +365,20 @@ def main(argv=None):
     p.add_argument("--rank-by", default="confidence",
                    choices=["confidence", "lift"],
                    help="rules: top-k rank metric")
+    # observability (all subcommands)
+    p.add_argument("--trace", metavar="PATH", default=None,
+                   help="write a Chrome/Perfetto trace_event JSON timeline "
+                        "of the run (every mining round with its dispatch/"
+                        "allreduce/filter phases, speculative dispatch+"
+                        "reconcile windows, serving micro-batches, stream "
+                        "stage/commit) to PATH; load in ui.perfetto.dev or "
+                        "validate with `python -m repro.obs.trace PATH`")
+    p.add_argument("--stats-json", metavar="PATH", default=None,
+                   help="also write the run's JSON stats to PATH (with "
+                        "--trace they gain a per-span latency rollup)")
+    p.add_argument("--device-trace", metavar="DIR", default=None,
+                   help="pass-through to jax.profiler.start_trace(DIR): "
+                        "capture the XLA device timeline alongside --trace")
     args = p.parse_args(argv)
 
     backend = args.backend
@@ -362,9 +391,28 @@ def main(argv=None):
     ctx, spec = fca_datasets.load(args.dataset, scale=args.scale,
                                   data_dir=args.data_dir)
     plan = build_plan(args)
-    out = {"mine": cmd_mine, "serve": cmd_serve, "rules": cmd_rules}[
+    cmd = {"mine": cmd_mine, "serve": cmd_serve, "rules": cmd_rules}[
         args.command
-    ](args, ctx, spec, plan, backend)
+    ]
+    tracer = Tracer() if args.trace else None
+    if args.device_trace:
+        start_device_trace(args.device_trace)
+    try:
+        if tracer is not None:
+            with use_tracer(tracer):
+                out = cmd(args, ctx, spec, plan, backend)
+        else:
+            out = cmd(args, ctx, spec, plan, backend)
+    finally:
+        if args.device_trace:
+            stop_device_trace()
+    if tracer is not None:
+        tracer.save(args.trace)
+        out["trace_path"] = args.trace
+        out["span_rollup"] = span_rollup(tracer.to_dict()["traceEvents"])
+    if args.stats_json:
+        with open(args.stats_json, "w") as fh:
+            json.dump(out, fh, indent=2)
     print(json.dumps(out, indent=2))
 
 

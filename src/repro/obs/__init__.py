@@ -1,0 +1,41 @@
+"""repro.obs — round-level tracing + metrics for mining and serving.
+
+The observability floor: span traces (Perfetto ``trace_event`` JSON) of
+every host-side round boundary, a label-aware metrics registry with
+HDR-style latency histograms, and the shared schedule-census mixin both
+stats tiers inherit.  Tracing is off by default (shared no-op tracer);
+install one with ``use_tracer(Tracer())`` or ``fca ... --trace out.json``.
+"""
+
+from repro.obs.metrics import Histogram, Registry, ScheduleCensus, StatsBase
+from repro.obs.trace import (
+    NOOP,
+    NoopTracer,
+    Tracer,
+    async_overlaps,
+    current,
+    set_tracer,
+    span_rollup,
+    start_device_trace,
+    stop_device_trace,
+    use_tracer,
+    validate_trace,
+)
+
+__all__ = [
+    "Histogram",
+    "Registry",
+    "ScheduleCensus",
+    "StatsBase",
+    "NOOP",
+    "NoopTracer",
+    "Tracer",
+    "async_overlaps",
+    "current",
+    "set_tracer",
+    "span_rollup",
+    "start_device_trace",
+    "stop_device_trace",
+    "use_tracer",
+    "validate_trace",
+]

@@ -1,0 +1,10 @@
+"""``python -m repro.obs TRACE.json [--expect-async-overlap]`` — validate
+a saved trace (same CLI as ``repro.obs.trace``, minus the runpy
+double-import warning that ``-m repro.obs.trace`` triggers)."""
+
+import sys
+
+from repro.obs.trace import main
+
+if __name__ == "__main__":
+    sys.exit(main())

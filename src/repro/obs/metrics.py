@@ -1,0 +1,224 @@
+"""Metrics registry — counters, gauges, and log-bucketed histograms.
+
+The paper's unit of analysis is the *round*; the ROADMAP's serving tier
+demands *latency percentiles, not just throughput*.  This module carries
+both: a tiny label-aware :class:`Registry` (counters / gauges /
+histograms) that `EngineStats` and `QueryStats` publish into, and an
+HDR-style log-bucketed :class:`Histogram` whose p50/p95/p99 surface as
+``QueryStats.latency_percentiles`` and in BENCH_query.json.
+
+Design constraint: the stats dataclasses are public API — every existing
+test and bench JSON field must survive bit-compatibly, and call sites
+mutate fields directly (``st.h2d_transfers += 1``).  So the dataclasses
+stay the source of truth for scalar counters; each stats object owns a
+private registry (non-field, created in ``__post_init__`` so
+``dataclasses.asdict`` never sees it) holding the latency histograms,
+and :meth:`StatsBase.publish` exports the scalar fields into the
+registry for unified export.  The previously copy-pasted schedule-census
+triple (``reduce_rounds`` / ``auto_hop_bytes`` / ``hop_calibrated``)
+lives once here as :class:`ScheduleCensus`, so the autotuner's census is
+recorded identically in the mining and serving tiers.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from dataclasses import dataclass, field
+
+# ---------------------------------------------------------------------------
+# HDR-style log-bucketed histogram
+# ---------------------------------------------------------------------------
+
+# Bucket boundaries grow geometrically by 2**(1/8) (~9% relative error per
+# bucket) from a 1 µs floor — sparse dict storage, so an idle histogram
+# costs one empty dict.
+_FACTOR = 2.0 ** 0.125
+_LOG_FACTOR = math.log(_FACTOR)
+_VMIN = 1e-6
+
+
+class Histogram:
+    """Log-bucketed latency histogram with percentile readout.
+
+    Values are seconds.  ``record`` is O(1); ``percentile`` walks the
+    sorted buckets (tens of entries for realistic latency ranges).
+    Relative quantile error is bounded by the bucket factor (~9%), the
+    standard HDR trade: constant memory, no sample retention.
+    """
+
+    __slots__ = ("buckets", "count", "sum", "min", "max")
+
+    def __init__(self):
+        self.buckets: dict[int, int] = {}
+        self.count = 0
+        self.sum = 0.0
+        self.min = math.inf
+        self.max = 0.0
+
+    def record(self, value: float) -> None:
+        v = max(float(value), 0.0)
+        idx = 0 if v < _VMIN else int(math.log(v / _VMIN) / _LOG_FACTOR) + 1
+        self.buckets[idx] = self.buckets.get(idx, 0) + 1
+        self.count += 1
+        self.sum += v
+        if v < self.min:
+            self.min = v
+        if v > self.max:
+            self.max = v
+
+    def percentile(self, q: float) -> float:
+        """The q-th percentile (q in [0, 100]); 0.0 when empty."""
+        if self.count == 0:
+            return 0.0
+        rank = q / 100.0 * self.count
+        seen = 0
+        for idx in sorted(self.buckets):
+            seen += self.buckets[idx]
+            if seen >= rank:
+                if idx == 0:
+                    return min(_VMIN, self.max)
+                # bucket upper edge, clamped to observed extrema
+                upper = _VMIN * _FACTOR ** idx
+                return max(self.min, min(upper, self.max))
+        return self.max
+
+    def percentiles(self, qs=(50, 95, 99)) -> dict[str, float]:
+        return {f"p{q:g}": self.percentile(q) for q in qs}
+
+    def summary(self) -> dict:
+        return {
+            "count": self.count,
+            "sum": self.sum,
+            "min": 0.0 if self.count == 0 else self.min,
+            "max": self.max,
+            **self.percentiles(),
+        }
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+
+def _key(name: str, labels: dict | None) -> tuple:
+    return (name, tuple(sorted((labels or {}).items())))
+
+
+class Registry:
+    """Counters, gauges, and histograms with optional labels.
+
+    One registry per stats object (mining engine, query engine) — no
+    global mutable state, so two engines in one process never alias.
+    """
+
+    def __init__(self):
+        self._counters: dict[tuple, float] = {}
+        self._gauges: dict[tuple, float] = {}
+        self._hists: dict[tuple, Histogram] = {}
+
+    def counter(self, name: str, inc: float = 1.0, **labels) -> None:
+        k = _key(name, labels)
+        self._counters[k] = self._counters.get(k, 0.0) + inc
+
+    def gauge(self, name: str, value: float, **labels) -> None:
+        self._gauges[_key(name, labels)] = float(value)
+
+    def histogram(self, name: str, **labels) -> Histogram:
+        k = _key(name, labels)
+        h = self._hists.get(k)
+        if h is None:
+            h = self._hists[k] = Histogram()
+        return h
+
+    def observe(self, name: str, value: float, **labels) -> None:
+        self.histogram(name, **labels).record(value)
+
+    @staticmethod
+    def _fmt(k: tuple) -> str:
+        name, labels = k
+        if not labels:
+            return name
+        body = ",".join(f"{lk}={lv}" for lk, lv in labels)
+        return f"{name}{{{body}}}"
+
+    def export(self) -> dict:
+        """Flat ``{metric{label=...}: value-or-summary}`` snapshot."""
+        out: dict = {}
+        for k, v in sorted(self._counters.items()):
+            out[self._fmt(k)] = v
+        for k, v in sorted(self._gauges.items()):
+            out[self._fmt(k)] = v
+        for k, h in sorted(self._hists.items()):
+            out[self._fmt(k)] = h.summary()
+        return out
+
+
+# ---------------------------------------------------------------------------
+# shared stats base: schedule census + latency percentiles
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class ScheduleCensus:
+    """The autotuner's schedule census, shared by both stats tiers.
+
+    ``reduce_rounds`` counts collective rounds by resolved reduce
+    implementation (``allgather`` / ``rsag``); ``auto_hop_bytes`` and
+    ``hop_calibrated`` record the wire-model calibration the `auto`
+    resolver used.  Field order puts these first in subclass dataclasses
+    — safe because every construction site passes keywords.
+    """
+
+    reduce_rounds: dict = field(default_factory=dict)
+    auto_hop_bytes: int = 0
+    hop_calibrated: bool = False
+
+    def record_reduce(self, impl: str, n: int = 1) -> None:
+        self.reduce_rounds[impl] = self.reduce_rounds.get(impl, 0) + n
+
+
+@dataclass
+class StatsBase(ScheduleCensus):
+    """Census + latency view: dataclass fields stay the public API; the
+    private registry (non-field — invisible to ``dataclasses.asdict``)
+    holds the histograms behind ``latency_percentiles``."""
+
+    latency_percentiles: dict = field(default_factory=dict)
+
+    def __post_init__(self):
+        # object.__setattr__-free: plain attr, excluded from asdict/fields
+        self._registry = Registry()
+
+    @property
+    def registry(self) -> Registry:
+        reg = getattr(self, "_registry", None)
+        if reg is None:  # copy.replace / __reduce__ paths skip __post_init__
+            reg = self._registry = Registry()
+        return reg
+
+    def observe_latency(self, kind: str, seconds: float) -> None:
+        """Record one latency sample and refresh the percentile view.
+
+        ``latency_percentiles[kind]`` is a real dict field so it rides
+        ``dataclasses.asdict`` into every stats JSON for free.
+        """
+        h = self.registry.histogram("latency_s", kind=kind)
+        h.record(seconds)
+        self.latency_percentiles[kind] = {
+            k: round(v, 9) for k, v in h.percentiles().items()
+        }
+
+    def publish(self) -> dict:
+        """Export scalar dataclass fields + histograms as one flat dict."""
+        reg = self.registry
+        for f in dataclasses.fields(self):
+            v = getattr(self, f.name)
+            if isinstance(v, bool):
+                reg.gauge(f.name, float(v))
+            elif isinstance(v, (int, float)):
+                reg.gauge(f.name, v)
+            elif isinstance(v, dict) and f.name == "reduce_rounds":
+                for impl, n in v.items():
+                    reg.gauge("reduce_rounds", n, impl=impl)
+        return reg.export()

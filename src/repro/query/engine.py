@@ -28,6 +28,7 @@ micro-batch resolves allgather-vs-rsag from its padded slot count
 from __future__ import annotations
 
 import dataclasses
+import time
 
 import jax
 import jax.numpy as jnp
@@ -38,6 +39,8 @@ from repro.core import bitset
 from repro.dist import collectives
 from repro.kernels import ops
 from repro.kernels import serve as skern
+from repro.obs import StatsBase
+from repro.obs import trace as obs
 from repro.query.store import (
     ConceptStore,
     lookup_ids_jnp,
@@ -48,17 +51,17 @@ BACKENDS = ("kernel", "jnp", "matmul")
 
 
 @dataclasses.dataclass
-class QueryStats:
+class QueryStats(StatsBase):
+    """Serving-side stats: the schedule census (``reduce_rounds`` /
+    ``auto_hop_bytes`` / ``hop_calibrated``) and ``latency_percentiles``
+    are inherited from :class:`repro.obs.StatsBase` — one definition
+    shared with the mining engine's ``EngineStats``."""
+
     queries: int = 0
     micro_batches: int = 0
     collective_rounds: int = 0
     modeled_comm_bytes: int = 0
     by_type: dict = dataclasses.field(default_factory=dict)
-    # per-round schedule choices (the autotuner's record under "auto")
-    reduce_rounds: dict = dataclasses.field(default_factory=dict)
-    # the plan's "auto" latency term (measured when hop_calibrated)
-    auto_hop_bytes: int = 0
-    hop_calibrated: bool = False
 
     def charge(self, kind: str, n: int, batches: int):
         self.queries += n
@@ -246,7 +249,7 @@ class QueryEngine:
         impl = self.plan.resolve_impl(cap, self.W, self.n_attrs)
         st = self.stats
         st.collective_rounds += 1
-        st.reduce_rounds[impl] = st.reduce_rounds.get(impl, 0) + 1
+        st.record_reduce(impl)
         st.modeled_comm_bytes += collectives.modeled_comm_bytes(
             impl, self.plan.n_parts, cap, self.W, self.n_attrs
         )
@@ -272,14 +275,19 @@ class QueryEngine:
             return out_c, out_s, out_i
         batches = 0
         for lo, b, chunk in self._chunks(attrsets):
-            impl = self._charge_round(chunk.shape[0])
-            gc, gs, ids = self._closure_step(impl, snap.probe)(
-                rows, jnp.asarray(chunk), jnp.int32(n_pad),
-                snap.intents, snap.skeys, jnp.int32(snap.n_concepts),
-            )
-            out_c[lo : lo + b] = np.asarray(gc)[:b]
-            out_s[lo : lo + b] = np.asarray(gs)[:b]
-            out_i[lo : lo + b] = np.asarray(ids)[:b]
+            t0 = time.perf_counter()
+            with obs.current().span(
+                "query/micro_batch", kind="closure", slots=chunk.shape[0]
+            ):
+                impl = self._charge_round(chunk.shape[0])
+                gc, gs, ids = self._closure_step(impl, snap.probe)(
+                    rows, jnp.asarray(chunk), jnp.int32(n_pad),
+                    snap.intents, snap.skeys, jnp.int32(snap.n_concepts),
+                )
+                out_c[lo : lo + b] = np.asarray(gc)[:b]
+                out_s[lo : lo + b] = np.asarray(gs)[:b]
+                out_i[lo : lo + b] = np.asarray(ids)[:b]
+            self.stats.observe_latency("micro_batch", time.perf_counter() - t0)
             batches += 1
         self.stats.charge("closure", B, batches)
         return out_c, out_s, out_i
@@ -300,13 +308,18 @@ class QueryEngine:
             return out_i, out_v
         batches = 0
         for lo, b, chunk in self._chunks(attrsets):
-            impl = self._charge_round(chunk.shape[0])
-            _, _, idx, vals = self._topk_step(impl, k)(
-                rows, jnp.asarray(chunk), jnp.int32(n_pad),
-                snap.intents, snap.supports, jnp.int32(snap.n_concepts),
-            )
-            out_i[lo : lo + b] = np.asarray(idx)[:b]
-            out_v[lo : lo + b] = np.asarray(vals)[:b]
+            t0 = time.perf_counter()
+            with obs.current().span(
+                "query/micro_batch", kind="topk", slots=chunk.shape[0]
+            ):
+                impl = self._charge_round(chunk.shape[0])
+                _, _, idx, vals = self._topk_step(impl, k)(
+                    rows, jnp.asarray(chunk), jnp.int32(n_pad),
+                    snap.intents, snap.supports, jnp.int32(snap.n_concepts),
+                )
+                out_i[lo : lo + b] = np.asarray(idx)[:b]
+                out_v[lo : lo + b] = np.asarray(vals)[:b]
+            self.stats.observe_latency("micro_batch", time.perf_counter() - t0)
             batches += 1
         self.stats.charge("topk", B, batches)
         return out_i, out_v
@@ -323,12 +336,17 @@ class QueryEngine:
             return out
         batches = 0
         for lo, b, chunk in self._chunks(intents):
-            ids = lookup_ids_jnp(
-                jnp.asarray(chunk), snap.intents, snap.skeys,
-                jnp.int32(snap.n_concepts),
-                n_attrs=self.n_attrs, probe=snap.probe,
-            )
-            out[lo : lo + b] = np.asarray(ids)[:b]
+            t0 = time.perf_counter()
+            with obs.current().span(
+                "query/micro_batch", kind="lookup", slots=chunk.shape[0]
+            ):
+                ids = lookup_ids_jnp(
+                    jnp.asarray(chunk), snap.intents, snap.skeys,
+                    jnp.int32(snap.n_concepts),
+                    n_attrs=self.n_attrs, probe=snap.probe,
+                )
+                out[lo : lo + b] = np.asarray(ids)[:b]
+            self.stats.observe_latency("micro_batch", time.perf_counter() - t0)
             batches += 1
         self.stats.charge("lookup", B, batches)
         return out
@@ -386,10 +404,24 @@ class QueryEngine:
         step = self._extents_step()
         batches = 0
         for lo, b, chunk in self._chunks(np.clip(ids, 0, snap.cap - 1)):
-            packed = step(snap.ext_cols, jnp.asarray(chunk))
-            out[lo : lo + b] = np.asarray(packed)[:b]
+            t0 = time.perf_counter()
+            with obs.current().span(
+                "query/micro_batch", kind="extents", slots=chunk.shape[0]
+            ):
+                packed = step(snap.ext_cols, jnp.asarray(chunk))
+                out[lo : lo + b] = np.asarray(packed)[:b]
+            self.stats.observe_latency("micro_batch", time.perf_counter() - t0)
             batches += 1
             self.stats.collective_rounds += 1
+            # the round's all-gather moves each shard's [Nl, B] membership
+            # words to every peer — charge it like the closure rounds do
+            # (transfer-census parity; tested in tests/test_obs.py)
+            if self.plan.n_parts > 1:
+                self.stats.record_reduce("allgather")
+                n_local = st.N_padded // self.plan.n_parts
+                self.stats.modeled_comm_bytes += (
+                    (self.plan.n_parts - 1) * n_local * chunk.shape[0] * 4
+                )
         # misses / out-of-snapshot ids get the empty extent, mirroring
         # _order_query's empty result (never another concept's objects)
         out[(ids < 0) | (ids >= snap.n_concepts)] = 0
@@ -505,14 +537,19 @@ class QueryEngine:
         step = self._rules_step(k)
         batches = 0
         for lo, b, chunk in self._chunks(attrsets):
-            idx, vals, union = step(
-                index.premise, index.added, index.confidence, metric,
-                index.rule_id, jnp.int32(index.n_rules), jnp.asarray(chunk),
-                jnp.float32(min_conf),
-            )
-            out_i[lo : lo + b] = np.asarray(idx)[:b]
-            out_s[lo : lo + b] = np.asarray(vals)[:b]
-            out_c[lo : lo + b] = np.asarray(union)[:b]
+            t0 = time.perf_counter()
+            with obs.current().span(
+                "query/micro_batch", kind="rules", slots=chunk.shape[0]
+            ):
+                idx, vals, union = step(
+                    index.premise, index.added, index.confidence, metric,
+                    index.rule_id, jnp.int32(index.n_rules),
+                    jnp.asarray(chunk), jnp.float32(min_conf),
+                )
+                out_i[lo : lo + b] = np.asarray(idx)[:b]
+                out_s[lo : lo + b] = np.asarray(vals)[:b]
+                out_c[lo : lo + b] = np.asarray(union)[:b]
+            self.stats.observe_latency("micro_batch", time.perf_counter() - t0)
             batches += 1
         self.stats.charge("rules", B, batches)
         return out_i, out_s, out_c

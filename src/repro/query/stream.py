@@ -38,6 +38,7 @@ from repro.core import incremental
 from repro.core.context import FormalContext
 from repro.core.frontier import _sort_unique
 from repro.kernels.ops import bucket_size
+from repro.obs import trace as obs
 from repro.query.store import ConceptStore, StoreState
 
 
@@ -93,7 +94,17 @@ class StreamUpdater:
         snap = state.snapshot
         ctx = state.ctx
         t0 = time.perf_counter()
+        with obs.current().span("stream/stage") as sp:
+            receipt = self._stage(store, state, snap, ctx, new_rows, t0)
+            sp.set(
+                n_new_objects=receipt.n_new_objects,
+                n_intersections=receipt.n_intersections,
+                n_concepts_after=receipt.n_concepts_after,
+                version=receipt.version,
+            )
+        return receipt
 
+    def _stage(self, store, state, snap, ctx, new_rows, t0) -> UpdateReceipt:
         new_rows = np.ascontiguousarray(new_rows, dtype=np.uint32)
         if new_rows.ndim != 2 or new_rows.shape[1] != ctx.W:
             raise ValueError(f"new rows must be [K, {ctx.W}] packed uint32")
@@ -152,7 +163,8 @@ class StreamUpdater:
 
     def commit(self):
         """Swap the staged snapshot in (one reference assignment)."""
-        return self.store.commit()
+        with obs.current().span("stream/commit"):
+            return self.store.commit()
 
     def apply(self, new_rows: np.ndarray) -> UpdateReceipt:
         """stage + commit in one call (the synchronous convenience path)."""
