@@ -11,7 +11,7 @@ def main(argv=None) -> None:
     p = argparse.ArgumentParser()
     p.add_argument(
         "--only", default=None,
-        help="comma-separated subset: table7,table8,table9,fig234,kernel,frontier,dist,query,rules,roofline",
+        help="comma-separated subset: table7,table8,table9,fig234,kernel,frontier,dist,query,rules,serve_load,roofline",
     )
     p.add_argument("--roofline-path", default="dryrun_single.jsonl")
     args = p.parse_args(argv)
@@ -24,6 +24,7 @@ def main(argv=None) -> None:
         query_bench,
         roofline,
         rules_bench,
+        serve_load_bench,
         table7_datasets,
         table8_runtime,
         table9_iterations,
@@ -39,6 +40,7 @@ def main(argv=None) -> None:
         "dist": dist_bench.run,
         "query": query_bench.run,
         "rules": rules_bench.run,
+        "serve_load": serve_load_bench.run,
         "roofline": lambda: roofline.run(args.roofline_path),
     }
     print("name,us_per_call,derived")

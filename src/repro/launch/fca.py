@@ -9,6 +9,15 @@
     python -m repro.launch.fca serve --dataset mushroom --scale 0.02 \
         --parts 4 --reduce auto --queries 256 --topk 32 --updates 8
 
+    # serve under sustained load: open-loop Poisson arrivals through the
+    # continuous admission queue, live /metrics endpoint, saved
+    # OpenMetrics exposition (repro.serve)
+    python -m repro.launch.fca serve --dataset mushroom --scale 0.02 \
+        --parts 4 --load-qps 200 --load-seconds 5 --arrival burst \
+        --max-wait-ms 2 --queue-depth 512 \
+        --mix closure=0.5,topk=0.3,lookup=0.1,update=0.1 \
+        --metrics-port 0 --metrics-dump metrics.txt
+
     # iceberg-mine → extract implication/association-rule bases → answer
     # a rule-query batch (repro.rules)
     python -m repro.launch.fca rules --dataset census-income --scale 0.002 \
@@ -187,7 +196,7 @@ def cmd_serve(args, ctx, spec, plan, backend):
         )
 
     n_q = args.queries + min(args.queries, args.topk)
-    return {
+    out = {
         "dataset": spec.name,
         "plan": plan.describe(),
         "backend": backend,
@@ -216,6 +225,106 @@ def cmd_serve(args, ctx, spec, plan, backend):
         ),
         "query_stats": qe.describe()["stats"],
     }
+    if args.load_qps:
+        out["serve_load"] = _serve_load_phase(
+            args, ctx, spec, res, store, qe, plan
+        )
+    return out
+
+
+def _parse_mix(s: str) -> dict[str, float]:
+    """``"closure=0.6,topk=0.3,update=0.1"`` → weighted workload mix."""
+    mix = {}
+    for part in s.split(","):
+        kind, eq, w = part.partition("=")
+        if not eq:
+            raise SystemExit(f"--mix: expected kind=weight, got {part!r}")
+        try:
+            mix[kind.strip()] = float(w)
+        except ValueError:
+            raise SystemExit(f"--mix: non-numeric weight in {part!r}")
+    return mix
+
+
+def _serve_load_phase(args, ctx, spec, res, store, qe, plan):
+    """``fca serve --load-qps N``: sustained open-loop load through the
+    continuous admission queue, with optional live ``/metrics`` scraping
+    (``--metrics-port``) and a saved exposition (``--metrics-dump``)."""
+    from repro.obs import MetricsServer, to_openmetrics
+    from repro.obs.slo import SLO
+    from repro.query import StreamUpdater
+    from repro.serve import (
+        ARRIVALS,
+        AdmissionConfig,
+        AdmissionQueue,
+        make_workload,
+        run_load,
+    )
+
+    mix = _parse_mix(args.mix)
+    if "update" in mix and res.min_support is not None:
+        # same constraint as the one-shot update phase: Godin insertion
+        # maintains the full intent family, never an iceberg's
+        print("serve --min-support: dropping 'update' from the load mix",
+              file=sys.stderr)
+        mix.pop("update")
+    rules_index = None
+    if "rules" in mix:
+        from repro.rules import RuleIndex, extract_bases
+
+        rules_index = RuleIndex.build(
+            extract_bases(store, min_conf=args.min_conf), plan=plan
+        )
+    cfg = AdmissionConfig(
+        max_wait_s=args.max_wait_ms / 1000.0,
+        depth=args.queue_depth,
+        rules_k=args.topk_rules,
+        rules_min_conf=args.min_conf,
+        rules_rank_by=args.rank_by,
+    )
+    queue = AdmissionQueue(qe, cfg, rules_index=rules_index)
+    updater = StreamUpdater(store) if "update" in mix else None
+
+    rng = np.random.default_rng(args.seed + 1)
+    # warm each kind's jit cache: the measured window should show steady
+    # state, not first-call compilation
+    warm = ctx.rows[rng.integers(0, ctx.n_objects, size=qe.cfg.slots)]
+    for kind in sorted(set(mix) - {"update"}):
+        if kind == "closure":
+            qe.closure_batch(warm)
+        elif kind == "topk":
+            qe.topk_batch(warm, k=cfg.topk_k)
+        elif kind == "lookup":
+            qe.lookup_batch(warm)
+        elif kind == "rules":
+            qe.rules_batch(rules_index, warm, k=cfg.rules_k,
+                           min_conf=cfg.rules_min_conf,
+                           rank_by=cfg.rules_rank_by)
+
+    kwargs = {"factor": args.burst_factor} if args.arrival == "burst" else {}
+    arrivals = ARRIVALS[args.arrival](
+        args.load_qps, args.load_seconds, rng, **kwargs
+    )
+    events = make_workload(
+        ctx, len(arrivals), rng, mix=mix, density=spec.density
+    )
+    server = None
+    if args.metrics_port is not None:
+        server = MetricsServer(lambda: queue.registry, port=args.metrics_port)
+        print(f"serving metrics at {server.url}", file=sys.stderr)
+    try:
+        rep = run_load(queue, arrivals, events, updater=updater, slo=SLO())
+    finally:
+        if args.metrics_dump:
+            with open(args.metrics_dump, "w") as fh:
+                fh.write(to_openmetrics(queue.registry))
+        if server is not None:
+            server.close()
+    out = rep.describe()
+    out["arrival"] = args.arrival
+    out["mix"] = mix
+    out["queue"] = queue.describe()
+    return out
 
 
 def cmd_rules(args, ctx, spec, plan, backend):
@@ -355,6 +464,43 @@ def main(argv=None):
     p.add_argument("--slots", type=int, default=64,
                    help="serve/rules: fixed micro-batch slot width")
     p.add_argument("--seed", type=int, default=0)
+    # serve: sustained-load phase (continuous admission queue)
+    p.add_argument("--load-qps", type=float, default=None,
+                   help="serve: also run an open-loop sustained-load phase "
+                        "at this offered QPS through the continuous "
+                        "admission queue (deadline-or-full micro-batch "
+                        "dispatch); results land under 'serve_load' with "
+                        "p50/p95/p99 e2e latency, shed rate, and an SLO "
+                        "verdict")
+    p.add_argument("--load-seconds", type=float, default=3.0,
+                   help="serve: duration of the --load-qps phase")
+    p.add_argument("--arrival", default="poisson",
+                   choices=["poisson", "burst"],
+                   help="serve: arrival process for --load-qps (burst = "
+                        "square-wave-modulated Poisson, mean held at the "
+                        "target rate)")
+    p.add_argument("--burst-factor", type=float, default=4.0,
+                   help="serve: peak/trough rate ratio for --arrival burst")
+    p.add_argument("--max-wait-ms", type=float, default=2.0,
+                   help="serve: admission deadline — a partial micro-batch "
+                        "dispatches once its oldest request has waited this "
+                        "long (full batches dispatch immediately)")
+    p.add_argument("--queue-depth", type=int, default=512,
+                   help="serve: per-kind admission bound; arrivals beyond "
+                        "it are shed (counted, never queued)")
+    p.add_argument("--mix", default="closure=0.6,topk=0.3,lookup=0.1",
+                   help="serve: weighted workload mix for --load-qps, "
+                        "kind=weight CSV over closure/topk/lookup/rules/"
+                        "update (update streams objects through the store "
+                        "— snapshot swaps between micro-batches)")
+    p.add_argument("--metrics-port", type=int, default=None,
+                   help="serve: expose the live registry as OpenMetrics "
+                        "text on http://127.0.0.1:PORT/metrics during the "
+                        "load phase (0 = ephemeral port, echoed to stderr)")
+    p.add_argument("--metrics-dump", metavar="PATH", default=None,
+                   help="serve: write the end-of-run OpenMetrics "
+                        "exposition to PATH (validate with "
+                        "`python -m repro.obs.export PATH`)")
     # rules-only knobs
     p.add_argument("--min-conf", type=float, default=0.5,
                    help="rules: Luxenburger basis + query confidence floor")

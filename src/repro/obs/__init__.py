@@ -5,9 +5,20 @@ every host-side round boundary, a label-aware metrics registry with
 HDR-style latency histograms, and the shared schedule-census mixin both
 stats tiers inherit.  Tracing is off by default (shared no-op tracer);
 install one with ``use_tracer(Tracer())`` or ``fca ... --trace out.json``.
+
+The serving tier adds ``export`` (OpenMetrics text exposition +
+``MetricsServer`` scrape endpoint) and ``slo`` (latency/shed objectives,
+burn rates, and the bench-regression gate CI runs).
 """
 
+from repro.obs.export import (
+    MetricsServer,
+    parse_openmetrics,
+    sanitize_name,
+    to_openmetrics,
+)
 from repro.obs.metrics import Histogram, Registry, ScheduleCensus, StatsBase
+from repro.obs.slo import SLO, burn_rate, check_baselines, evaluate, run_gate
 from repro.obs.trace import (
     NOOP,
     NoopTracer,
@@ -23,6 +34,15 @@ from repro.obs.trace import (
 )
 
 __all__ = [
+    "MetricsServer",
+    "parse_openmetrics",
+    "sanitize_name",
+    "to_openmetrics",
+    "SLO",
+    "burn_rate",
+    "check_baselines",
+    "evaluate",
+    "run_gate",
     "Histogram",
     "Registry",
     "ScheduleCensus",

@@ -24,6 +24,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import threading
 from dataclasses import dataclass, field
 
 # ---------------------------------------------------------------------------
@@ -45,9 +46,19 @@ class Histogram:
     sorted buckets (tens of entries for realistic latency ranges).
     Relative quantile error is bounded by the bucket factor (~9%), the
     standard HDR trade: constant memory, no sample retention.
+
+    The ~9% bound only holds *above* the 1 µs floor: observations below
+    it land in the explicit underflow bucket (index 0, upper edge
+    ``_VMIN``), are counted in ``count``/``sum``/percentile ranks as
+    usual, and surface separately as :attr:`underflow` so a histogram
+    dominated by sub-floor samples can't masquerade as a measured one.
+
+    ``record`` is lock-protected: the serving tier observes latencies
+    from dispatcher threads while the metrics endpoint snapshots — a
+    bare ``count += 1`` would lose increments across threads.
     """
 
-    __slots__ = ("buckets", "count", "sum", "min", "max")
+    __slots__ = ("buckets", "count", "sum", "min", "max", "_lock")
 
     def __init__(self):
         self.buckets: dict[int, int] = {}
@@ -55,17 +66,48 @@ class Histogram:
         self.sum = 0.0
         self.min = math.inf
         self.max = 0.0
+        self._lock = threading.Lock()
 
     def record(self, value: float) -> None:
         v = max(float(value), 0.0)
         idx = 0 if v < _VMIN else int(math.log(v / _VMIN) / _LOG_FACTOR) + 1
-        self.buckets[idx] = self.buckets.get(idx, 0) + 1
-        self.count += 1
-        self.sum += v
-        if v < self.min:
-            self.min = v
-        if v > self.max:
-            self.max = v
+        with self._lock:
+            self.buckets[idx] = self.buckets.get(idx, 0) + 1
+            self.count += 1
+            self.sum += v
+            if v < self.min:
+                self.min = v
+            if v > self.max:
+                self.max = v
+
+    @property
+    def underflow(self) -> int:
+        """Observations below the 1 µs floor (bucket 0) — reported
+        explicitly so percentile error bounds stay honest."""
+        return self.buckets.get(0, 0)
+
+    def fraction_below(self, threshold: float) -> float:
+        """Fraction of observations whose bucket lies entirely at or
+        below ``threshold`` seconds (conservative to one bucket's ~9%
+        width) — the SLO compliance readout.  1.0 when empty."""
+        with self._lock:
+            if self.count == 0:
+                return 1.0
+            n = sum(
+                c
+                for idx, c in self.buckets.items()
+                if _VMIN * _FACTOR**idx <= threshold
+            )
+            return n / self.count
+
+    def bucket_edges(self) -> list[tuple[float, int]]:
+        """Sorted ``(upper_edge_seconds, count)`` pairs of the populated
+        buckets — the exporter's cumulative-bucket source."""
+        with self._lock:
+            return [
+                (_VMIN * _FACTOR**idx, c)
+                for idx, c in sorted(self.buckets.items())
+            ]
 
     def percentile(self, q: float) -> float:
         """The q-th percentile (q in [0, 100]); 0.0 when empty."""
@@ -92,6 +134,7 @@ class Histogram:
             "sum": self.sum,
             "min": 0.0 if self.count == 0 else self.min,
             "max": self.max,
+            "underflow": self.underflow,
             **self.percentiles(),
         }
 
@@ -105,31 +148,72 @@ def _key(name: str, labels: dict | None) -> tuple:
     return (name, tuple(sorted((labels or {}).items())))
 
 
+# The label set every over-cap observation collapses into, plus the
+# warning counter that records how many observations were rerouted per
+# metric name.
+OVERFLOW_LABELS = (("overflow", "true"),)
+OVERFLOW_COUNTER = "labels_overflow_total"
+
+
 class Registry:
     """Counters, gauges, and histograms with optional labels.
 
     One registry per stats object (mining engine, query engine) — no
     global mutable state, so two engines in one process never alias.
+
+    Label cardinality is bounded: each metric name may carry at most
+    ``max_label_sets`` distinct label combinations.  A labeled counter
+    keyed on an unbounded value (query ids, client addresses) would
+    otherwise grow the registry — and the exporter's scrape payload —
+    without limit.  Observations past the cap collapse into one
+    overflow series (labels ``{overflow="true"}``) and increment
+    ``labels_overflow_total{metric=<name>}`` so the truncation is
+    visible, never silent.
+
+    Mutations and export take a lock: the serving tier's dispatcher
+    records while the ``/metrics`` endpoint snapshots concurrently.
     """
 
-    def __init__(self):
+    def __init__(self, max_label_sets: int = 64):
+        self.max_label_sets = max_label_sets
         self._counters: dict[tuple, float] = {}
         self._gauges: dict[tuple, float] = {}
         self._hists: dict[tuple, Histogram] = {}
+        self._label_sets: dict[str, set] = {}
+        self._lock = threading.RLock()
+
+    def _resolve(self, name: str, labels: dict) -> tuple:
+        """The storage key for ``(name, labels)`` under the cardinality
+        cap — callers must hold the lock."""
+        k = _key(name, labels)
+        if not k[1]:
+            return k
+        seen = self._label_sets.setdefault(name, set())
+        if k[1] in seen:
+            return k
+        if len(seen) >= self.max_label_sets:
+            wk = (OVERFLOW_COUNTER, (("metric", name),))
+            self._counters[wk] = self._counters.get(wk, 0.0) + 1.0
+            return (name, OVERFLOW_LABELS)
+        seen.add(k[1])
+        return k
 
     def counter(self, name: str, inc: float = 1.0, **labels) -> None:
-        k = _key(name, labels)
-        self._counters[k] = self._counters.get(k, 0.0) + inc
+        with self._lock:
+            k = self._resolve(name, labels)
+            self._counters[k] = self._counters.get(k, 0.0) + inc
 
     def gauge(self, name: str, value: float, **labels) -> None:
-        self._gauges[_key(name, labels)] = float(value)
+        with self._lock:
+            self._gauges[self._resolve(name, labels)] = float(value)
 
     def histogram(self, name: str, **labels) -> Histogram:
-        k = _key(name, labels)
-        h = self._hists.get(k)
-        if h is None:
-            h = self._hists[k] = Histogram()
-        return h
+        with self._lock:
+            k = self._resolve(name, labels)
+            h = self._hists.get(k)
+            if h is None:
+                h = self._hists[k] = Histogram()
+            return h
 
     def observe(self, name: str, value: float, **labels) -> None:
         self.histogram(name, **labels).record(value)
@@ -144,14 +228,41 @@ class Registry:
 
     def export(self) -> dict:
         """Flat ``{metric{label=...}: value-or-summary}`` snapshot."""
+        counters, gauges, hists = self._snapshot()
         out: dict = {}
-        for k, v in sorted(self._counters.items()):
+        for k, v in counters:
             out[self._fmt(k)] = v
-        for k, v in sorted(self._gauges.items()):
+        for k, v in gauges:
             out[self._fmt(k)] = v
-        for k, h in sorted(self._hists.items()):
+        for k, h in hists:
             out[self._fmt(k)] = h.summary()
         return out
+
+    def _snapshot(self):
+        with self._lock:
+            return (
+                sorted(self._counters.items()),
+                sorted(self._gauges.items()),
+                sorted(self._hists.items()),
+            )
+
+    def families(self) -> list[tuple[str, str, list]]:
+        """Grouped ``(name, type, [(labels_tuple, value-or-Histogram)])``
+        triples, names sorted — the OpenMetrics exporter's source view.
+        A name used as two different types (never done by our call
+        sites) exports each type under its own suffix-disambiguated
+        family downstream; here they simply appear twice."""
+        counters, gauges, hists = self._snapshot()
+        fams: dict[tuple, list] = {}
+        for (name, labels), v in counters:
+            fams.setdefault((name, "counter"), []).append((labels, v))
+        for (name, labels), v in gauges:
+            fams.setdefault((name, "gauge"), []).append((labels, v))
+        for (name, labels), h in hists:
+            fams.setdefault((name, "histogram"), []).append((labels, h))
+        return [
+            (name, typ, series) for (name, typ), series in sorted(fams.items())
+        ]
 
 
 # ---------------------------------------------------------------------------

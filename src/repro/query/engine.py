@@ -245,6 +245,20 @@ class QueryEngine:
                 chunk = np.concatenate([chunk, pad], axis=0)
             yield lo, b, chunk
 
+    def _obs_batch(self, kind: str, dt: float, version: int | None = None):
+        """One micro-batch's telemetry: the ``micro_batch`` percentile
+        key (the bench/CI contract) plus per-kind ``service_s`` service
+        histograms, a dispatch counter, and the snapshot-version gauge —
+        all in the stats registry the admission queue and the OpenMetrics
+        exporter share."""
+        st = self.stats
+        st.observe_latency("micro_batch", dt)
+        reg = st.registry
+        reg.observe("service_s", dt, kind=kind)
+        reg.counter("micro_batches_total", kind=kind)
+        if version is not None:
+            reg.gauge("snapshot_version", version)
+
     def _charge_round(self, cap: int) -> str:
         impl = self.plan.resolve_impl(cap, self.W, self.n_attrs)
         st = self.stats
@@ -287,7 +301,7 @@ class QueryEngine:
                 out_c[lo : lo + b] = np.asarray(gc)[:b]
                 out_s[lo : lo + b] = np.asarray(gs)[:b]
                 out_i[lo : lo + b] = np.asarray(ids)[:b]
-            self.stats.observe_latency("micro_batch", time.perf_counter() - t0)
+            self._obs_batch("closure", time.perf_counter() - t0, snap.version)
             batches += 1
         self.stats.charge("closure", B, batches)
         return out_c, out_s, out_i
@@ -319,7 +333,7 @@ class QueryEngine:
                 )
                 out_i[lo : lo + b] = np.asarray(idx)[:b]
                 out_v[lo : lo + b] = np.asarray(vals)[:b]
-            self.stats.observe_latency("micro_batch", time.perf_counter() - t0)
+            self._obs_batch("topk", time.perf_counter() - t0, snap.version)
             batches += 1
         self.stats.charge("topk", B, batches)
         return out_i, out_v
@@ -346,7 +360,7 @@ class QueryEngine:
                     n_attrs=self.n_attrs, probe=snap.probe,
                 )
                 out[lo : lo + b] = np.asarray(ids)[:b]
-            self.stats.observe_latency("micro_batch", time.perf_counter() - t0)
+            self._obs_batch("lookup", time.perf_counter() - t0, snap.version)
             batches += 1
         self.stats.charge("lookup", B, batches)
         return out
@@ -410,7 +424,7 @@ class QueryEngine:
             ):
                 packed = step(snap.ext_cols, jnp.asarray(chunk))
                 out[lo : lo + b] = np.asarray(packed)[:b]
-            self.stats.observe_latency("micro_batch", time.perf_counter() - t0)
+            self._obs_batch("extents", time.perf_counter() - t0, snap.version)
             batches += 1
             self.stats.collective_rounds += 1
             # the round's all-gather moves each shard's [Nl, B] membership
@@ -549,7 +563,7 @@ class QueryEngine:
                 out_i[lo : lo + b] = np.asarray(idx)[:b]
                 out_s[lo : lo + b] = np.asarray(vals)[:b]
                 out_c[lo : lo + b] = np.asarray(union)[:b]
-            self.stats.observe_latency("micro_batch", time.perf_counter() - t0)
+            self._obs_batch("rules", time.perf_counter() - t0)
             batches += 1
         self.stats.charge("rules", B, batches)
         return out_i, out_s, out_c

@@ -80,8 +80,19 @@ class UpdateReceipt:
 
 
 class StreamUpdater:
-    def __init__(self, store: ConceptStore):
+    def __init__(self, store: ConceptStore, row_slack: int = 64):
         self.store = store
+        # Round the grown context's row padding up to this quantum (kept a
+        # multiple of the plan's row alignment).  The query engine's jitted
+        # steps take ``rows [N_padded, W]`` as an argument, so every change
+        # of N_padded recompiles them; with slack, a stream of small
+        # commits recompiles once per ~``row_slack`` inserted objects
+        # instead of once per commit.  Pad rows are the all-ones
+        # AND-identity, masked by count everywhere (supports, extents), so
+        # results are bit-identical at any quantum; ``row_slack=0``
+        # restores exact alignment padding.
+        align = store.plan.row_alignment
+        self.row_quantum = max(align, ((row_slack + align - 1) // align) * align)
 
     def stage(self, new_rows: np.ndarray) -> UpdateReceipt:
         """Build the successor snapshot for ``new_rows [K, W]``.
@@ -135,7 +146,7 @@ class StreamUpdater:
             n_attrs=ctx.n_attrs,
             attr_names=ctx.attr_names,
         )
-        rows_padded, n_pad = grown_ctx.padded_rows(store.plan.row_alignment)
+        rows_padded, n_pad = grown_ctx.padded_rows(self.row_quantum)
         rows_dev = store.plan.place_rows(rows_padded)
         next_snap = store.make_snapshot(
             grown_np,

@@ -1,0 +1,41 @@
+"""Serving under load: continuous admission + open-loop load generation.
+
+``admission`` packs asynchronously arriving queries into the
+QueryEngine's fixed-slot micro-batches (deadline-or-full dispatch,
+bounded depth); ``loadgen`` drives it open-loop at a target QPS for the
+sustained-load benchmark.  The token-decode ``engine`` module is not
+imported here — it pulls in ``repro.models`` and is unrelated to the
+FCA serving path.
+"""
+
+from repro.serve.admission import (
+    KINDS,
+    AdmissionConfig,
+    AdmissionQueue,
+    ServeStats,
+    Ticket,
+)
+from repro.serve.loadgen import (
+    ARRIVALS,
+    DEFAULT_MIX,
+    LoadReport,
+    burst_arrivals,
+    make_workload,
+    poisson_arrivals,
+    run_load,
+)
+
+__all__ = [
+    "KINDS",
+    "AdmissionConfig",
+    "AdmissionQueue",
+    "ServeStats",
+    "Ticket",
+    "ARRIVALS",
+    "DEFAULT_MIX",
+    "LoadReport",
+    "burst_arrivals",
+    "make_workload",
+    "poisson_arrivals",
+    "run_load",
+]

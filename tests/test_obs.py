@@ -64,6 +64,43 @@ def test_histogram_empty_and_clamps():
     assert set(h2.percentiles()) == {"p50", "p95", "p99"}
 
 
+def test_histogram_underflow_bucket_is_explicit():
+    h = Histogram()
+    h.record(5e-7)  # below the 1 µs floor
+    h.record(2e-7)
+    h.record(0.004)
+    assert h.underflow == 2
+    assert h.count == 3  # underflow counts in rank/count/sum as usual
+    assert h.sum == pytest.approx(0.004 + 7e-7)
+    # bucket 0's upper edge is the floor itself — the exporter renders it
+    # as a real le="1e-06" bucket, not as silently-clamped observations
+    edges = h.bucket_edges()
+    assert edges[0] == (1e-6, 2)
+    assert h.summary()["underflow"] == 2
+    assert h.fraction_below(1e-6) == pytest.approx(2 / 3)
+
+
+def test_registry_label_cardinality_cap_overflows_visibly():
+    r = Registry(max_label_sets=4)
+    for i in range(10):  # unbounded label value (e.g. a client id)
+        r.counter("hits", qid=str(i))
+    for i in range(6):  # histograms share the same per-name cap
+        r.observe("lat_s", 0.001, qid=str(i))
+    out = r.export()
+    # first 4 label sets stored as-is; the rest collapse into overflow
+    assert sum(1 for k in out if k.startswith("hits{qid=")) == 4
+    assert out["hits{overflow=true}"] == 6
+    assert out["lat_s{overflow=true}"]["count"] == 2
+    # ...and the truncation is counted per metric name, never silent
+    assert out["labels_overflow_total{metric=hits}"] == 6
+    assert out["labels_overflow_total{metric=lat_s}"] == 2
+    # unlabeled metrics are exempt (a single series can't explode)
+    r2 = Registry(max_label_sets=1)
+    r2.counter("a")
+    r2.counter("b")
+    assert set(r2.export()) == {"a", "b"}
+
+
 def test_registry_labels_and_export():
     r = Registry()
     r.counter("rounds", 1, impl="rsag")

@@ -1,0 +1,514 @@
+"""Serving under load — admission queue semantics (deadline-or-full,
+bounded-depth shed, bit-identity with pre-formed batches), arrival
+processes, the open-loop driver on a virtual clock, snapshot swaps
+racing dispatches (no dropped/double-counted latency observations),
+OpenMetrics round-trips, and the SLO evaluation + regression gate."""
+
+import json
+import threading
+import urllib.request
+
+import numpy as np
+import pytest
+
+from repro.core import all_closures_batched, bitset
+from repro.core.context import FormalContext
+from repro.dist.shardplan import ShardPlan
+from repro.obs import (
+    Registry,
+    Tracer,
+    parse_openmetrics,
+    sanitize_name,
+    span_rollup,
+    to_openmetrics,
+    use_tracer,
+)
+from repro.obs.export import MetricsServer
+from repro.obs.slo import (
+    SLO,
+    burn_rate,
+    check_baselines,
+    evaluate,
+    run_gate,
+)
+from repro.query import ConceptStore, QueryEngine, StreamUpdater
+from repro.query.engine import QueryConfig
+from repro.serve import (
+    AdmissionConfig,
+    AdmissionQueue,
+    burst_arrivals,
+    make_workload,
+    poisson_arrivals,
+    run_load,
+)
+
+SLOTS = 8
+
+
+@pytest.fixture(scope="module")
+def ctx():
+    return FormalContext.synthetic(60, 18, 0.3, seed=5)
+
+
+@pytest.fixture(scope="module")
+def served(ctx):
+    intents = all_closures_batched(ctx)
+    plan = ShardPlan.simulated(2, block_n=16)
+    store = ConceptStore.build(ctx, intents, plan=plan)
+    return store, QueryEngine(store, QueryConfig(slots=SLOTS))
+
+
+def _queries(ctx, n, seed=0):
+    rng = np.random.default_rng(seed)
+    base = ctx.rows[rng.integers(0, ctx.n_objects, size=n)]
+    keep = bitset.pack_bool(rng.random((n, ctx.n_attrs)) < 0.25, ctx.W)
+    return base & keep
+
+
+# -- admission semantics -----------------------------------------------------
+
+
+def test_queue_results_bit_identical_to_preformed_batch(served):
+    _, qe = served
+    qs = _queries(qe.store.ctx, 3 * SLOTS + 2, seed=1)
+    queue = AdmissionQueue(qe, AdmissionConfig(max_wait_s=10.0))
+    tickets = [queue.submit("closure", q) for q in qs]
+    queue.flush()
+    closures, supports, ids = qe.closure_batch(qs)
+    for t, ec, es, ei in zip(tickets, closures, supports, ids):
+        tc, ts, ti = t.result
+        assert np.array_equal(np.asarray(tc), np.asarray(ec))
+        assert int(ts) == int(es) and int(ti) == int(ei)
+
+
+def test_full_batch_dispatches_inline_before_deadline(served):
+    _, qe = served
+    qs = _queries(qe.store.ctx, SLOTS, seed=2)
+    queue = AdmissionQueue(qe, AdmissionConfig(max_wait_s=60.0))
+    tickets = [queue.submit("closure", q) for q in qs]
+    # the slots-th submit fills the batch: dispatched without any poll
+    assert all(t.done for t in tickets)
+    assert queue.stats.dispatch_causes == {"full": 1}
+    assert queue.stats.occupancy_mean == 1.0
+    assert queue.pending() == 0
+
+
+def test_deadline_fires_partial_batch_on_fake_clock(served):
+    _, qe = served
+    t = [0.0]
+    queue = AdmissionQueue(
+        qe, AdmissionConfig(max_wait_s=1.0), clock=lambda: t[0]
+    )
+    qs = _queries(qe.store.ctx, 3, seed=3)
+    tickets = [queue.submit("closure", q) for q in qs]
+    assert queue.poll() == 0  # not due, not full
+    assert not any(t_.done for t_ in tickets)
+    assert queue.next_deadline_in() == pytest.approx(1.0)
+    t[0] = 1.5  # oldest ticket aged past max_wait_s
+    assert queue.poll() == 1
+    assert all(t_.done for t_ in tickets)
+    assert queue.stats.dispatch_causes == {"deadline": 1}
+    assert queue.stats.occupancy_mean == pytest.approx(3 / SLOTS)
+    # e2e on the fake clock: dispatched at 1.5, arrived at 0
+    assert tickets[0].e2e_s == pytest.approx(1.5)
+
+
+def test_bounded_depth_sheds_at_submit(served):
+    _, qe = served
+    depth = 5
+    queue = AdmissionQueue(
+        qe,
+        AdmissionConfig(max_wait_s=60.0, depth=depth),
+        clock=lambda: 0.0,
+    )
+    # depth < slots so nothing dispatches; overflow must shed
+    qs = _queries(qe.store.ctx, depth + 3, seed=4)
+    tickets = [queue.submit("closure", q) for q in qs]
+    st = queue.stats
+    assert [t.shed for t in tickets] == [False] * depth + [True] * 3
+    assert st.submitted == depth + 3 and st.shed == 3
+    assert st.admitted == depth
+    assert st.shed_rate == pytest.approx(3 / (depth + 3))
+    assert all(t.result is None and t.done for t in tickets[depth:])
+    snap = queue.registry.export()
+    assert snap["serve_shed_total{kind=closure}"] == 3
+    assert snap["serve_queue_depth{kind=closure}"] == depth
+    queue.flush()
+    assert st.completed == depth  # shed tickets never reach the engine
+
+
+def test_rules_kind_requires_index_and_unknown_kind_rejected(served):
+    _, qe = served
+    queue = AdmissionQueue(qe)
+    with pytest.raises(ValueError, match="rules_index"):
+        queue.submit("rules", _queries(qe.store.ctx, 1)[0])
+    with pytest.raises(ValueError, match="unknown kind"):
+        queue.submit("update", _queries(qe.store.ctx, 1)[0])
+
+
+def test_dispatch_emits_span_and_registry_series(served):
+    _, qe = served
+    tr = Tracer()
+    with use_tracer(tr):
+        queue = AdmissionQueue(qe, AdmissionConfig(max_wait_s=10.0))
+        # the engine registry is shared across this module's queues (one
+        # /metrics snapshot covers queue + engine), so assert deltas
+        before = queue.registry.export()
+        for q in _queries(qe.store.ctx, SLOTS + 2, seed=5):
+            queue.submit("closure", q)
+        queue.flush()
+    roll = span_rollup(tr.to_dict()["traceEvents"])
+    assert roll["serve/dispatch"]["count"] == 2  # one full + one flush
+    b = next(e for e in tr.to_dict()["traceEvents"]
+             if e["ph"] == "B" and e["name"] == "serve/dispatch")
+    assert b["args"]["kind"] == "closure" and b["args"]["n"] == SLOTS
+    snap = queue.registry.export()
+
+    def delta(key):
+        now = snap.get(key, 0)
+        was = before.get(key, 0)
+        if isinstance(now, dict):
+            return now["count"] - (was["count"] if isinstance(was, dict) else 0)
+        return now - was
+
+    assert delta("serve_submitted_total{kind=closure}") == SLOTS + 2
+    assert delta("serve_dispatch_total{cause=full,kind=closure}") == 1
+    assert delta("serve_dispatch_total{cause=flush,kind=closure}") == 1
+    assert delta("serve_e2e_s{kind=closure}") == SLOTS + 2
+    assert delta("serve_slot_occupancy") == 2
+
+
+# -- arrival processes + workload mix ----------------------------------------
+
+
+def test_poisson_arrivals_hit_target_rate():
+    rng = np.random.default_rng(7)
+    a = poisson_arrivals(200.0, 5.0, rng)
+    assert a.size == pytest.approx(1000, rel=0.15)
+    assert np.all(np.diff(a) >= 0) and a[-1] < 5.0
+    gaps = np.diff(a)
+    assert gaps.mean() == pytest.approx(1 / 200.0, rel=0.15)
+    assert poisson_arrivals(0.0, 5.0, rng).size == 0
+
+
+def test_burst_arrivals_keep_mean_and_show_the_factor():
+    rng = np.random.default_rng(8)
+    a = burst_arrivals(200.0, 20.0, rng, period_s=1.0, duty=0.25, factor=4.0)
+    assert a.size == pytest.approx(4000, rel=0.15)  # mean rate preserved
+    phase = (a / 1.0) % 1.0
+    in_burst = (phase < 0.25).sum()
+    # per-second rate ratio between the duty window and the rest ≈ factor
+    ratio = (in_burst / 0.25) / ((a.size - in_burst) / 0.75)
+    assert 2.5 < ratio < 6.0
+    with pytest.raises(ValueError, match="factor"):
+        burst_arrivals(200.0, 1.0, rng, factor=0.5)
+
+
+def test_make_workload_mix_payloads_and_validation(ctx):
+    rng = np.random.default_rng(9)
+    events = make_workload(
+        ctx, 400, rng, mix={"closure": 0.5, "lookup": 0.3, "update": 0.2}
+    )
+    assert len(events) == 400
+    counts = {}
+    for kind, payload in events:
+        counts[kind] = counts.get(kind, 0) + 1
+        if kind == "update":
+            assert payload.shape == (2, ctx.W)
+        else:
+            assert payload.shape == (ctx.W,)
+            # thinned real rows: subsets of context attribute space
+            assert not np.any(payload & ~ctx.attr_mask())
+    assert counts["closure"] == pytest.approx(200, rel=0.25)
+    assert counts["update"] == pytest.approx(80, rel=0.35)
+    with pytest.raises(ValueError, match="unknown workload kinds"):
+        make_workload(ctx, 4, rng, mix={"extent": 1.0})
+    with pytest.raises(ValueError, match="sum > 0"):
+        make_workload(ctx, 4, rng, mix={"closure": 0.0})
+
+
+# -- open-loop driver on a virtual clock -------------------------------------
+
+
+def test_run_load_virtual_clock_accounting(served):
+    _, qe = served
+    t = [100.0]  # virtual seconds; sleep() advances it
+    clock = lambda: t[0]  # noqa: E731
+    sleep = lambda s: t.__setitem__(0, t[0] + s)  # noqa: E731
+    queue = AdmissionQueue(
+        qe, AdmissionConfig(max_wait_s=0.01), clock=clock
+    )
+    rng = np.random.default_rng(10)
+    arrivals = poisson_arrivals(300.0, 1.0, rng)
+    events = make_workload(
+        qe.store.ctx, len(arrivals), rng, mix={"closure": 0.7, "lookup": 0.3}
+    )
+    rep = run_load(queue, arrivals, events, clock=clock, sleep=sleep)
+    assert rep.submitted == len(arrivals)
+    assert rep.admitted == rep.submitted  # depth 512 ≫ offered
+    assert rep.completed == rep.admitted
+    assert rep.shed == 0 and rep.shed_rate == 0.0
+    assert rep.dispatches == sum(rep.dispatch_causes.values())
+    assert rep.e2e["count"] == rep.completed
+    assert rep.admission_wait["count"] == rep.completed
+    # on the virtual clock queueing delay is bounded by the deadline
+    # (dispatch itself costs zero virtual time)
+    assert rep.e2e["max"] <= 0.01 + 1e-6
+    assert rep.updates == 0 and rep.update_latency == {}
+    d = rep.describe()
+    json.dumps(d)
+    assert d["shed_rate"] == 0.0
+    assert rep.offered_qps == pytest.approx(
+        len(arrivals) / float(arrivals[-1])
+    )
+
+
+def test_run_load_slo_and_backdated_arrivals(served):
+    _, qe = served
+    t = [0.0]
+    clock = lambda: t[0]  # noqa: E731
+    sleep = lambda s: t.__setitem__(0, t[0] + s)  # noqa: E731
+    queue = AdmissionQueue(
+        qe, AdmissionConfig(max_wait_s=0.005), clock=clock
+    )
+    arrivals = np.array([0.0, 0.001, 0.002, 0.5])
+    events = [("closure", q) for q in _queries(qe.store.ctx, 4, seed=11)]
+    rep = run_load(
+        queue, arrivals, events, clock=clock, sleep=sleep,
+        slo=SLO(latency_objective_s=0.25, max_shed_rate=0.0),
+    )
+    assert rep.slo["ok"] is True
+    assert rep.slo["latency_ok"] and rep.slo["shed_ok"]
+    assert rep.slo["burn_rate"] == 0.0
+    # arrival_s was backdated to the schedule: tickets keep offered time
+    assert rep.max_lag_s >= 0.0
+    with pytest.raises(ValueError, match="one arrival time per event"):
+        run_load(queue, arrivals[:2], events, clock=clock, sleep=sleep)
+
+
+# -- satellite 3: snapshot swaps racing dispatches ---------------------------
+
+
+def test_concurrent_commits_never_drop_or_double_count_latency(ctx):
+    """A StreamUpdater commit swaps the snapshot while the queue is
+    dispatching micro-batches from another thread.  Every admitted
+    ticket must complete exactly once, and the latency histograms must
+    hold exactly one observation per completion — a snapshot swap
+    mid-micro-batch may reorder work but never lose or duplicate a
+    measurement."""
+    intents = all_closures_batched(ctx)
+    plan = ShardPlan.simulated(2, block_n=16)
+    store = ConceptStore.build(ctx, intents, plan=plan)  # local: commits mutate
+    qe = QueryEngine(store, QueryConfig(slots=4))
+    queue = AdmissionQueue(qe, AdmissionConfig(max_wait_s=0.0005))
+    updater = StreamUpdater(store)
+    v0 = store.snapshot.version
+
+    n_commits = 4
+    errs = []
+
+    def churn():
+        rng = np.random.default_rng(13)
+        try:
+            for _ in range(n_commits):
+                rows = bitset.pack_bool(
+                    rng.random((2, ctx.n_attrs)) < 0.3, ctx.W
+                )
+                updater.apply(rows)
+        except Exception as e:  # surfaces in the main thread's assert
+            errs.append(e)
+
+    th = threading.Thread(target=churn)
+    th.start()
+    n = 64
+    tickets = [
+        queue.submit("closure", q) for q in _queries(ctx, n, seed=14)
+    ]
+    while queue.pending():
+        queue.poll()
+    queue.flush()
+    th.join(timeout=60)
+    assert not th.is_alive() and not errs, errs
+
+    st = queue.stats
+    assert st.admitted == n and st.shed == 0
+    assert st.completed == n  # nothing dropped, nothing run twice
+    assert all(t.done and t.result is not None for t in tickets)
+    # exactly one latency observation per completion, in both ledgers
+    assert st.registry.histogram("latency_s", kind="e2e").count == n
+    assert st.registry.histogram("latency_s", kind="admission_wait").count == n
+    assert queue.registry.histogram("serve_e2e_s", kind="closure").count == n
+    assert store.snapshot.version == v0 + n_commits
+    # post-churn queries serve from the committed snapshot, bit-identical
+    # to a pre-formed batch against it
+    qs = _queries(ctx, 4, seed=15)
+    t2 = [queue.submit("closure", q) for q in qs]
+    queue.flush()
+    closures, supports, ids = qe.closure_batch(qs)
+    for t_, ec, es in zip(t2, closures, supports):
+        assert np.array_equal(np.asarray(t_.result[0]), np.asarray(ec))
+        assert int(t_.result[1]) == int(es)
+
+
+# -- OpenMetrics export ------------------------------------------------------
+
+
+def _loaded_registry():
+    r = Registry()
+    r.counter("serve_shed_total", 3, kind="closure")
+    r.counter("serve_shed_total", 1, kind="topk")
+    r.gauge("serve_queue_depth", 7, kind="closure")
+    r.observe("serve_e2e_s", 0.004, kind="closure")
+    r.observe("serve_e2e_s", 0.020, kind="closure")
+    r.observe("serve_e2e_s", 5e-7, kind="closure")  # underflow bucket
+    return r
+
+
+def test_openmetrics_renders_and_round_trips():
+    text = to_openmetrics(_loaded_registry())
+    fams = parse_openmetrics(text)  # strict validator — raises on drift
+    assert fams["serve_shed"]["type"] == "counter"
+    shed = {
+        tuple(sorted(lbl.items())): v
+        for _, lbl, v in fams["serve_shed"]["samples"]
+    }
+    assert shed[(("kind", "closure"),)] == 3.0
+    # _s convention renders as _seconds with a UNIT line
+    assert "# TYPE serve_e2e_seconds histogram" in text
+    assert "# UNIT serve_e2e_seconds seconds" in text
+    h = fams["serve_e2e_seconds"]
+    assert h["type"] == "histogram"
+    by_name = {}
+    for name, lbl, v in h["samples"]:
+        by_name.setdefault(name, []).append((lbl, v))
+    (_, count), = by_name["serve_e2e_seconds_count"]
+    assert count == 3.0
+    inf_bucket = [
+        v for lbl, v in by_name["serve_e2e_seconds_bucket"]
+        if lbl["le"] == "+Inf"
+    ]
+    assert inf_bucket == [3.0]
+    # the sub-µs observation lands in the explicit 1e-06 underflow bucket
+    first = min(
+        (float(lbl["le"]), v)
+        for lbl, v in by_name["serve_e2e_seconds_bucket"]
+    )
+    assert first == (1e-6, 1.0)
+
+
+def test_openmetrics_parser_rejects_malformed():
+    with pytest.raises(ValueError, match="EOF"):
+        parse_openmetrics("# TYPE x counter\nx_total 1\n")
+    with pytest.raises(ValueError, match="no TYPE-declared"):
+        parse_openmetrics("stray_metric 1\n# EOF\n")
+    bad_hist = (
+        "# TYPE h histogram\n"
+        'h_bucket{le="0.1"} 5\n'
+        'h_bucket{le="+Inf"} 3\n'  # cumulative counts must not decrease
+        "h_count 3\nh_sum 1\n# EOF\n"
+    )
+    with pytest.raises(ValueError, match="cumulative"):
+        parse_openmetrics(bad_hist)
+    with pytest.raises(ValueError, match="re-declared"):
+        parse_openmetrics("# TYPE x counter\n# TYPE x counter\n# EOF\n")
+    assert sanitize_name("serve_e2e_s") == "serve_e2e_seconds"
+    assert sanitize_name("bad name!") == "bad_name_"
+
+
+def test_metrics_server_serves_live_snapshot():
+    r = _loaded_registry()
+    with MetricsServer(lambda: r, port=0) as srv:
+        with urllib.request.urlopen(srv.url, timeout=10) as resp:
+            assert resp.status == 200
+            assert "openmetrics-text" in resp.headers["Content-Type"]
+            fams = parse_openmetrics(resp.read().decode())
+        assert "serve_queue_depth" in fams
+        r.counter("serve_shed_total", 10, kind="closure")  # live mutation
+        with urllib.request.urlopen(srv.url, timeout=10) as resp:
+            fams2 = parse_openmetrics(resp.read().decode())
+        shed = {
+            tuple(sorted(lbl.items())): v
+            for _, lbl, v in fams2["serve_shed"]["samples"]
+        }
+        assert shed[(("kind", "closure"),)] == 13.0  # per-scrape provider
+        bad = urllib.request.Request(srv.url.replace("/metrics", "/other"))
+        with pytest.raises(urllib.error.HTTPError):
+            urllib.request.urlopen(bad, timeout=10)
+
+
+# -- SLO evaluation + regression gate ----------------------------------------
+
+
+def test_burn_rate_budget_semantics():
+    assert burn_rate(1.0, 0.995) == 0.0
+    assert burn_rate(0.99, 0.995) == pytest.approx(2.0)
+    assert burn_rate(0.995, 0.995) == pytest.approx(1.0)
+    assert burn_rate(1.0, 1.0) == 0.0
+    assert burn_rate(0.9, 1.0) == float("inf")
+
+
+def test_evaluate_verdicts():
+    slo = SLO(latency_objective_s=0.1, latency_target=0.99,
+              max_shed_rate=0.01, max_p99_s=0.2)
+    good = evaluate(slo, compliance=0.999, shed_rate=0.0, p99_s=0.05)
+    assert good["ok"] and good["latency_ok"] and good["p99_ok"]
+    assert good["burn_rate"] == pytest.approx(0.1)
+    bad = evaluate(slo, compliance=0.9, shed_rate=0.05, p99_s=0.5)
+    assert not bad["ok"]
+    assert not bad["latency_ok"] and not bad["shed_ok"] and not bad["p99_ok"]
+    assert bad["burn_rate"] == pytest.approx(10.0)
+
+
+def test_check_baselines_tolerance_classes():
+    artifact = {"headline": {
+        "p99": 0.010, "shed_rate": 0.005, "bit_identical": True,
+    }}
+    baseline = {
+        "latency_s": {"headline.p99": 0.004},
+        "rate": {"headline.shed_rate": 0.0},
+        "exact": {"headline.bit_identical": True},
+    }
+    # 0.010 < 0.004×4 ceiling, 0.005 < 0+0.02 slack, invariant holds
+    assert check_baselines(artifact, baseline) == []
+    artifact["headline"]["p99"] = 0.040  # 10× the baseline: trips the gate
+    v = check_baselines(artifact, baseline)
+    assert len(v) == 1 and "latency regression" in v[0]
+    artifact["headline"]["shed_rate"] = 0.5
+    artifact["headline"]["bit_identical"] = False
+    v = check_baselines(artifact, baseline)
+    assert len(v) == 3
+    assert any("rate regression" in s for s in v)
+    assert any("invariant broken" in s for s in v)
+    # a missing metric path is a violation, not a silent skip
+    v = check_baselines({"headline": {}}, baseline)
+    assert len(v) == 3 and all("no " in s for s in v)
+
+
+def test_run_gate_green_then_red_on_injected_regression(tmp_path):
+    import io
+
+    artifact = {"headline": {"p99": 0.010, "bit_identical": True}}
+    baselines = {
+        "tolerance_ratio": 4.0,
+        "artifacts": {"BENCH_x.json": {
+            "latency_s": {"headline.p99": 0.008},
+            "exact": {"headline.bit_identical": True},
+        }},
+    }
+    art = tmp_path / "BENCH_x.json"
+    base = tmp_path / "slo_baselines.json"
+    art.write_text(json.dumps(artifact))
+    base.write_text(json.dumps(baselines))
+    out = io.StringIO()
+    assert run_gate([str(art)], str(base), out=out) == 0
+    assert "OK" in out.getvalue()
+    # inject a 10× latency regression → the gate must go red
+    artifact["headline"]["p99"] = 0.10
+    art.write_text(json.dumps(artifact))
+    out = io.StringIO()
+    assert run_gate([str(art)], str(base), out=out) == 1
+    assert "latency regression" in out.getvalue()
+    # unknown artifact (no baseline entry) is red, not silently skipped
+    other = tmp_path / "BENCH_unknown.json"
+    other.write_text("{}")
+    assert run_gate([str(other)], str(base), out=io.StringIO()) == 1
