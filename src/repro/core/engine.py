@@ -28,6 +28,7 @@ candidate, so ``supports -= n_pad_total`` after the psum.
 from __future__ import annotations
 
 import dataclasses
+import threading
 
 import jax
 import jax.numpy as jnp
@@ -157,6 +158,12 @@ class ClosureEngine:
         self.N_padded = rows.shape[0]
         self._mask_np = ctx.attr_mask()
         self.rows = plan.place_rows(rows)
+
+        # Guards the lazily-built ``_frontier_cache`` (set by
+        # DeviceFrontier): the cache is reachable from both the main
+        # thread and the admission dispatcher thread, and a concurrent
+        # first-miss would otherwise build the same jitted step twice.
+        self._frontier_lock = threading.Lock()
 
         self._step = self.spmd_step(with_supports=True)
 

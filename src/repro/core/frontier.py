@@ -376,197 +376,212 @@ class DeviceFrontier:
         # identical for every DeviceFrontier of a given engine.  Steps are
         # built lazily (``_step_fn``): a run that never mines icebergs
         # never traces the iceberg variants.
-        cache = getattr(engine, "_frontier_cache", None)
-        if cache is None:
-            t = lectic.LecticTables(self.n_attrs)
-            n_attrs = self.n_attrs
+        #
+        # The build runs under the engine's ``_frontier_lock``: frontiers
+        # are constructed from both the main thread and the admission
+        # dispatcher thread, and two racing first-misses would otherwise
+        # each build a cache (losing the memoization and tracing every
+        # step twice).
+        with engine._frontier_lock:
+            cache = getattr(engine, "_frontier_cache", None)
+            if cache is None:
+                t = lectic.LecticTables(self.n_attrs)
+                n_attrs = self.n_attrs
 
-            # Host-side tables are closed over by the fused post stages
-            # (baked into the SPMD region as compile-time constants).
-            def post_cbo(gc, parents, gens, n_valid):
-                return filter_canonical(
-                    gc, parents, gens, n_valid, jnp.asarray(t.LOW)
-                )
-
-            def post_ganter(gc, Y, valid):
-                return ganter_select(
-                    gc, Y, valid, jnp.asarray(t.LOW),
-                    jnp.asarray(t.attr_mask), n_attrs=n_attrs,
-                )
-
-            # Iceberg posts: min_support rides as a *traced* extra operand,
-            # so one compile serves every threshold.  The support filter
-            # runs right after the psum, inside the same SPMD region —
-            # infrequent candidates are compacted away before they are
-            # downloaded, re-expanded, or ever sized into a later reduce.
-            def post_iceberg(gc, gs, n_valid, min_sup):
-                keep = (jnp.arange(gc.shape[0]) < n_valid) & (gs >= min_sup)
-                n, gc = _compact(keep, gc)
-                return gc, n
-
-            def post_iceberg_unique(gc, gs, n_valid, min_sup):
-                keep = (jnp.arange(gc.shape[0]) < n_valid) & (gs >= min_sup)
-                n, gc = _sort_unique(gc, keep)
-                return gc, n
-
-            def post_cbo_iceberg(gc, gs, parents, gens, n_valid, min_sup):
-                ok = lectic.feasible_jnp(gc, parents, gens, jnp.asarray(t.LOW))
-                ok = ok & (jnp.arange(gc.shape[0]) < n_valid)
-                ok = ok & (gs >= min_sup)
-                n, gc, gens = _compact(ok, gc, gens)
-                return gc, gens, n
-
-            # Candidate-axis (2-D) posts: the same filters made
-            # *block-local* — each candidate shard filters its own block of
-            # the chunk right after the object-axis reduce, using its block
-            # index to reconstruct row validity from the replicated valid
-            # count.  Survivors are all-gathered along ``cand`` only after
-            # these run (the merge_blocks_* stages above finish the job).
-            def _bvalid(idx, Bc, n_valid):
-                return (jnp.arange(Bc) + idx * Bc) < n_valid
-
-            def post2d_unique(idx, gc, n_valid):
-                n, gc = _sort_unique(gc, _bvalid(idx, gc.shape[0], n_valid))
-                return gc, n
-
-            def post2d_iceberg(idx, gc, gs, n_valid, min_sup):
-                keep = _bvalid(idx, gc.shape[0], n_valid) & (gs >= min_sup)
-                n, gc = _compact(keep, gc)
-                return gc, n
-
-            def post2d_iceberg_unique(idx, gc, gs, n_valid, min_sup):
-                keep = _bvalid(idx, gc.shape[0], n_valid) & (gs >= min_sup)
-                n, gc = _sort_unique(gc, keep)
-                return gc, n
-
-            def post2d_cbo(idx, gc, parents, gens, n_valid):
-                ok = lectic.feasible_jnp(gc, parents, gens, jnp.asarray(t.LOW))
-                ok = ok & _bvalid(idx, gc.shape[0], n_valid)
-                n, gc, gens = _compact(ok, gc, gens)
-                return gc, gens, n
-
-            def post2d_cbo_iceberg(
-                idx, gc, gs, parents, gens, n_valid, min_sup
-            ):
-                ok = lectic.feasible_jnp(gc, parents, gens, jnp.asarray(t.LOW))
-                ok = ok & _bvalid(idx, gc.shape[0], n_valid)
-                ok = ok & (gs >= min_sup)
-                n, gc, gens = _compact(ok, gc, gens)
-                return gc, gens, n
-
-            def post_ganter_iceberg(gc, gs, Y, valid, min_sup):
-                # Alg.-5 scan restricted to *frequent* successors: the next
-                # frequent closure in lectic order is Y ⊕ a for the largest
-                # feasible a with support ≥ min_sup (any smaller frequent
-                # closure between would be a subset of it — see
-                # tests/test_rules.py for the property statement).
-                gens = jnp.arange(n_attrs, dtype=jnp.int32)
-                ok = lectic.feasible_jnp(
-                    gc[:n_attrs], Y[None, :], gens, jnp.asarray(t.LOW)
-                )
-                ok = ok & valid & (gs[:n_attrs] >= min_sup)
-                Y_next, found = lectic.select_lectic(gc[:n_attrs], ok)
-                return Y_next, ~found
-
-            cache = {
-                # plan-replicated so expansion runs on every partition
-                # instead of one device + a broadcast at the region edge
-                "LOW": self.plan.replicate(t.LOW),
-                "BIT": self.plan.replicate(t.BIT),
-                # fused per-round SPMD steps: each is ONE plan round doing
-                # closure map → AND-allreduce [+ support psum] → the
-                # driver's filter.  Values are zero-arg builders; built
-                # steps land in "steps".
-                "steps": {},
-                "builders": {
-                    "plain": lambda: engine.spmd_step(),
-                    "unique": lambda: engine.spmd_step(
-                        unique_closures, n_extra=1
-                    ),
-                    "cbo": lambda: engine.spmd_step(post_cbo, n_extra=3),
-                    "ganter": lambda: engine.spmd_step(post_ganter, n_extra=2),
-                    "iceberg": lambda: engine.spmd_step(
-                        post_iceberg, with_supports=True, n_extra=2
-                    ),
-                    "iceberg_unique": lambda: engine.spmd_step(
-                        post_iceberg_unique, with_supports=True, n_extra=2
-                    ),
-                    "cbo_iceberg": lambda: engine.spmd_step(
-                        post_cbo_iceberg, with_supports=True, n_extra=4
-                    ),
-                    "ganter_iceberg": lambda: engine.spmd_step(
-                        post_ganter_iceberg, with_supports=True, n_extra=3
-                    ),
-                    # 2-D (candidate × object) variants: one plan round per
-                    # chunk of cand_parts blocks — map + object-axis reduce
-                    # per block, block-local filter, cand-axis survivor
-                    # gather, merge.  Built only when a driver runs on a
-                    # cand-sharded plan.
-                    "plain2d": lambda: engine.spmd_step_cand(
-                        None, merge_blocks_plain
-                    ),
-                    "unique2d": lambda: engine.spmd_step_cand(
-                        post2d_unique, merge_blocks_unique, n_post_rep=1
-                    ),
-                    "iceberg2d": lambda: engine.spmd_step_cand(
-                        post2d_iceberg, merge_blocks_compact,
-                        with_supports=True, n_post_rep=2,
-                    ),
-                    "iceberg_unique2d": lambda: engine.spmd_step_cand(
-                        post2d_iceberg_unique, merge_blocks_unique,
-                        with_supports=True, n_post_rep=2,
-                    ),
-                    "cbo2d": lambda: engine.spmd_step_cand(
-                        post2d_cbo, merge_blocks_cbo,
-                        n_cand=3, n_post_rep=1,
-                    ),
-                    "cbo_iceberg2d": lambda: engine.spmd_step_cand(
-                        post2d_cbo_iceberg, merge_blocks_cbo,
-                        with_supports=True, n_cand=3, n_post_rep=2,
-                    ),
-                },
-            }
-            # backend="kernel": route every step variant above (except the
-            # single-intent ganter walks, whose map already runs the Pallas
-            # closure kernel and whose argmax-select has no batch filter to
-            # fuse) to the fused Pallas kernels — closure → support → driver
-            # filter in one VMEM-resident pass (repro.kernels.frontier).
-            # Same names, same call signatures, bit-identical outputs; the
-            # jnp builders above remain the oracles the kernels are
-            # property-tested against (tests/test_fused_frontier.py).
-            if fkern.supports_fused(engine.backend, engine.ctx.W):
-                LOWt = t.LOW
-                fused = {
-                    v: (lambda v=v: engine.spmd_step_fused(v, LOWt))
-                    for v in fkern.VARIANTS
-                }
-                merges = {
-                    "plain": merge_blocks_plain,
-                    "unique": merge_blocks_unique,
-                    "iceberg": merge_blocks_compact,
-                    "iceberg_unique": merge_blocks_unique,
-                    "cbo": merge_blocks_cbo,
-                    "cbo_iceberg": merge_blocks_cbo,
-                }
-                for v, mg in merges.items():
-                    fused[v + "2d"] = (
-                        lambda v=v, mg=mg: engine.spmd_step_cand_fused(
-                            v, LOWt, mg
-                        )
+                # Host-side tables are closed over by the fused post stages
+                # (baked into the SPMD region as compile-time constants).
+                def post_cbo(gc, parents, gens, n_valid):
+                    return filter_canonical(
+                        gc, parents, gens, n_valid, jnp.asarray(t.LOW)
                     )
-                cache["builders"].update(fused)
-            engine._frontier_cache = cache
+
+                def post_ganter(gc, Y, valid):
+                    return ganter_select(
+                        gc, Y, valid, jnp.asarray(t.LOW),
+                        jnp.asarray(t.attr_mask), n_attrs=n_attrs,
+                    )
+
+                # Iceberg posts: min_support rides as a *traced* extra operand,
+                # so one compile serves every threshold.  The support filter
+                # runs right after the psum, inside the same SPMD region —
+                # infrequent candidates are compacted away before they are
+                # downloaded, re-expanded, or ever sized into a later reduce.
+                def post_iceberg(gc, gs, n_valid, min_sup):
+                    keep = (jnp.arange(gc.shape[0]) < n_valid) & (gs >= min_sup)
+                    n, gc = _compact(keep, gc)
+                    return gc, n
+
+                def post_iceberg_unique(gc, gs, n_valid, min_sup):
+                    keep = (jnp.arange(gc.shape[0]) < n_valid) & (gs >= min_sup)
+                    n, gc = _sort_unique(gc, keep)
+                    return gc, n
+
+                def post_cbo_iceberg(gc, gs, parents, gens, n_valid, min_sup):
+                    ok = lectic.feasible_jnp(gc, parents, gens, jnp.asarray(t.LOW))
+                    ok = ok & (jnp.arange(gc.shape[0]) < n_valid)
+                    ok = ok & (gs >= min_sup)
+                    n, gc, gens = _compact(ok, gc, gens)
+                    return gc, gens, n
+
+                # Candidate-axis (2-D) posts: the same filters made
+                # *block-local* — each candidate shard filters its own block of
+                # the chunk right after the object-axis reduce, using its block
+                # index to reconstruct row validity from the replicated valid
+                # count.  Survivors are all-gathered along ``cand`` only after
+                # these run (the merge_blocks_* stages above finish the job).
+                def _bvalid(idx, Bc, n_valid):
+                    return (jnp.arange(Bc) + idx * Bc) < n_valid
+
+                def post2d_unique(idx, gc, n_valid):
+                    n, gc = _sort_unique(gc, _bvalid(idx, gc.shape[0], n_valid))
+                    return gc, n
+
+                def post2d_iceberg(idx, gc, gs, n_valid, min_sup):
+                    keep = _bvalid(idx, gc.shape[0], n_valid) & (gs >= min_sup)
+                    n, gc = _compact(keep, gc)
+                    return gc, n
+
+                def post2d_iceberg_unique(idx, gc, gs, n_valid, min_sup):
+                    keep = _bvalid(idx, gc.shape[0], n_valid) & (gs >= min_sup)
+                    n, gc = _sort_unique(gc, keep)
+                    return gc, n
+
+                def post2d_cbo(idx, gc, parents, gens, n_valid):
+                    ok = lectic.feasible_jnp(gc, parents, gens, jnp.asarray(t.LOW))
+                    ok = ok & _bvalid(idx, gc.shape[0], n_valid)
+                    n, gc, gens = _compact(ok, gc, gens)
+                    return gc, gens, n
+
+                def post2d_cbo_iceberg(
+                    idx, gc, gs, parents, gens, n_valid, min_sup
+                ):
+                    ok = lectic.feasible_jnp(gc, parents, gens, jnp.asarray(t.LOW))
+                    ok = ok & _bvalid(idx, gc.shape[0], n_valid)
+                    ok = ok & (gs >= min_sup)
+                    n, gc, gens = _compact(ok, gc, gens)
+                    return gc, gens, n
+
+                def post_ganter_iceberg(gc, gs, Y, valid, min_sup):
+                    # Alg.-5 scan restricted to *frequent* successors: the next
+                    # frequent closure in lectic order is Y ⊕ a for the largest
+                    # feasible a with support ≥ min_sup (any smaller frequent
+                    # closure between would be a subset of it — see
+                    # tests/test_rules.py for the property statement).
+                    gens = jnp.arange(n_attrs, dtype=jnp.int32)
+                    ok = lectic.feasible_jnp(
+                        gc[:n_attrs], Y[None, :], gens, jnp.asarray(t.LOW)
+                    )
+                    ok = ok & valid & (gs[:n_attrs] >= min_sup)
+                    Y_next, found = lectic.select_lectic(gc[:n_attrs], ok)
+                    return Y_next, ~found
+
+                cache = {
+                    # plan-replicated so expansion runs on every partition
+                    # instead of one device + a broadcast at the region edge
+                    "LOW": self.plan.replicate(t.LOW),
+                    "BIT": self.plan.replicate(t.BIT),
+                    # fused per-round SPMD steps: each is ONE plan round doing
+                    # closure map → AND-allreduce [+ support psum] → the
+                    # driver's filter.  Values are zero-arg builders; built
+                    # steps land in "steps".
+                    "steps": {},
+                    "builders": {
+                        "plain": lambda: engine.spmd_step(),
+                        "unique": lambda: engine.spmd_step(
+                            unique_closures, n_extra=1
+                        ),
+                        "cbo": lambda: engine.spmd_step(post_cbo, n_extra=3),
+                        "ganter": lambda: engine.spmd_step(post_ganter, n_extra=2),
+                        "iceberg": lambda: engine.spmd_step(
+                            post_iceberg, with_supports=True, n_extra=2
+                        ),
+                        "iceberg_unique": lambda: engine.spmd_step(
+                            post_iceberg_unique, with_supports=True, n_extra=2
+                        ),
+                        "cbo_iceberg": lambda: engine.spmd_step(
+                            post_cbo_iceberg, with_supports=True, n_extra=4
+                        ),
+                        "ganter_iceberg": lambda: engine.spmd_step(
+                            post_ganter_iceberg, with_supports=True, n_extra=3
+                        ),
+                        # 2-D (candidate × object) variants: one plan round per
+                        # chunk of cand_parts blocks — map + object-axis reduce
+                        # per block, block-local filter, cand-axis survivor
+                        # gather, merge.  Built only when a driver runs on a
+                        # cand-sharded plan.
+                        "plain2d": lambda: engine.spmd_step_cand(
+                            None, merge_blocks_plain
+                        ),
+                        "unique2d": lambda: engine.spmd_step_cand(
+                            post2d_unique, merge_blocks_unique, n_post_rep=1
+                        ),
+                        "iceberg2d": lambda: engine.spmd_step_cand(
+                            post2d_iceberg, merge_blocks_compact,
+                            with_supports=True, n_post_rep=2,
+                        ),
+                        "iceberg_unique2d": lambda: engine.spmd_step_cand(
+                            post2d_iceberg_unique, merge_blocks_unique,
+                            with_supports=True, n_post_rep=2,
+                        ),
+                        "cbo2d": lambda: engine.spmd_step_cand(
+                            post2d_cbo, merge_blocks_cbo,
+                            n_cand=3, n_post_rep=1,
+                        ),
+                        "cbo_iceberg2d": lambda: engine.spmd_step_cand(
+                            post2d_cbo_iceberg, merge_blocks_cbo,
+                            with_supports=True, n_cand=3, n_post_rep=2,
+                        ),
+                    },
+                }
+                # backend="kernel": route every step variant above (except the
+                # single-intent ganter walks, whose map already runs the Pallas
+                # closure kernel and whose argmax-select has no batch filter to
+                # fuse) to the fused Pallas kernels — closure → support → driver
+                # filter in one VMEM-resident pass (repro.kernels.frontier).
+                # Same names, same call signatures, bit-identical outputs; the
+                # jnp builders above remain the oracles the kernels are
+                # property-tested against (tests/test_fused_frontier.py).
+                if fkern.supports_fused(engine.backend, engine.ctx.W):
+                    LOWt = t.LOW
+                    fused = {
+                        v: (lambda v=v: engine.spmd_step_fused(v, LOWt))
+                        for v in fkern.VARIANTS
+                    }
+                    merges = {
+                        "plain": merge_blocks_plain,
+                        "unique": merge_blocks_unique,
+                        "iceberg": merge_blocks_compact,
+                        "iceberg_unique": merge_blocks_unique,
+                        "cbo": merge_blocks_cbo,
+                        "cbo_iceberg": merge_blocks_cbo,
+                    }
+                    for v, mg in merges.items():
+                        fused[v + "2d"] = (
+                            lambda v=v, mg=mg: engine.spmd_step_cand_fused(
+                                v, LOWt, mg
+                            )
+                        )
+                    cache["builders"].update(fused)
+                engine._frontier_cache = cache
         self._cache = cache
         self.LOW = cache["LOW"]
         self.BIT = cache["BIT"]
 
     def _step_fn(self, name: str):
         """Fused SPMD step ``name``, built on first use and memoized on the
-        engine (shared by every DeviceFrontier of that engine)."""
+        engine (shared by every DeviceFrontier of that engine).
+
+        Double-checked under the engine's ``_frontier_lock``: the steps
+        dict is shared by every frontier of the engine, including ones
+        driven from the admission dispatcher thread, and a concurrent
+        first-miss must not build (and jit) the same step twice."""
         steps = self._cache["steps"]
         fn = steps.get(name)
         if fn is None:
-            fn = steps[name] = self._cache["builders"][name]()
+            with self.engine._frontier_lock:
+                fn = steps.get(name)
+                if fn is None:
+                    fn = steps[name] = self._cache["builders"][name]()
         return fn
 
     # -- frontier state ----------------------------------------------------

@@ -73,6 +73,23 @@ CAND_AXIS = "cand"
 AUTO_IMPLS = ("allgather", "rsag")
 
 
+def _attach_audit(runner, spec: dict):
+    """Attach the static-analysis contract to an SPMD runner.
+
+    ``repro.analysis.spmd_audit`` traces ``spec["shard_fn"]`` — the
+    canonical per-shard function, *before* shard_map/vmap lowering — under
+    an extended axis environment to verify the collective schedule and the
+    wire-byte census against the plan's analytic model.  The attribute
+    survives ``jax.jit`` (the jit wrapper forwards attribute access), so
+    the auditor can introspect the exact jitted steps the engine caches.
+    """
+    try:
+        runner.audit_spec = spec
+    except (AttributeError, TypeError):  # exotic callables: skip, don't break
+        pass
+    return runner
+
+
 @dataclasses.dataclass(frozen=True)
 class ShardPlan:
     """Partition geometry + placement + collective schedule for one run."""
@@ -359,15 +376,28 @@ class ShardPlan:
         """
         if out_shard is not None and post is not None:
             raise ValueError("out_shard= and post= are mutually exclusive")
+
+        # Canonical shard-level function — what one device runs inside the
+        # SPMD region.  The mesh branch lowers exactly this through
+        # shard_map; the simulated branch is its vmap twin.  The auditor
+        # traces it (via ``audit_spec``) under an extended axis env, so
+        # both branches expose identical collective structure.
+        def fused(rows_local, *rep):
+            out = body(rows_local, *rep[:n_rep])
+            if post is None:
+                return out
+            out = out if isinstance(out, tuple) else (out,)
+            return post(*out, *rep[n_rep:])
+
+        spec = {
+            "kind": "spmd",
+            "plan": self,
+            "shard_fn": fused,
+            "n_rep": n_rep,
+            "n_post_rep": n_post_rep,
+            "has_post": post is not None,
+        }
         if self.mesh is not None:
-
-            def fused(rows_local, *rep):
-                out = body(rows_local, *rep[:n_rep])
-                if post is None:
-                    return out
-                out = out if isinstance(out, tuple) else (out,)
-                return post(*out, *rep[n_rep:])
-
             in_specs = (P(self.axis_names, None),) + (P(),) * (n_rep + n_post_rep)
             if out_shard is None:
                 out_specs = P()
@@ -375,12 +405,15 @@ class ShardPlan:
                 out_specs = tuple(
                     P(self.axis_names) if s else P() for s in out_shard
                 )
-            return compat.shard_map(
-                fused,
-                mesh=self.mesh,
-                in_specs=in_specs,
-                out_specs=out_specs,
-                check_vma=False,  # pallas_call outputs carry no vma info
+            return _attach_audit(
+                compat.shard_map(
+                    fused,
+                    mesh=self.mesh,
+                    in_specs=in_specs,
+                    out_specs=out_specs,
+                    check_vma=False,  # pallas_call outputs carry no vma info
+                ),
+                spec,
             )
 
         vbody = jax.vmap(
@@ -408,7 +441,7 @@ class ShardPlan:
             outs = outs if isinstance(outs, tuple) else (outs,)
             return post(*outs, *rep[n_rep:])
 
-        return run
+        return _attach_audit(run, spec)
 
     def spmd_cand(
         self,
@@ -461,24 +494,43 @@ class ShardPlan:
         def _tup(x):
             return x if isinstance(x, tuple) else (x,)
 
-        if self.mesh is not None:
-            cand_axes = self.cand_axes
+        cand_axes = self.cand_axes
 
-            def fused(rows_local, *ops):
-                out = _tup(body(rows_local, *ops[:split]))
-                if post is not None:
-                    out = _tup(
-                        post(self.cand_index(), *out, *ops[split:split_post])
-                    )
-                if cp > 1:
-                    gathered = tuple(
-                        lax.all_gather(o, cand_axes) for o in out
-                    )
-                else:
-                    gathered = tuple(o[None] for o in out)
-                if merge is None:
-                    return gathered
-                return merge(*gathered, *ops[split_post:])
+        # Canonical shard-level function (see ``spmd``): the mesh branch
+        # lowers exactly this; the simulated branch's nested vmaps compute
+        # the same arithmetic with the cand gather as a free array axis.
+        # ``cand_axes`` resolves to the simulated axis name on simulated
+        # plans, so the auditor traces the identical collective schedule
+        # either way.
+        def fused(rows_local, *ops):
+            out = _tup(body(rows_local, *ops[:split]))
+            if post is not None:
+                out = _tup(
+                    post(self.cand_index(), *out, *ops[split:split_post])
+                )
+            if cp > 1:
+                gathered = tuple(
+                    lax.all_gather(o, cand_axes) for o in out
+                )
+            else:
+                gathered = tuple(o[None] for o in out)
+            if merge is None:
+                return gathered
+            return merge(*gathered, *ops[split_post:])
+
+        spec = {
+            "kind": "spmd_cand",
+            "plan": self,
+            "shard_fn": fused,
+            "n_cand": n_cand,
+            "n_rep": n_rep,
+            "n_post_rep": n_post_rep,
+            "n_merge_rep": n_merge_rep,
+            "has_post": post is not None,
+            "has_merge": merge is not None,
+        }
+
+        if self.mesh is not None:
 
             def run(rows, *ops):
                 cand_specs = tuple(
@@ -500,7 +552,7 @@ class ShardPlan:
                     check_vma=False,
                 )(rows, *ops)
 
-            return run
+            return _attach_audit(run, spec)
 
         # Simulated plan: nested named-axis vmaps — inner over the object
         # partition (collectives in ``body`` reduce over it), outer over
@@ -538,7 +590,7 @@ class ShardPlan:
                 return outs
             return merge(*outs, *ops[split_post:])
 
-        return run
+        return _attach_audit(run, spec)
 
     # -- accounting --------------------------------------------------------
 

@@ -84,7 +84,16 @@ class Histogram:
     def underflow(self) -> int:
         """Observations below the 1 µs floor (bucket 0) — reported
         explicitly so percentile error bounds stay honest."""
-        return self.buckets.get(0, 0)
+        return self.buckets.get(0, 0)  # lock: ok — one atomic dict read
+
+    def _state(self):
+        """Consistent ``(buckets, count, sum, min, max)`` snapshot.
+
+        Readers must not walk ``self.buckets`` directly: dispatcher
+        threads ``record`` concurrently, and a dict resize mid-iteration
+        raises — and even without the raise, count/buckets would tear."""
+        with self._lock:
+            return dict(self.buckets), self.count, self.sum, self.min, self.max
 
     def fraction_below(self, threshold: float) -> float:
         """Fraction of observations whose bucket lies entirely at or
@@ -109,33 +118,48 @@ class Histogram:
                 for idx, c in sorted(self.buckets.items())
             ]
 
-    def percentile(self, q: float) -> float:
-        """The q-th percentile (q in [0, 100]); 0.0 when empty."""
-        if self.count == 0:
+    @staticmethod
+    def _percentile_of(buckets, count, vmin, vmax, q: float) -> float:
+        if count == 0:
             return 0.0
-        rank = q / 100.0 * self.count
+        rank = q / 100.0 * count
         seen = 0
-        for idx in sorted(self.buckets):
-            seen += self.buckets[idx]
+        for idx in sorted(buckets):
+            seen += buckets[idx]
             if seen >= rank:
                 if idx == 0:
-                    return min(_VMIN, self.max)
+                    return min(_VMIN, vmax)
                 # bucket upper edge, clamped to observed extrema
                 upper = _VMIN * _FACTOR ** idx
-                return max(self.min, min(upper, self.max))
-        return self.max
+                return max(vmin, min(upper, vmax))
+        return vmax
+
+    def percentile(self, q: float) -> float:
+        """The q-th percentile (q in [0, 100]); 0.0 when empty."""
+        buckets, count, _, vmin, vmax = self._state()
+        return self._percentile_of(buckets, count, vmin, vmax, q)
 
     def percentiles(self, qs=(50, 95, 99)) -> dict[str, float]:
-        return {f"p{q:g}": self.percentile(q) for q in qs}
+        # one snapshot for the whole readout — p50/p95/p99 must agree on
+        # the sample set even while records land concurrently
+        buckets, count, _, vmin, vmax = self._state()
+        return {
+            f"p{q:g}": self._percentile_of(buckets, count, vmin, vmax, q)
+            for q in qs
+        }
 
     def summary(self) -> dict:
+        buckets, count, total, vmin, vmax = self._state()
         return {
-            "count": self.count,
-            "sum": self.sum,
-            "min": 0.0 if self.count == 0 else self.min,
-            "max": self.max,
-            "underflow": self.underflow,
-            **self.percentiles(),
+            "count": count,
+            "sum": total,
+            "min": 0.0 if count == 0 else vmin,
+            "max": vmax,
+            "underflow": buckets.get(0, 0),
+            **{
+                f"p{q:g}": self._percentile_of(buckets, count, vmin, vmax, q)
+                for q in (50, 95, 99)
+            },
         }
 
 
@@ -298,8 +322,9 @@ class StatsBase(ScheduleCensus):
     latency_percentiles: dict = field(default_factory=dict)
 
     def __post_init__(self):
-        # object.__setattr__-free: plain attr, excluded from asdict/fields
+        # object.__setattr__-free: plain attrs, excluded from asdict/fields
         self._registry = Registry()
+        self._obs_lock = threading.Lock()
 
     @property
     def registry(self) -> Registry:
@@ -308,17 +333,28 @@ class StatsBase(ScheduleCensus):
             reg = self._registry = Registry()
         return reg
 
+    def _latency_lock(self) -> threading.Lock:
+        lock = getattr(self, "_obs_lock", None)
+        if lock is None:  # same skipped-__post_init__ paths as registry
+            lock = self._obs_lock = threading.Lock()
+        return lock
+
     def observe_latency(self, kind: str, seconds: float) -> None:
         """Record one latency sample and refresh the percentile view.
 
         ``latency_percentiles[kind]`` is a real dict field so it rides
-        ``dataclasses.asdict`` into every stats JSON for free.
+        ``dataclasses.asdict`` into every stats JSON for free.  The view
+        is replaced copy-on-write under ``_obs_lock``: dispatcher threads
+        observe while exporters ``asdict``-iterate the field, and an
+        in-place mutation would change the dict under the iterator.
         """
         h = self.registry.histogram("latency_s", kind=kind)
         h.record(seconds)
-        self.latency_percentiles[kind] = {
-            k: round(v, 9) for k, v in h.percentiles().items()
-        }
+        view = {k: round(v, 9) for k, v in h.percentiles().items()}
+        with self._latency_lock():
+            fresh = dict(self.latency_percentiles)
+            fresh[kind] = view
+            self.latency_percentiles = fresh
 
     def publish(self) -> dict:
         """Export scalar dataclass fields + histograms as one flat dict."""

@@ -28,6 +28,7 @@ micro-batch resolves allgather-vs-rsag from its padded slot count
 from __future__ import annotations
 
 import dataclasses
+import threading
 import time
 
 import jax
@@ -78,9 +79,20 @@ class QueryConfig:
 
 
 class QueryEngine:
-    def __init__(self, store: ConceptStore, cfg: QueryConfig | None = None):
+    def __init__(
+        self,
+        store: ConceptStore,
+        cfg: QueryConfig | None = None,
+        *,
+        clock=time.perf_counter,
+    ):
         self.store = store
         self.cfg = cfg or QueryConfig()
+        # Injectable clock for the per-micro-batch service timings: the
+        # admission queue and load generator run under virtual clocks in
+        # tests, and the engine's latency histograms must tick on the
+        # same timebase (repro.analysis lints wall-clock reads here).
+        self.clock = clock
         if self.cfg.backend not in BACKENDS:
             raise ValueError(
                 f"unknown backend {self.cfg.backend!r}; choose {BACKENDS}"
@@ -93,7 +105,11 @@ class QueryEngine:
             hop_calibrated=self.plan.hop_calibrated,
         )
         self._mask = bitset.attr_mask(self.n_attrs, self.W)
-        # jit caches — keyed by everything static to the compiled step
+        # jit caches — keyed by everything static to the compiled step.
+        # Guarded by ``_steps_lock``: the admission dispatcher thread and
+        # the main thread can both miss a cold key, and an unguarded
+        # check-then-set would trace and compile the same step twice.
+        self._steps_lock = threading.Lock()
         self._closure_steps: dict = {}  # (impl, probe) -> step
         self._topk_steps: dict = {}  # (impl, k) -> step
         self._rules_steps: dict = {}  # k -> step (metric is an operand)
@@ -131,8 +147,13 @@ class QueryEngine:
         return body
 
     def _closure_step(self, impl: str, probe: int):
-        step = self._closure_steps.get((impl, probe))
-        if step is None:
+        step = self._closure_steps.get((impl, probe))  # lock: ok — racy fast path, re-checked under lock
+        if step is not None:
+            return step
+        with self._steps_lock:
+            step = self._closure_steps.get((impl, probe))
+            if step is not None:
+                return step
             n_attrs = self.n_attrs
 
             def post(gc, gs, intents, skeys, n_concepts):
@@ -151,8 +172,13 @@ class QueryEngine:
         return step
 
     def _topk_step(self, impl: str, k: int):
-        step = self._topk_steps.get((impl, k))
-        if step is None:
+        step = self._topk_steps.get((impl, k))  # lock: ok — racy fast path, re-checked under lock
+        if step is not None:
+            return step
+        with self._steps_lock:
+            step = self._topk_steps.get((impl, k))
+            if step is not None:
+                return step
             cfg = self.cfg
 
             def post(gc, gs, intents, supports, n_concepts):
@@ -208,7 +234,12 @@ class QueryEngine:
         return step
 
     def _extents_step(self):
-        if self._extent_step is None:
+        step = self._extent_step  # lock: ok — racy fast path, re-checked under lock
+        if step is not None:
+            return step
+        with self._steps_lock:
+            if self._extent_step is not None:
+                return self._extent_step
             axes = self.plan.reduce_axes
 
             def body(ext_local, ids):
@@ -225,10 +256,10 @@ class QueryEngine:
                     )
                 return pack_bool_jnp(bits.T.astype(bool))  # [B, Wo]
 
-            self._extent_step = jax.jit(
+            step = self._extent_step = jax.jit(
                 self.plan.spmd(body, n_rep=1, post=post)
             )
-        return self._extent_step
+        return step
 
     # -- micro-batch plumbing ----------------------------------------------
 
@@ -289,7 +320,7 @@ class QueryEngine:
             return out_c, out_s, out_i
         batches = 0
         for lo, b, chunk in self._chunks(attrsets):
-            t0 = time.perf_counter()
+            t0 = self.clock()
             with obs.current().span(
                 "query/micro_batch", kind="closure", slots=chunk.shape[0]
             ):
@@ -301,7 +332,7 @@ class QueryEngine:
                 out_c[lo : lo + b] = np.asarray(gc)[:b]
                 out_s[lo : lo + b] = np.asarray(gs)[:b]
                 out_i[lo : lo + b] = np.asarray(ids)[:b]
-            self._obs_batch("closure", time.perf_counter() - t0, snap.version)
+            self._obs_batch("closure", self.clock() - t0, snap.version)
             batches += 1
         self.stats.charge("closure", B, batches)
         return out_c, out_s, out_i
@@ -322,7 +353,7 @@ class QueryEngine:
             return out_i, out_v
         batches = 0
         for lo, b, chunk in self._chunks(attrsets):
-            t0 = time.perf_counter()
+            t0 = self.clock()
             with obs.current().span(
                 "query/micro_batch", kind="topk", slots=chunk.shape[0]
             ):
@@ -333,7 +364,7 @@ class QueryEngine:
                 )
                 out_i[lo : lo + b] = np.asarray(idx)[:b]
                 out_v[lo : lo + b] = np.asarray(vals)[:b]
-            self._obs_batch("topk", time.perf_counter() - t0, snap.version)
+            self._obs_batch("topk", self.clock() - t0, snap.version)
             batches += 1
         self.stats.charge("topk", B, batches)
         return out_i, out_v
@@ -350,7 +381,7 @@ class QueryEngine:
             return out
         batches = 0
         for lo, b, chunk in self._chunks(intents):
-            t0 = time.perf_counter()
+            t0 = self.clock()
             with obs.current().span(
                 "query/micro_batch", kind="lookup", slots=chunk.shape[0]
             ):
@@ -360,7 +391,7 @@ class QueryEngine:
                     n_attrs=self.n_attrs, probe=snap.probe,
                 )
                 out[lo : lo + b] = np.asarray(ids)[:b]
-            self._obs_batch("lookup", time.perf_counter() - t0, snap.version)
+            self._obs_batch("lookup", self.clock() - t0, snap.version)
             batches += 1
         self.stats.charge("lookup", B, batches)
         return out
@@ -418,13 +449,13 @@ class QueryEngine:
         step = self._extents_step()
         batches = 0
         for lo, b, chunk in self._chunks(np.clip(ids, 0, snap.cap - 1)):
-            t0 = time.perf_counter()
+            t0 = self.clock()
             with obs.current().span(
                 "query/micro_batch", kind="extents", slots=chunk.shape[0]
             ):
                 packed = step(snap.ext_cols, jnp.asarray(chunk))
                 out[lo : lo + b] = np.asarray(packed)[:b]
-            self._obs_batch("extents", time.perf_counter() - t0, snap.version)
+            self._obs_batch("extents", self.clock() - t0, snap.version)
             batches += 1
             self.stats.collective_rounds += 1
             # the round's all-gather moves each shard's [Nl, B] membership
@@ -433,8 +464,16 @@ class QueryEngine:
             if self.plan.n_parts > 1:
                 self.stats.record_reduce("allgather")
                 n_local = st.N_padded // self.plan.n_parts
+                # k·(k-1) rings × each shard's [Nl, B] words — the same
+                # whole-collective convention modeled_comm_bytes uses for
+                # the closure rounds (and the one repro.analysis audits);
+                # the old (k-1)·Nl·B charge under-counted by ×k
                 self.stats.modeled_comm_bytes += (
-                    (self.plan.n_parts - 1) * n_local * chunk.shape[0] * 4
+                    self.plan.n_parts
+                    * (self.plan.n_parts - 1)
+                    * n_local
+                    * chunk.shape[0]
+                    * 4
                 )
         # misses / out-of-snapshot ids get the empty extent, mirroring
         # _order_query's empty result (never another concept's objects)
@@ -449,8 +488,13 @@ class QueryEngine:
     def _rules_step(self, k: int):
         # keyed by k alone: the rank metric arrives as a runtime operand,
         # so confidence- and lift-ranked queries share one compiled step
-        step = self._rules_steps.get(k)
-        if step is None:
+        step = self._rules_steps.get(k)  # lock: ok — racy fast path, re-checked under lock
+        if step is not None:
+            return step
+        with self._steps_lock:
+            step = self._rules_steps.get(k)
+            if step is not None:
+                return step
             cfg = self.cfg
 
             def run(prem, added, conf, metric, rid, n_rules, queries, min_conf):
@@ -551,7 +595,7 @@ class QueryEngine:
         step = self._rules_step(k)
         batches = 0
         for lo, b, chunk in self._chunks(attrsets):
-            t0 = time.perf_counter()
+            t0 = self.clock()
             with obs.current().span(
                 "query/micro_batch", kind="rules", slots=chunk.shape[0]
             ):
@@ -563,7 +607,7 @@ class QueryEngine:
                 out_i[lo : lo + b] = np.asarray(idx)[:b]
                 out_s[lo : lo + b] = np.asarray(vals)[:b]
                 out_c[lo : lo + b] = np.asarray(union)[:b]
-            self._obs_batch("rules", time.perf_counter() - t0)
+            self._obs_batch("rules", self.clock() - t0)
             batches += 1
         self.stats.charge("rules", B, batches)
         return out_i, out_s, out_c

@@ -1,0 +1,4 @@
+# Fixture corpus for tests/test_analysis.py.  These files are analyzed
+# by *path* (ast.parse) and must never be imported: the *_bad.py members
+# deliberately contain every defect the repro.analysis rules exist to
+# catch, each paired with a clean twin that must stay silent.

@@ -1,0 +1,45 @@
+"""Known-bad linter fixture — every lint rule must trip in this file.
+
+Analyzed by path only (never imported).  The self-test in
+``tests/test_analysis.py`` injects this file into the linter's async and
+clock scopes and asserts one finding per seeded defect, so a rule that
+silently stops firing fails the suite.
+"""
+
+import time
+
+import numpy as np
+
+import jax
+
+
+def rounds_async(frontier, xs):
+    out = []
+    for x in xs:
+        host = np.asarray(x)  # host-sync: d2h inside the async round loop
+        x.block_until_ready()  # host-sync: attribute form
+        out.append(jax.device_get(host))  # host-sync: call form
+    return out
+
+
+def dispatch(t0):
+    return time.monotonic() - t0  # wall-clock read in clock-injected code
+
+
+def accumulate(x, acc=[]):  # mutable-default shared across calls
+    acc.append(x)
+    return acc
+
+
+def compile_per_item(fns, xs):
+    out = []
+    for fn, x in zip(fns, xs):
+        out.append(jax.jit(fn)(x))  # jit-in-loop: recompiles every pass
+    return out
+
+
+def swallow(fn):
+    try:
+        return fn()
+    except:  # bare-except: eats KeyboardInterrupt and device failures
+        return None

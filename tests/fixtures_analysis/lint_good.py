@@ -1,0 +1,48 @@
+"""Clean twin of ``lint_bad.py`` — every lint rule must stay silent.
+
+Each function is the disciplined version of its bad counterpart: the
+annotated sync marker, the injected clock, the None-default idiom, the
+hoisted jit, and the typed except.  Analyzed by path only.
+"""
+
+import time
+
+import numpy as np
+
+import jax
+
+
+def rounds_async(frontier, xs):
+    out = []
+    for x in xs:
+        out.append(np.asarray(x))  # sync: ok — test fixture reconcile point
+    return out
+
+
+def reconcile_results(xs):
+    # host syncs OUTSIDE the async scopes are ordinary and legal
+    return [np.asarray(x) for x in xs]
+
+
+def dispatch(t0, clock=time.monotonic):
+    # the bare attribute default IS the injection mechanism — only direct
+    # time.*() calls are wall-clock reads
+    return clock() - t0
+
+
+def accumulate(x, acc=None):
+    acc = [] if acc is None else acc
+    acc.append(x)
+    return acc
+
+
+def compile_once(fn, xs):
+    step = jax.jit(fn)
+    return [step(x) for x in xs]
+
+
+def swallow(fn):
+    try:
+        return fn()
+    except Exception:
+        return None

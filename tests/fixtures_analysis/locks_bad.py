@@ -1,0 +1,24 @@
+"""Known-bad lock-discipline fixture — the checker must flag BadQueue.
+
+``_items`` is guarded in ``push`` (so the class declares it racy) but
+``drain`` reads and mutates it bare from a public entry point: exactly
+the defect class the ``unguarded-access`` rule exists for.  Analyzed by
+path only (never imported).
+"""
+
+import threading
+
+
+class BadQueue:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._items = []
+
+    def push(self, x):
+        with self._lock:
+            self._items.append(x)
+
+    def drain(self):
+        out = list(self._items)  # unguarded read of a guarded field
+        self._items.clear()  # unguarded mutation of a guarded field
+        return out

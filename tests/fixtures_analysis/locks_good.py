@@ -1,0 +1,35 @@
+"""Clean twin of ``locks_bad.py`` — the checker must stay silent.
+
+Exercises every legitimate escape hatch: full locking in ``drain``, the
+``# lock: ok`` annotation for a benign GIL-atomic racy read, and the
+assumed-locked fixpoint for a private helper whose only call sites hold
+the lock.  Analyzed by path only.
+"""
+
+import threading
+
+
+class GoodQueue:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._items = []
+        self._hwm = 0
+
+    def push(self, x):
+        with self._lock:
+            self._items.append(x)
+            self._track()
+
+    def drain(self):
+        with self._lock:
+            out = list(self._items)
+            self._items.clear()
+        return out
+
+    def depth_fast(self):
+        return len(self._items)  # lock: ok — racy read, re-checked by callers
+
+    def _track(self):
+        # every call site holds the lock: the fixpoint analyzes this body
+        # as lock-held
+        self._hwm = max(self._hwm, len(self._items))

@@ -348,10 +348,12 @@ def test_extents_allgather_is_charged(served):
     qe.stats = st
     ids = np.arange(5, dtype=np.int32)
     qe.extents_batch(ids)
-    # one micro-batch (5 ≤ 8 slots): [Nl, slots] uint32 membership words
-    # to each of the other (n_parts - 1) peers
-    n_local = store.state.N_padded // qe.plan.n_parts
-    expect = (qe.plan.n_parts - 1) * n_local * qe.cfg.slots * 4
+    # one micro-batch (5 ≤ 8 slots): each of the k shards sends its
+    # [Nl, slots] uint32 membership words to the other (k - 1) peers —
+    # the whole-collective k·(k-1) convention modeled_comm_bytes uses
+    k = qe.plan.n_parts
+    n_local = store.state.N_padded // k
+    expect = k * (k - 1) * n_local * qe.cfg.slots * 4
     assert st.modeled_comm_bytes == expect
     assert st.reduce_rounds == {"allgather": 1}
     assert st.collective_rounds == 1
